@@ -1,0 +1,41 @@
+"""Paper Table 4: the center ablation — no-center vs Avg vs Git vs WB.
+
+Reported as approximation error (the paper reports downstream accuracy; the
+downstream analog lives in downstream_eval.py)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import run_baseline
+from repro.core.compress import compress_bank, design_matrices
+
+from .common import trained_like_bank
+
+
+def run(keep_ratio: float = 0.25, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    bank = trained_like_bank(rng, n_experts=8, d=64, f=224, glu=True)
+    design = design_matrices(bank)
+    rows = []
+    for label, fn in [
+        ("UP(no center)", lambda: run_baseline("up", design, keep_ratio)),
+        ("Avg+UP", lambda: compress_bank(bank, "up", keep_ratio, center="avg")),
+        ("Git+UP", lambda: compress_bank(bank, "up", keep_ratio, center="git")),
+        ("WB+UP", lambda: compress_bank(bank, "up", keep_ratio, center="wb")),
+        ("SVD(no center)", lambda: run_baseline("svd", design, keep_ratio)),
+        ("WB+SVD", lambda: compress_bank(bank, "svd", keep_ratio, center="wb")),
+    ]:
+        t0 = time.perf_counter()
+        res = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"T4/{label}", round(us, 1),
+                     round(res.approximation_error(design), 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

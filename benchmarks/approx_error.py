@@ -1,0 +1,51 @@
+"""Paper Table 1: approximation error across compression methods.
+
+Scaled-down geometry of the paper's two settings:
+  * switch-like:  relu non-GLU experts  (p_I = 4p)
+  * mixtral-like: SwiGLU experts        (p_I = 3.5p)
+
+Error metric is exactly §5.2: mean_k ||T_k W_k - \\hat W_k||_F^2 / p_I.
+The expected ordering (paper): ResMoE(UP) < UP < ... and ResMoE(SVD) < SVD.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import run_baseline
+from repro.core.compress import compress_bank, design_matrices
+
+from .common import trained_like_bank
+
+
+def run(keep_ratio: float = 0.25, seed: int = 0, verbose: bool = True):
+    rng = np.random.default_rng(seed)
+    settings = {
+        "switch-like": dict(n_experts=8, d=32, f=128, glu=False),
+        "mixtral-like": dict(n_experts=8, d=64, f=224, glu=True),
+    }
+    rows = []
+    for name, kw in settings.items():
+        bank = trained_like_bank(rng, **kw)
+        design = design_matrices(bank)
+        for meth in ("up", "wanda", "sp", "svd", "msmoe", "git", "meo",
+                     "mlp_fusion"):
+            t0 = time.perf_counter()
+            res = run_baseline(meth, design, keep_ratio)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"T1/{name}/{res.name}", round(us, 1),
+                         round(res.approximation_error(design), 4)))
+        for meth in ("up", "svd", "block"):
+            t0 = time.perf_counter()
+            comp = compress_bank(bank, method=meth, keep_ratio=keep_ratio)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"T1/{name}/ResMoE({meth.upper()})", round(us, 1),
+                         round(comp.approximation_error(design), 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

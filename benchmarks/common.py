@@ -1,0 +1,51 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+
+def timer(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def trained_like_bank(rng, n_experts: int, d: int, f: int, glu: bool = True,
+                      share: float = 1.0, distinct: float = 0.45,
+                      noise: float = 0.15) -> Dict[str, np.ndarray]:
+    """Synthetic bank mimicking trained MoE experts.
+
+    Trained experts (esp. Mixtral's, initialized by upcycling a dense model)
+    share a strong common component; each adds expert-specific structure.
+    Rows are shuffled per expert so the alignment problem is non-trivial.
+    """
+    dd = (3 if glu else 2) * d
+    base = rng.normal(size=(f, dd)) * share
+    bank = {"w1": [], "w2": []}
+    if glu:
+        bank["w3"] = []
+    for _ in range(n_experts):
+        own = distinct * rng.normal(size=(f, dd))
+        design = (base + own + noise * rng.normal(size=(f, dd)))[rng.permutation(f)]
+        bank["w1"].append(design[:, :d].T)
+        if glu:
+            bank["w3"].append(design[:, d : 2 * d].T)
+            bank["w2"].append(design[:, 2 * d :])
+        else:
+            bank["w2"].append(design[:, d:])
+    return {k: np.stack(v).astype(np.float32) for k, v in bank.items()}
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,87 @@
+"""Beyond-paper study: ResMoE with scope="cross_layer" on DENSE models.
+
+The published method needs an expert *population*; dense models have one
+FFN per layer. The extension treats the L per-layer FFNs as the population:
+barycenter across layers, residual per layer. This is the natural port of
+ResMoE to 8/10 assigned architectures (DESIGN.md §7).
+
+Protocol: train a reduced dense LM, compress {all layer FFNs} with
+(a) cross-layer ResMoE(UP), (b) direct per-layer UP at the same budget,
+evaluate zero-shot NLL. Storage accounting includes the shared center.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core.baselines import run_baseline
+from repro.core.compress import compress_bank, design_matrices, restored_bank
+from repro.data import make_pipeline
+from repro.launch.train import run_training
+from repro.models import build_model
+
+
+def _eval_nll(model, params, pipe, steps=3):
+    fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
+    tot = 0.0
+    for i in range(7000, 7000 + steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+        logits = fwd(params, batch).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None], -1)[..., 0]
+        tot += float((lse - gold).mean())
+    return tot / steps
+
+
+def run(steps: int = 120, keep: float = 0.5, seed: int = 0):
+    out = run_training("granite-8b", steps=steps, seq_len=64, global_batch=4,
+                       lr=3e-3, seed=seed, log_every=60)
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params = out["params"]
+    pipe = make_pipeline(cfg, 64, 4, seed=seed)
+    rows = []
+    base_nll = _eval_nll(model, params, pipe)
+    rows.append(("XL/dense", 0, f"nll={base_nll:.4f}"))
+
+    # the layer-FFN "bank": stacked dense FFNs [L, d, ff]
+    p = jax.tree_util.tree_map(lambda x: np.array(x, copy=True), params)
+    ffn = p["segments"][0]["slots"][0]["ffn"]
+    bank = {k: np.asarray(v) for k, v in ffn.items()}  # w1/w3: [L,d,f], w2: [L,f,d]
+    design = design_matrices(bank)
+    dense_params = sum(v.size for v in bank.values())
+
+    # (a) cross-layer ResMoE(UP)
+    comp = compress_bank(bank, method="up", keep_ratio=keep)
+    rb = restored_bank(comp, {k: v[0] for k, v in bank.items()})
+    pa = jax.tree_util.tree_map(lambda x: np.array(x, copy=True), params)
+    for k in ("w1", "w2", "w3"):
+        pa["segments"][0]["slots"][0]["ffn"][k] = rb[k].astype(np.float32)
+    nll_a = _eval_nll(model, pa, pipe)
+    stored = comp.num_params()
+    rows.append((f"XL/ResMoE-crosslayer(UP)@{keep}", 0,
+                 f"nll={nll_a:.4f};params={stored/dense_params:.2f}x"))
+
+    # (b) direct per-layer UP at matched TOTAL budget (center amortized)
+    match_ratio = min(1.0, stored / dense_params)
+    direct = run_baseline("up", design, match_ratio)
+    pb = jax.tree_util.tree_map(lambda x: np.array(x, copy=True), params)
+    from repro.core.compress import split_design
+
+    for li in range(design.shape[0]):
+        w = split_design(direct.approx[li], {k: v[0] for k, v in bank.items()})
+        for k in w:
+            pb["segments"][0]["slots"][0]["ffn"][k][li] = w[k]
+    nll_b = _eval_nll(model, pb, pipe)
+    rows.append((f"XL/direct-UP@{match_ratio:.2f}", 0, f"nll={nll_b:.4f}"))
+    rows.append(("XL/advantage", 0,
+                 f"resmoe_delta={nll_a-base_nll:+.4f};direct_delta={nll_b-base_nll:+.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

@@ -1,0 +1,43 @@
+"""Paper Table 12: analytic FLOPs per token for the expert path.
+
+Adds what the paper does NOT have: the restore-free fused path (x@Wc +
+(x@V^T)@U^T) and the shared-base variant, which make ResMoE-SVD *cheaper*
+than the dense model instead of more expensive (DESIGN.md §4.3)."""
+from __future__ import annotations
+
+from repro.core.residual import svd_rank_for_ratio
+
+
+def expert_flops(d: int, f: int, n_mats: int = 3) -> float:
+    return 2.0 * n_mats * d * f  # per token per expert
+
+
+def run():
+    rows = []
+    for name, (d, f, k, e) in {
+        "mixtral": (4096, 14336, 2, 8),
+        "deepseek-v3": (7168, 2048, 8, 256),
+    }.items():
+        base = k * expert_flops(d, f)
+        r = svd_rank_for_ratio(f, 3 * d, 0.25)
+        lowrank = 2.0 * r * (3 * d + f)  # per token per expert (u/v products)
+        rows.append((f"T12/{name}/dense", 0, f"{base:.3e}"))
+        rows.append((f"T12/{name}/ResMoE(UP,restored)", 0, f"{base:.3e}"))
+        # paper's SVD: center + per-expert low-rank RESTORE then dense matmul
+        restore = k * (expert_flops(d, f) + 0)  # restored weights, same matmul
+        rows.append((f"T12/{name}/ResMoE(SVD,restored)", 0, f"{restore:.3e}"))
+        # ours: fused, never restores
+        fused = k * (expert_flops(d, f) + lowrank)
+        rows.append((f"T12/{name}/ResMoE(SVD,fused)", 0, f"{fused:.3e}"))
+        # ours: shared-base — w1/w3 center matmuls once per token, not per k
+        shared = (2 * 2.0 * d * f) + k * (2.0 * d * f + lowrank)
+        rows.append((f"T12/{name}/ResMoE(SVD,fused_shared)", 0, f"{shared:.3e}"))
+        rows.append((f"T12/{name}/fused_shared_vs_dense", 0,
+                     round(shared / base, 3)))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

@@ -1,0 +1,3 @@
+from .analyze import analyze_record, load_all, markdown_table, model_flops
+
+__all__ = ["analyze_record", "load_all", "markdown_table", "model_flops"]

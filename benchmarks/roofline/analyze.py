@@ -1,0 +1,172 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+For each (arch, shape, mesh) JSON produced by repro.launch.dryrun:
+
+  compute_term   = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory_term    = HLO_bytes_per_device / HBM_BW
+  collective_term= collective_bytes_per_device / ICI_BW
+
+(The compiled module is the per-device SPMD program, so all three numbers
+are per-chip; dividing by per-chip peaks gives seconds directly —
+equivalent to the global form chips x peak.)
+
+MODEL_FLOPS uses the 6·N·D (train) / 2·N·D (inference) convention with
+N = active params, D = tokens, PLUS the quadratic attention term — and is
+reported per device.  ratio = MODEL_FLOPS / HLO_FLOPs flags remat/dispatch
+waste (>1 means the compiler-counted FLOPs UNDERCOUNT, e.g. nested-loop
+bodies counted once — see the caveat column).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from .hw import HBM_BW, HBM_BYTES, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+
+def _attention_flops(cfg, shape) -> float:
+    """Global attention-score/value FLOPs for the step (fwd; x3 for train).
+
+    Per layer: 4 * B * H * head_dim * sum_q kv(q), with kv(q) = min(q, w)
+    under a causal window w.  Recurrent/rwkv mixers contribute ~O(d*64) per
+    token — folded into the matmul term via num_active_params.
+    """
+    import repro.models.transformer as tfm
+
+    specs = tfm.layer_specs(cfg)
+    tot = 0.0
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.v_head_dim if cfg.attention_type == "mla" else cfg.head_dim
+    for spec in specs:
+        if spec.mixer not in ("gqa", "mla"):
+            continue
+        w = spec.window if spec.window < (1 << 29) else s
+        w = min(w, s)
+        if shape.kind == "decode":
+            kv_sum = w  # one query against the (windowed) cache
+        else:
+            # sum over q in [0, s) of min(q, w)
+            kv_sum = w * s - w * w / 2 if w < s else s * s / 2
+        tot += 4.0 * b * cfg.num_heads * hd * kv_sum
+    return tot
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS for the whole step (global, all chips)."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        mm = 6.0 * n_active * tokens
+        att = 3.0 * _attention_flops(cfg, shape)
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        mm = 2.0 * n_active * tokens
+        att = _attention_flops(cfg, shape)
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mm = 2.0 * n_active * tokens
+        att = _attention_flops(cfg, shape)
+    return mm + att
+
+
+def analyze_record(rec: Dict, chips: int = 256) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    hc = rec.get("hlo_cost")
+    if hc and hc.get("flops", 0) > 0:
+        # trip-count-aware numbers (see repro.launch.hlo_cost — XLA's own
+        # cost_analysis counts loop bodies once)
+        flops = float(hc["flops"])
+        byts = float(hc["bytes"])
+        coll = float(hc["coll_total"])
+    else:
+        ca = rec.get("cost_analysis", {})
+        flops = float(ca.get("flops", 0.0))
+        byts = float(ca.get("bytes accessed", 0.0))
+        coll = float(rec.get("collectives", {}).get("total_bytes", 0.0))
+    compute_t = flops / PEAK_FLOPS_BF16
+    memory_t = byts / HBM_BW
+    collective_t = coll / ICI_BW_PER_LINK
+    terms = {"compute": compute_t, "memory": memory_t, "collective": collective_t}
+    dominant = max(terms, key=terms.get)
+    mf_global = model_flops(rec["arch"], rec["shape"])
+    mesh_chips = 512 if rec["mesh"] == "2x16x16" else 256
+    mf_dev = mf_global / mesh_chips
+    mem = rec.get("memory_analysis", {})
+    resident = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0))
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+        "dominant": dominant,
+        "bound_s": max(terms.values()),
+        "model_flops_dev": mf_dev,
+        "hlo_flops_dev": flops,
+        "useful_ratio": (mf_dev / flops) if flops else float("nan"),
+        "roofline_frac": (mf_dev / PEAK_FLOPS_BF16) / max(terms.values())
+        if max(terms.values()) > 0 else float("nan"),
+        "hbm_resident_gb": resident / 2**30,
+        "fits_hbm": resident <= HBM_BYTES,
+        "collective_detail": {
+            k[5:]: v for k, v in (hc or {}).items()
+            if k.startswith("coll_") and k != "coll_total" and v
+        } or rec.get("collectives", {}).get("bytes", {}),
+    }
+
+
+def load_all(result_dir: str = "dryrun_results") -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        rec = json.load(open(f))
+        a = analyze_record(rec)
+        if a is not None:
+            out.append(a)
+    return out
+
+
+def markdown_table(rows: List[Dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "model/HLO flops | roofline frac | HBM GB | fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{r['hbm_resident_gb']:.1f} | {'y' if r['fits_hbm'] else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    rows = load_all()
+    out = []
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        out.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            0,
+            f"dom={r['dominant']};bound_s={r['bound_s']:.3e};"
+            f"frac={r['roofline_frac']:.3f}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    print(markdown_table(rows))

@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants for the roofline analysis (per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW_PER_LINK = 50e9  # B/s per link
+HBM_BYTES = 16 * 2**30  # capacity, for fits-on-chip checks

@@ -1,0 +1,67 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator.
+
+Tables map 1:1 to the paper (see DESIGN.md §8):
+  approx_error     -> Table 1      ablation_center -> Table 4
+  downstream_eval  -> Tables 2/3/7 rate_sweep      -> Figure 4
+  memory           -> Table 10     runtime         -> Table 11
+  flops_table      -> Table 12     roofline        -> EXPERIMENTS.md §Roofline
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only t1,t4,...] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: t1,t3,t4,f4,t10,t11,t12,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the training-backed downstream eval")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from . import (ablation_center, approx_error, flops_table, memory,
+                   rate_sweep, runtime)
+    from .roofline import analyze
+
+    suites = [
+        ("t1", approx_error.run),
+        ("t4", ablation_center.run),
+        ("f4", rate_sweep.run),
+        ("t10", memory.run),
+        ("t11", runtime.run),
+        ("t12", flops_table.run),
+        ("roofline", analyze.run),
+    ]
+    if not args.fast:
+        from . import cross_layer, downstream_eval
+
+        suites.insert(1, ("t3", downstream_eval.run))
+        suites.append(("xl", cross_layer.run))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, fn in suites:
+        if want and key not in want:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row))
+            print(f"# suite {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# suite {key} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Table 11: runtime of the forward paths (CPU wall-clock proxy).
+
+The paper reports Mixtral end-to-end runtime per method on A100s; here we
+time our reduced-config MoE forward under each expert path plus the Pallas
+kernels (interpret mode — correctness-representative, not TPU-timed)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.models import build_model, compress_model_params
+
+from .common import timer
+
+
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=0.25))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)),
+                                   jnp.int32)}
+    rows = []
+
+    def bench(name, p, mode):
+        fwd = jax.jit(lambda pp, b: model.forward(pp, b, apply_mode=mode)[0])
+        fwd(p, batch).block_until_ready()
+        us = timer(lambda: fwd(p, batch).block_until_ready(), repeats=5)
+        rows.append((f"T11/forward/{name}", round(us, 1), ""))
+
+    bench("dense", params, None)
+    bench("ResMoE(restored)", cp, "restored")
+    bench("ResMoE(fused)", cp, "fused")
+    bench("ResMoE(fused_shared)", cp, "fused_shared")
+
+    # kernel microbench (interpret mode)
+    from repro.kernels import lowrank_restore_matmul
+
+    x = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 512)), jnp.float32)
+    us = timer(lambda: lowrank_restore_matmul(x, w, a, b,
+                                              interpret=True).block_until_ready(),
+               repeats=3)
+    rows.append(("T11/kernel/lowrank_interpret", round(us, 1), ""))
+    ref = jax.jit(lambda: (x @ w + (x @ a) @ b))
+    ref().block_until_ready()
+    us = timer(lambda: ref().block_until_ready(), repeats=5)
+    rows.append(("T11/kernel/lowrank_xla", round(us, 1), ""))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

@@ -1,0 +1,105 @@
+"""Perf-iteration harness: lower one cell with variations, print roofline terms.
+
+Used for the hypothesis -> change -> measure -> validate loop (§Perf).
+
+    PYTHONPATH=src python scripts/perf_iter.py --arch llama3-405b \
+        --shape train_4k [--microbatches 8] [--override seq=model] \
+        [--apply-mode fused_shared] [--tag baseline]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--apply-mode", default=None)
+    ap.add_argument("--compressed", action="store_true",
+                    help="lower with the ResMoE-SVD compressed store")
+    ap.add_argument("--override", action="append", default=[],
+                    help="logical=meshaxis (e.g. cache_seq=model, heads=)")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--out", default="perf_iters")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.hlo_cost import analyze_hlo_text
+    from repro.launch.mesh import make_production_mesh
+    from benchmarks.roofline.analyze import model_flops
+    from benchmarks.roofline.hw import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+    overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        overrides[k] = (None if v in ("", "none", "None") else
+                        tuple(v.split("+")) if "+" in v else v)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    t0 = time.time()
+    lowered, meta = lower_cell(
+        args.arch, args.shape, mesh,
+        microbatches=args.microbatches,
+        sharding_overrides=overrides or None,
+        apply_mode=args.apply_mode,
+        compressed=args.compressed,
+    )
+    compiled = lowered.compile()
+    t1 = time.time()
+    cost = analyze_hlo_text(compiled.as_text())
+    try:
+        mem = compiled.memory_analysis()
+        temp = int(mem.temp_size_in_bytes)
+        arg = int(mem.argument_size_in_bytes)
+    except Exception:
+        temp = arg = 0
+
+    chips = 512 if args.multi_pod else 256
+    mf = model_flops(args.arch, args.shape) / chips
+    terms = {
+        "compute_s": cost["flops"] / PEAK_FLOPS_BF16,
+        "memory_s": cost["bytes"] / HBM_BW,
+        "collective_s": cost["coll_total"] / ICI_BW_PER_LINK,
+    }
+    dominant = max(terms, key=terms.get)
+    rec = {
+        "tag": args.tag, "arch": args.arch, "shape": args.shape,
+        "meta": meta, "overrides": overrides,
+        "flops_dev": cost["flops"], "bytes_dev": cost["bytes"],
+        "coll_dev": cost["coll_total"],
+        "coll_detail": {k: v for k, v in cost.items()
+                        if k.startswith("coll_") and v and k != "coll_total"},
+        **terms,
+        "dominant": dominant,
+        "model_flops_dev": mf,
+        "useful_ratio": mf / cost["flops"] if cost["flops"] else None,
+        "roofline_frac": (mf / PEAK_FLOPS_BF16) / max(terms.values()),
+        "hbm_temp_gb": temp / 2**30,
+        "hbm_args_gb": arg / 2**30,
+        "compile_s": round(t1 - t0, 1),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    fname = f"{args.arch}__{args.shape}__{args.tag}.json"
+    with open(os.path.join(args.out, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps({k: (round(v, 6) if isinstance(v, float) else v)
+                      for k, v in rec.items() if k != "coll_detail"}, indent=1))
+    print("coll_detail:", {k: f"{v:.3e}" for k, v in rec["coll_detail"].items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .checkpointer import Checkpointer, latest_step, reshard
+
+__all__ = ["Checkpointer", "latest_step", "reshard"]

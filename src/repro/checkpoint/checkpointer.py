@@ -1,0 +1,214 @@
+"""Sharding-aware, crash-safe checkpointing with async commit.
+
+Layout (one directory per step):
+
+    <dir>/step_000420.tmp/          written first
+        shard_00000.npz             flat leaf arrays (this host's slice)
+        manifest.json               treedef paths, shapes, dtypes, step
+    <dir>/step_000420/              atomic rename on completion
+
+Guarantees used by the fault-tolerance layer:
+  * a checkpoint is visible iff its manifest landed via atomic rename —
+    a crash mid-write leaves only a ``.tmp`` dir, which restore ignores;
+  * ``save_async`` runs in a background thread (compute/IO overlap) and
+    ``wait()`` joins before the next save (single writer);
+  * restore validates shapes against the target tree and can RESHARD: a
+    checkpoint written on one mesh loads onto any other mesh because leaves
+    are stored unsharded per host and re-placed with the target shardings
+    (elastic scaling path).
+
+On a multi-host deployment each host writes ``shard_<proc>.npz`` with its
+addressable slice; this container is single-host so shard 0 holds all data.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+# npz cannot represent ml_dtypes (bfloat16 etc.) natively: store such leaves
+# as raw uint16/uint8 views and record the true dtype in the manifest.
+_VIEW_ENCODE = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8}
+
+
+def _encode(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _VIEW_ENCODE:
+        return arr.view(_VIEW_ENCODE[name]), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_ENCODE:
+        import ml_dtypes
+
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            manifest = os.path.join(directory, name, "manifest.json")
+            if os.path.exists(manifest):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, process_index: int = 0):
+        self.directory = directory
+        self.keep = keep
+        self.process_index = process_index
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None) -> str:
+        self.wait()  # serialize with any in-flight async writer
+        flat, _ = _flatten_with_paths(tree)
+        host_arrays = {}
+        manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+        for key, leaf in flat:
+            arr = np.asarray(jax.device_get(leaf))
+            enc, dtype_name = _encode(arr)
+            host_arrays[key] = enc
+            manifest["leaves"][key] = {"shape": list(arr.shape), "dtype": dtype_name}
+        tmp = os.path.join(self.directory, f"step_{step:06d}.tmp")
+        final = os.path.join(self.directory, f"step_{step:06d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, f"shard_{self.process_index:05d}.npz"), **host_arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic visibility
+        self._gc()
+        return final
+
+    def save_async(self, step: int, tree: PyTree, extra: Optional[Dict] = None):
+        """Snapshot to host memory synchronously, write to disk in background."""
+        self.wait()
+        flat, _ = _flatten_with_paths(tree)
+        snap = [(k, np.asarray(jax.device_get(v))) for k, v in flat]
+
+        def write():
+            try:
+                tmp = os.path.join(self.directory, f"step_{step:06d}.tmp")
+                final = os.path.join(self.directory, f"step_{step:06d}")
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
+                manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+                arrays = {}
+                for k, arr in snap:
+                    enc, dtype_name = _encode(arr)
+                    arrays[k] = enc
+                    manifest["leaves"][k] = {
+                        "shape": list(arr.shape),
+                        "dtype": dtype_name,
+                    }
+                np.savez(os.path.join(tmp, f"shard_{self.process_index:05d}.npz"),
+                         **arrays)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:06d}"), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def restore(
+        self,
+        step: int,
+        target: PyTree,
+        shardings: Optional[PyTree] = None,
+    ) -> Tuple[PyTree, Dict]:
+        """Load ``step`` into the structure of ``target``.
+
+        ``shardings``: optional tree of NamedSharding — leaves are placed
+        with ``jax.device_put`` onto the (possibly different) target mesh,
+        which is the elastic-rescale path.
+        """
+        final = os.path.join(self.directory, f"step_{step:06d}")
+        with open(os.path.join(final, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(final, f"shard_{self.process_index:05d}.npz"))
+        flat, treedef = _flatten_with_paths(target)
+        shard_flat = None
+        if shardings is not None:
+            shard_list, _ = _flatten_with_paths(shardings)
+            shard_flat = dict(shard_list)
+        leaves = []
+        for key, leaf in flat:
+            if key not in manifest["leaves"]:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = _decode(data[key], manifest["leaves"][key]["dtype"])
+            want = tuple(leaf.shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {want}")
+            if shard_flat is not None and key in shard_flat:
+                leaves.append(jax.device_put(arr, shard_flat[key]))
+            else:
+                leaves.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(target), leaves
+        ), manifest["extra"]
+
+
+def reshard(tree: PyTree, shardings: PyTree) -> PyTree:
+    """Re-place a live pytree onto new shardings (elastic mesh change)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s), tree, shardings
+    )

@@ -1,0 +1,149 @@
+"""Architecture registry: ``get_config(name)`` + reduced smoke presets."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from .base import (
+    MULTI_POD_MESH,
+    SHAPES,
+    SINGLE_POD_MESH,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    ResMoEConfig,
+    ShapeConfig,
+)
+
+from . import (  # noqa: E402
+    arctic_480b,
+    deepseek_v3_671b,
+    gemma3_27b,
+    granite_8b,
+    llama3_405b,
+    mixtral_8x7b,
+    musicgen_medium,
+    paligemma_3b,
+    recurrentgemma_9b,
+    rwkv6_1_6b,
+    stablelm_12b,
+    switch_base_8,
+)
+
+# The 10 assigned architectures (dry-run grid) ------------------------------
+ASSIGNED: Dict[str, ModelConfig] = {
+    "gemma3-27b": gemma3_27b.CONFIG,
+    "stablelm-12b": stablelm_12b.CONFIG,
+    "granite-8b": granite_8b.CONFIG,
+    "llama3-405b": llama3_405b.CONFIG,
+    "arctic-480b": arctic_480b.CONFIG,
+    "deepseek-v3-671b": deepseek_v3_671b.CONFIG,
+    "recurrentgemma-9b": recurrentgemma_9b.CONFIG,
+    "paligemma-3b": paligemma_3b.CONFIG,
+    "musicgen-medium": musicgen_medium.CONFIG,
+    "rwkv6-1.6b": rwkv6_1_6b.CONFIG,
+}
+
+# The paper's own models (benchmarks) ---------------------------------------
+PAPER: Dict[str, ModelConfig] = {
+    "mixtral-8x7b": mixtral_8x7b.CONFIG,
+    "switch-base-8": switch_base_8.CONFIG,
+}
+
+ALL: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ALL:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ALL)}")
+    return ALL[name]
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[ShapeConfig]:
+    """The assigned shape cells for an architecture.
+
+    ``long_500k`` needs sub-quadratic attention — run only for SSM/hybrid
+    archs (see DESIGN.md §7); all archs here are decoder-style so decode
+    shapes always apply.
+    """
+    shapes = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.subquadratic:
+        shapes.append(SHAPES["long_500k"])
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Reduced presets (CPU smoke tests): same structural family, tiny dims.
+# ---------------------------------------------------------------------------
+
+
+def reduced_config(name: str) -> ModelConfig:
+    cfg = get_config(name)
+    d_model = 128
+    heads = 4
+    head_dim = 32
+    kv = max(1, min(cfg.num_kv_heads, 2))
+    if cfg.num_kv_heads == cfg.num_heads:
+        kv = heads  # keep MHA archs MHA
+    if cfg.num_kv_heads == 1:
+        kv = 1
+    # keep at least one full pattern period + remainder behaviour
+    if cfg.recurrent_type == "rglru":
+        layers = 8  # 2 full (rec,rec,attn) patterns + 2 remainder
+    elif cfg.local_global_ratio > 0:
+        layers = cfg.local_global_ratio + 3  # one period + remainder
+    elif cfg.moe_first_layer > 0:
+        layers = cfg.moe_first_layer + 2
+    else:
+        layers = 3
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 8),
+            top_k=min(cfg.moe.top_k, 2),
+            expert_d_ff=128,
+            capacity_factor=2.0,
+        )
+    updates = dict(
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=256,
+        vocab_size=512,
+        moe=moe,
+        dtype="float32",
+        remat_policy="none",
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        optimizer="adamw",
+    )
+    if cfg.attention_type == "mla":
+        updates.update(q_lora_rank=32, kv_lora_rank=32, qk_rope_head_dim=16,
+                       qk_nope_head_dim=32, v_head_dim=32)
+    if cfg.recurrent_type == "rglru":
+        updates.update(lru_width=d_model)
+    if cfg.recurrent_type == "rwkv6":
+        updates.update(num_heads=d_model // 64, num_kv_heads=d_model // 64, head_dim=64)
+    if cfg.frontend == "vision":
+        updates.update(num_prefix_embeddings=8)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **updates)
+
+
+__all__ = [
+    "ASSIGNED",
+    "PAPER",
+    "ALL",
+    "SHAPES",
+    "SINGLE_POD_MESH",
+    "MULTI_POD_MESH",
+    "MeshConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "ResMoEConfig",
+    "ShapeConfig",
+    "get_config",
+    "applicable_shapes",
+    "reduced_config",
+]

@@ -1,0 +1,33 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128e top-2 + dense residual branch.  [hf:Snowflake/snowflake-arctic-base; hf]
+
+ResMoE target architecture (128 experts/layer).
+"""
+from .base import ModelConfig, MoEConfig, ResMoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab_size=32000,
+    attention_type="gqa",
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    activation="silu",
+    glu=True,
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=2,
+        expert_d_ff=4864,
+        dense_residual=True,
+        router_type="softmax",
+        capacity_factor=1.25,
+    ),
+    resmoe=ResMoEConfig(enabled=True, keep_ratio=0.25, method="svd", apply_mode="fused"),
+    optimizer="adafactor",
+)

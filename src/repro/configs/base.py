@@ -1,0 +1,272 @@
+"""Configuration dataclasses for the repro framework.
+
+Every model in the framework is described by a single ``ModelConfig``; the
+assigned architectures each provide one instance (src/repro/configs/<id>.py)
+plus a reduced preset for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts layer configuration."""
+
+    num_experts: int
+    top_k: int
+    # d_ff of each routed expert (may differ from the dense d_ff).
+    expert_d_ff: int
+    # Number of always-on shared experts (DeepSeek-style). Their d_ff equals
+    # ``expert_d_ff * num_shared_experts`` stacked as one fused expert.
+    num_shared_experts: int = 0
+    # Arctic-style: a full dense FFN runs in parallel with the MoE branch.
+    dense_residual: bool = False
+    # Router style: "softmax" (classic top-k softmax over logits) or
+    # "sigmoid" (DeepSeek-v3 sigmoid scoring + normalization over selected).
+    router_type: str = "softmax"
+    # Normalize the top-k gate values to sum to 1.
+    normalize_gates: bool = True
+    # Auxiliary load-balance loss coefficient (training).
+    aux_loss_coef: float = 0.01
+    router_z_loss_coef: float = 0.0
+    # Expert capacity factor for the gather-based dispatch (tokens beyond
+    # capacity are dropped, Switch-style).
+    capacity_factor: float = 1.25
+    # Mixtral-style upcycled init: all experts start as (noisy) copies of a
+    # single dense FFN — the uniform-weight structure the paper observes
+    # makes its barycenter so effective on Mixtral (§5.4).
+    upcycled_init: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ResMoEConfig:
+    """ResMoE compression configuration (the paper's technique)."""
+
+    enabled: bool = False
+    # Fraction of residual parameters retained (paper's main setting: 0.25).
+    keep_ratio: float = 0.25
+    # "up" = unstructured magnitude pruning; "block" = TPU block-structured
+    # pruning (BCSR); "svd" = truncated SVD of the residual.
+    method: str = "svd"
+    # Which layers to compress (paper: top-N layers). None = all MoE layers.
+    first_layer: int = 0
+    # Barycenter solver iterations (Cuturi–Doucet outer loop).
+    barycenter_iters: int = 10
+    # OT solver: "exact" (assignment; scipy JV) or "sinkhorn".
+    ot_solver: str = "exact"
+    sinkhorn_reg: float = 0.01
+    sinkhorn_iters: int = 200
+    # Forward path: "restored" (paper Algorithm 2: materialize W_c + delta)
+    # or "fused" (beyond-paper: never materialize; shared-base + low-rank).
+    apply_mode: str = "restored"
+    # Beyond-paper: treat per-layer dense FFNs as the expert population.
+    scope: str = "experts"  # "experts" | "cross_layer"
+    # Block shape for method="block" (TPU tile-aligned).
+    block_shape: Tuple[int, int] = (8, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. One per assigned architecture."""
+
+    name: str
+    family: str  # "dense" | "moe" | "hybrid" | "vlm" | "audio" | "ssm"
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // num_heads
+    # Attention pattern -------------------------------------------------
+    attention_type: str = "gqa"  # "gqa" | "mla" | "none"
+    # sliding-window layers: every layer whose (index % local_global_ratio+1)
+    # != local_global_ratio is local. 0 = all global.
+    sliding_window: int = 0
+    local_global_ratio: int = 0  # e.g. gemma3: 5 local : 1 global
+    # MLA (DeepSeek-v3) dims --------------------------------------------
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+    # Recurrence (hybrid / ssm) ------------------------------------------
+    recurrent_type: str = "none"  # "rglru" | "rwkv6"
+    # pattern period for hybrid: e.g. recurrentgemma = 3 (2 recurrent, 1 attn)
+    recurrent_pattern: int = 0
+    lru_width: int = 0
+    # MoE ------------------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1  # apply MoE every k-th layer (1 = all layers)
+    moe_first_layer: int = 0  # deepseek: first layer(s) dense
+    # Modality frontend stub ----------------------------------------------
+    frontend: str = "none"  # "none" | "vision" | "audio"
+    num_prefix_embeddings: int = 0  # vision patches prepended to text
+    num_codebooks: int = 1  # musicgen: parallel codebook streams
+    # Misc -----------------------------------------------------------------
+    activation: str = "silu"  # "silu" | "gelu" | "relu"
+    glu: bool = True  # gated FFN (SwiGLU / GeGLU)
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    logit_softcap: float = 0.0
+    dtype: str = "bfloat16"
+    # ResMoE ----------------------------------------------------------------
+    resmoe: ResMoEConfig = dataclasses.field(default_factory=ResMoEConfig)
+    # Sharding / training knobs ---------------------------------------------
+    remat_policy: str = "nothing_saveable"  # "none"|"nothing_saveable"|"dots"
+    scan_layers: bool = True
+    optimizer: str = "adamw"  # "adamw" | "adafactor"
+    # Sub-quadratic? (controls long_500k applicability)
+    subquadratic: bool = False
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # -- derived quantities -------------------------------------------------
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None
+
+    def num_params(self) -> int:
+        """Total parameter count (analytic)."""
+        return _count_params(self, active_only=False)
+
+    def num_active_params(self) -> int:
+        """Parameters activated per token (MoE top-k accounting)."""
+        return _count_params(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD_MESH = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting
+# ---------------------------------------------------------------------------
+
+
+def _attention_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    if cfg.attention_type == "mla":
+        # DeepSeek-v3 MLA: q down/up, kv down/up, rope embeds, out proj.
+        qh = cfg.qk_rope_head_dim + cfg.qk_nope_head_dim
+        n = 0
+        if cfg.q_lora_rank > 0:
+            n += d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * qh
+        else:
+            n += d * cfg.num_heads * qh
+        n += d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+        n += cfg.kv_lora_rank * cfg.num_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+        n += cfg.num_heads * cfg.v_head_dim * d
+        return n
+    if cfg.attention_type == "none":
+        return 0
+    hd = cfg.head_dim
+    q = d * cfg.num_heads * hd
+    kv = 2 * d * cfg.num_kv_heads * hd
+    o = cfg.num_heads * hd * d
+    return q + kv + o
+
+
+def _ffn_params(cfg: ModelConfig, d_ff: int) -> int:
+    mats = 3 if cfg.glu else 2
+    return mats * cfg.d_model * d_ff
+
+
+def _recurrent_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    if cfg.recurrent_type == "rglru":
+        w = cfg.lru_width or d
+        # linear in/out + gates (input & recurrence) + diagonal decay params
+        return 2 * d * w + 2 * w * w // 1 + 2 * w
+    if cfg.recurrent_type == "rwkv6":
+        # time-mix: r,k,v,g,o projections + decay/bonus + token-shift lora
+        return 5 * d * d + 2 * d + 6 * d * 64
+    return 0
+
+
+def _layer_params(cfg: ModelConfig, layer_idx: int, active_only: bool) -> int:
+    n = 2 * cfg.d_model  # 2 norms
+    # mixer
+    if cfg.recurrent_type != "none" and cfg.recurrent_pattern:
+        is_attn = (layer_idx % cfg.recurrent_pattern) == (cfg.recurrent_pattern - 1)
+    elif cfg.recurrent_type != "none":
+        is_attn = False
+    else:
+        is_attn = True
+    if is_attn and cfg.attention_type != "none":
+        n += _attention_params(cfg)
+    elif cfg.recurrent_type != "none":
+        n += _recurrent_params(cfg)
+    # ffn / moe
+    is_moe_layer = (
+        cfg.is_moe
+        and layer_idx >= cfg.moe_first_layer
+        and ((layer_idx - cfg.moe_first_layer) % cfg.moe_every == 0)
+    )
+    if is_moe_layer:
+        m = cfg.moe
+        router = cfg.d_model * m.num_experts
+        n += router
+        e = _ffn_params(cfg, m.expert_d_ff)
+        if active_only:
+            n += m.top_k * e
+        else:
+            n += m.num_experts * e
+        if m.num_shared_experts:
+            n += _ffn_params(cfg, m.expert_d_ff * m.num_shared_experts)
+        if m.dense_residual:
+            n += _ffn_params(cfg, cfg.d_ff)
+    else:
+        n += _ffn_params(cfg, cfg.d_ff)
+    return n
+
+
+def _count_params(cfg: ModelConfig, active_only: bool) -> int:
+    n = cfg.vocab_size * cfg.d_model  # embed
+    if not cfg.tie_embeddings:
+        n += cfg.vocab_size * cfg.d_model * (cfg.num_codebooks if cfg.num_codebooks > 1 else 1)
+    n += cfg.d_model  # final norm
+    for i in range(cfg.num_layers):
+        n += _layer_params(cfg, i, active_only)
+    return n

@@ -1,0 +1,42 @@
+"""deepseek-v3-671b [moe]: 61L d_model=7168 128H (MLA) expert d_ff=2048
+vocab=129280, MoE 1 shared + 256 routed top-8, sigmoid router, first 3
+layers dense (d_ff=18432).  MTP head omitted (see DESIGN.md).
+[arXiv:2412.19437; hf]
+
+Primary ResMoE target (256 fine-grained experts/layer).
+"""
+from .base import ModelConfig, MoEConfig, ResMoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,  # MLA: per-head latents; kept for bookkeeping
+    head_dim=128,
+    d_ff=18432,  # dense layers (first 3)
+    vocab_size=129280,
+    attention_type="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_rope_head_dim=64,
+    qk_nope_head_dim=128,
+    v_head_dim=128,
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    activation="silu",
+    glu=True,
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        expert_d_ff=2048,
+        num_shared_experts=1,
+        router_type="sigmoid",
+        normalize_gates=True,
+        capacity_factor=1.25,
+    ),
+    moe_first_layer=3,
+    resmoe=ResMoEConfig(enabled=True, keep_ratio=0.25, method="svd", apply_mode="fused"),
+    optimizer="adafactor",
+)

@@ -1,0 +1,26 @@
+"""gemma3-27b [dense]: 62L d_model=5376 32H (GQA kv=16) d_ff=21504
+vocab=262144 — 5:1 local:global, 128k context.
+[hf:google/gemma-3-1b-pt scaled per assignment; unverified]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    attention_type="gqa",
+    sliding_window=1024,
+    local_global_ratio=5,  # 5 local : 1 global
+    rope_theta=1_000_000.0,  # global layers; local layers use 10k
+    tie_embeddings=True,
+    activation="gelu",
+    glu=True,
+    optimizer="adafactor",
+    remat_policy="nothing_saveable",
+)

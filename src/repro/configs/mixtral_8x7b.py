@@ -1,0 +1,26 @@
+"""mixtral-8x7b [moe]: the paper's primary evaluation model.
+32L d_model=4096 32H (GQA kv=8) expert d_ff=14336 vocab=32000, 8e top-2.
+[arXiv:2401.04088]
+"""
+from .base import ModelConfig, MoEConfig, ResMoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    attention_type="gqa",
+    sliding_window=4096,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    activation="silu",
+    glu=True,
+    moe=MoEConfig(num_experts=8, top_k=2, expert_d_ff=14336, router_type="softmax",
+                  upcycled_init=True),
+    resmoe=ResMoEConfig(enabled=True, keep_ratio=0.25, method="up", apply_mode="restored"),
+)

@@ -1,0 +1,25 @@
+"""musicgen-medium [audio]: 48L d_model=1536 24H (MHA kv=24) d_ff=6144
+vocab=2048 — decoder-only over EnCodec tokens, 4 parallel codebooks
+(delay pattern handled by the data pipeline; frontend STUB provides frame
+embeddings).  [arXiv:2306.05284; hf]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    attention_type="gqa",
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    activation="gelu",
+    glu=False,
+    frontend="audio",
+    num_codebooks=4,
+)

@@ -1,0 +1,25 @@
+"""paligemma-3b [vlm]: 18L d_model=2048 8H (MQA kv=1) d_ff=16384
+vocab=257216 — SigLIP vision frontend (STUB: input_specs provides
+precomputed patch embeddings) + gemma decoder backbone.
+[arXiv:2407.07726; hf]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    attention_type="gqa",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    activation="gelu",
+    glu=True,
+    frontend="vision",
+    num_prefix_embeddings=256,  # 224px / 14 patch -> 256 tokens
+)

@@ -1,0 +1,30 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000 — RG-LRU + local attention (window 2048), pattern
+(rec, rec, attn).  [arXiv:2402.19427; unverified]
+
+Sub-quadratic: bounded state => long_500k applies.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    attention_type="gqa",
+    sliding_window=2048,
+    recurrent_type="rglru",
+    recurrent_pattern=3,  # rec, rec, attn
+    lru_width=4096,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    activation="gelu",
+    glu=True,
+    subquadratic=True,
+    optimizer="adafactor",
+)

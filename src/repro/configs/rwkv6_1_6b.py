@@ -1,0 +1,25 @@
+"""rwkv6-1.6b [ssm]: 24L d_model=2048 (attention-free) d_ff=7168
+vocab=65536 — Finch: data-dependent decay linear attention.
+[arXiv:2404.05892; unverified]
+
+Sub-quadratic: O(1) state => long_500k applies.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,  # d_model / 64 wkv heads
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    attention_type="none",
+    recurrent_type="rwkv6",
+    tie_embeddings=False,
+    activation="relu2",
+    glu=False,
+    subquadratic=True,
+)

@@ -1,0 +1,30 @@
+"""switch-base-8 (decoder-only analog) [moe]: the paper's second model.
+
+The original Switch Transformer is a T5 encoder-decoder; our framework is
+decoder-only, so this config keeps Switch's layer/expert/dff geometry on a
+causal backbone (every other layer MoE, top-1 routing, ReLU non-GLU experts,
+as in Switch).  Used by the paper-table benchmarks, not by the assigned
+dry-run grid.
+"""
+from .base import ModelConfig, MoEConfig, ResMoEConfig
+
+CONFIG = ModelConfig(
+    name="switch-base-8",
+    family="moe",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=32128,
+    attention_type="gqa",
+    tie_embeddings=True,
+    activation="relu",
+    glu=False,
+    moe=MoEConfig(num_experts=8, top_k=1, expert_d_ff=3072, router_type="softmax",
+                  capacity_factor=2.0),
+    moe_every=2,
+    moe_first_layer=1,
+    resmoe=ResMoEConfig(enabled=True, keep_ratio=0.25, method="up", apply_mode="restored"),
+)

@@ -1,0 +1,50 @@
+"""ResMoE core: Wasserstein-barycenter extraction + residual restoration."""
+from .api import CompressionReport, ResMoECompressor, compress_model
+from .barycenter import (
+    BarycenterResult,
+    average_center,
+    reference_center,
+    wasserstein_barycenter,
+)
+from .compress import (
+    LayerCompression,
+    compress_bank,
+    design_matrices,
+    fused_params,
+    restored_bank,
+    split_design,
+)
+from .ot import exact_assignment, ot_permutation, sinkhorn
+from .residual import (
+    CompressedResidual,
+    compress_residual,
+    compress_svd,
+    prune_block,
+    prune_unstructured,
+    svd_rank_for_ratio,
+)
+
+__all__ = [
+    "CompressionReport",
+    "ResMoECompressor",
+    "compress_model",
+    "BarycenterResult",
+    "average_center",
+    "reference_center",
+    "wasserstein_barycenter",
+    "LayerCompression",
+    "compress_bank",
+    "design_matrices",
+    "fused_params",
+    "restored_bank",
+    "split_design",
+    "exact_assignment",
+    "ot_permutation",
+    "sinkhorn",
+    "CompressedResidual",
+    "compress_residual",
+    "compress_svd",
+    "prune_block",
+    "prune_unstructured",
+    "svd_rank_for_ratio",
+]

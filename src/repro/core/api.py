@@ -1,0 +1,80 @@
+"""Public API: compress a built model's parameter pytree with ResMoE.
+
+The compressor walks a model param tree (as produced by
+``repro.models.model.build_model(cfg).init``), finds MoE expert banks (and,
+for the beyond-paper ``cross_layer`` scope, stacked dense FFNs), and replaces
+them with a compressed store understood by the MoE forward paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..configs.base import ModelConfig, ResMoEConfig
+from .compress import LayerCompression, compress_bank
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class CompressionReport:
+    layers: List[Dict[str, float]]
+    original_bytes: int
+    compressed_bytes: int
+    mean_approx_error: float
+
+    @property
+    def ratio(self) -> float:
+        return self.compressed_bytes / max(1, self.original_bytes)
+
+    def summary(self) -> str:
+        return (
+            f"ResMoE: {self.original_bytes/2**20:.1f} MiB -> "
+            f"{self.compressed_bytes/2**20:.1f} MiB "
+            f"({self.ratio:.3f}x), approx_err={self.mean_approx_error:.4g}"
+        )
+
+
+class ResMoECompressor:
+    """One-shot, data-agnostic compression of MoE expert banks."""
+
+    def __init__(self, cfg: ResMoEConfig, center: str = "wb"):
+        self.cfg = cfg
+        self.center = center
+
+    # -- single bank ---------------------------------------------------------
+
+    def compress_bank(self, bank: Dict[str, np.ndarray], seed: int = 0) -> LayerCompression:
+        return compress_bank(
+            bank,
+            method=self.cfg.method,
+            keep_ratio=self.cfg.keep_ratio,
+            center=self.center,
+            barycenter_iters=self.cfg.barycenter_iters,
+            ot_solver=self.cfg.ot_solver,
+            block_shape=self.cfg.block_shape,
+            seed=seed,
+        )
+
+    # -- whole model ---------------------------------------------------------
+
+    def compress_params(
+        self, params: PyTree, model_cfg: ModelConfig
+    ) -> tuple[PyTree, CompressionReport]:
+        """Replace every MoE expert bank in a repro.models param tree with
+        its ResMoE compressed store (delegates to the model-layout adapter)."""
+        import dataclasses as _dc
+
+        from ..models.model import compress_model_params
+
+        cfg = _dc.replace(model_cfg, resmoe=self.cfg)
+        return compress_model_params(params, cfg, center=self.center)
+
+
+def compress_model(params: PyTree, model_cfg: ModelConfig):
+    """Convenience entry point: compress using ``model_cfg.resmoe``."""
+    from ..models.model import compress_model_params
+
+    return compress_model_params(params, model_cfg)

@@ -1,0 +1,233 @@
+"""The paper's comparison methods (Tables 1–4), implemented on design matrices.
+
+Every baseline consumes an expert-bank design tensor [N, f, dd] and returns a
+``BaselineResult`` with per-expert approximations ``\\hat W_k`` (virtual — we
+keep a callable to avoid materializing N copies when not needed), the
+approximation error of §5.2 and a parameter count for the compressed store.
+
+Implemented:
+  * ``direct_up``      — unstructured magnitude pruning on each expert (UP).
+  * ``direct_wanda``   — Wanda-style |W| * ||x||_2 scoring with calibration
+                         column norms (data-dependent; synthetic calibration).
+  * ``structured``     — neuron (row) pruning by L2 norm (SP).
+  * ``direct_svd``     — truncated SVD per expert.
+  * ``merge``          — M-SMoE-style: greedy-pair experts into g groups by
+                         design distance, group mean as shared weight.
+  * ``merge_aligned``  — Git-Re-Basin-as-merge: group + align-to-ref + mean.
+  * ``meo``            — MEO-style: merge all experts of a group by summation
+                         with uniform coefficients (no alignment).
+  * ``mlp_fusion``     — cluster rows into c centroids (k-means), experts
+                         approximated by C^T @ centroids (Appendix A.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .ot import ot_permutation
+from .residual import compress_residual, svd_rank_for_ratio
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    name: str
+    approx: Array  # [N, f, dd] approximated (aligned) design matrices
+    perms: Array  # [N, f] alignment used in the error metric (identity if none)
+    num_params: int
+
+    def approximation_error(self, design: Array) -> float:
+        n, p_i, _ = design.shape
+        tot = 0.0
+        for k in range(n):
+            diff = design[k][self.perms[k]] - self.approx[k]
+            tot += float((diff * diff).sum())
+        return tot / n / p_i
+
+
+def _identity_perms(n: int, p_i: int) -> Array:
+    return np.tile(np.arange(p_i, dtype=np.int64), (n, 1))
+
+
+# ---------------------------------------------------------------------------
+
+
+def direct_up(design: Array, keep_ratio: float) -> BaselineResult:
+    n, p_i, dd = design.shape
+    approx = np.empty_like(design, dtype=np.float32)
+    params = 0
+    for k in range(n):
+        c = compress_residual(design[k], "up", keep_ratio)
+        approx[k] = c.to_dense()
+        params += c.num_params()
+    return BaselineResult("UP", approx, _identity_perms(n, p_i), params)
+
+
+def direct_wanda(design: Array, keep_ratio: float, col_norms: Optional[Array] = None,
+                 seed: int = 0) -> BaselineResult:
+    """Wanda scoring |W_ij| * ||x_j||_2 with (synthetic) calibration norms.
+
+    ``col_norms``: per-column activation norms [dd]. If None, sampled from a
+    lognormal — this mirrors Wanda's data dependence without shipping C4.
+    """
+    n, p_i, dd = design.shape
+    if col_norms is None:
+        rng = np.random.default_rng(seed)
+        col_norms = rng.lognormal(0.0, 0.5, size=(dd,)).astype(np.float64)
+    approx = np.empty_like(design, dtype=np.float32)
+    params = 0
+    k_keep = max(1, int(round(keep_ratio * p_i * dd)))
+    for k in range(n):
+        score = np.abs(design[k]) * col_norms[None, :]
+        thresh = np.partition(score.ravel(), score.size - k_keep)[score.size - k_keep]
+        mask = score >= thresh
+        approx[k] = np.where(mask, design[k], 0.0)
+        params += int(mask.sum())
+    return BaselineResult("Wanda", approx, _identity_perms(n, p_i), params)
+
+
+def structured(design: Array, keep_ratio: float) -> BaselineResult:
+    """SP: keep top rows (neurons / bottleneck-1 sub-MLPs) by L2 norm."""
+    n, p_i, dd = design.shape
+    keep = max(1, int(round(keep_ratio * p_i)))
+    approx = np.zeros_like(design, dtype=np.float32)
+    for k in range(n):
+        norms = (design[k].astype(np.float64) ** 2).sum(-1)
+        idx = np.argsort(-norms, kind="stable")[:keep]
+        approx[k][idx] = design[k][idx]
+    return BaselineResult("SP", approx, _identity_perms(n, p_i), n * keep * dd)
+
+
+def direct_svd(design: Array, keep_ratio: float) -> BaselineResult:
+    n, p_i, dd = design.shape
+    approx = np.empty_like(design, dtype=np.float32)
+    params = 0
+    for k in range(n):
+        c = compress_residual(design[k], "svd", keep_ratio)
+        approx[k] = c.to_dense()
+        params += c.num_params()
+    return BaselineResult("SVD", approx, _identity_perms(n, p_i), params)
+
+
+# ---------------------------------------------------------------------------
+# Merging family
+# ---------------------------------------------------------------------------
+
+
+def _greedy_groups(design: Array, num_groups: int) -> List[List[int]]:
+    """Greedy pairing by Frobenius distance between design matrices."""
+    n = design.shape[0]
+    flat = design.reshape(n, -1).astype(np.float64)
+    d2 = ((flat[:, None, :] - flat[None, :, :]) ** 2).sum(-1)
+    unassigned = list(range(n))
+    groups: List[List[int]] = [[] for _ in range(num_groups)]
+    # seed groups with the mutually-farthest experts
+    seeds = [unassigned.pop(0)]
+    while len(seeds) < num_groups:
+        far = max(unassigned, key=lambda j: min(d2[j][s] for s in seeds))
+        seeds.append(far)
+        unassigned.remove(far)
+    for gi, s in enumerate(seeds):
+        groups[gi].append(s)
+    for j in unassigned:
+        gi = min(range(num_groups), key=lambda g: min(d2[j][m] for m in groups[g]))
+        groups[gi].append(j)
+    return groups
+
+
+def merge(design: Array, num_groups: int = 2) -> BaselineResult:
+    """M-SMoE-style (proxy): group + plain mean as every member's weights."""
+    n, p_i, dd = design.shape
+    approx = np.empty_like(design, dtype=np.float32)
+    for g in _greedy_groups(design, num_groups):
+        center = design[g].mean(axis=0)
+        for k in g:
+            approx[k] = center
+    return BaselineResult("M-SMoE", approx, _identity_perms(n, p_i), num_groups * p_i * dd)
+
+
+def merge_aligned(design: Array, num_groups: int = 2) -> BaselineResult:
+    """Git-Re-Basin-as-merge: per group, align members to the first, mean."""
+    n, p_i, dd = design.shape
+    approx = np.empty_like(design, dtype=np.float32)
+    perms = _identity_perms(n, p_i)
+    for g in _greedy_groups(design, num_groups):
+        ref = g[0]
+        aligned = [design[ref]]
+        local_perms = {ref: np.arange(p_i, dtype=np.int64)}
+        for k in g[1:]:
+            pk = ot_permutation(design[k], design[ref])
+            local_perms[k] = pk
+            aligned.append(design[k][pk])
+        center = np.mean(aligned, axis=0)
+        for k in g:
+            approx[k] = center
+            perms[k] = local_perms[k]
+    return BaselineResult("GitReBasin", approx, perms, num_groups * p_i * dd)
+
+
+def meo(design: Array, num_groups: int = 2) -> BaselineResult:
+    """MEO-style: group merge by (uniform) summation — no alignment, no mean
+    rescale distinction matters for the error metric, so use the sum/len."""
+    n, p_i, dd = design.shape
+    approx = np.empty_like(design, dtype=np.float32)
+    groups = _greedy_groups(design, num_groups)
+    for g in groups:
+        center = design[g].sum(axis=0) / len(g)
+        for k in g:
+            approx[k] = center
+    return BaselineResult("MEO", approx, _identity_perms(n, p_i), num_groups * p_i * dd)
+
+
+def mlp_fusion(design: Array, keep_ratio: float, iters: int = 25, seed: int = 0) -> BaselineResult:
+    """Cluster the p_I rows of each expert into c = keep*p_I centroids.
+
+    Approximation is C^T @ centroids (Appendix A.5)."""
+    n, p_i, dd = design.shape
+    c = max(1, int(round(keep_ratio * p_i)))
+    rng = np.random.default_rng(seed)
+    approx = np.empty_like(design, dtype=np.float32)
+    params = 0
+    for k in range(n):
+        x = design[k].astype(np.float64)
+        cent = x[rng.choice(p_i, size=c, replace=False)].copy()
+        for _ in range(iters):
+            d2 = ((x[:, None, :] - cent[None, :, :]) ** 2).sum(-1)
+            assign = d2.argmin(axis=1)
+            for ci in range(c):
+                members = x[assign == ci]
+                if len(members):
+                    cent[ci] = members.mean(axis=0)
+        approx[k] = cent[assign]
+        params += c * dd + p_i  # centroids + cluster index
+    return BaselineResult("MLPFusion", approx, _identity_perms(n, p_i), params)
+
+
+# ---------------------------------------------------------------------------
+
+
+def run_baseline(name: str, design: Array, keep_ratio: float, num_groups: int = 2,
+                 seed: int = 0) -> BaselineResult:
+    if name == "up":
+        return direct_up(design, keep_ratio)
+    if name == "wanda":
+        return direct_wanda(design, keep_ratio, seed=seed)
+    if name == "sp":
+        return structured(design, keep_ratio)
+    if name == "svd":
+        return direct_svd(design, keep_ratio)
+    if name == "msmoe":
+        return merge(design, num_groups)
+    if name == "git":
+        return merge_aligned(design, num_groups)
+    if name == "meo":
+        return meo(design, num_groups)
+    if name == "mlp_fusion":
+        return mlp_fusion(design, keep_ratio, seed=seed)
+    raise ValueError(name)
+
+
+ALL_BASELINES = ("up", "wanda", "sp", "svd", "msmoe", "git", "meo", "mlp_fusion")

@@ -1,0 +1,228 @@
+"""End-to-end ResMoE compression of expert banks.
+
+An *expert bank* is the stacked parameter dict of one MoE layer:
+
+    {"w1": [N, d, f], ("w3": [N, d, f] when GLU), "w2": [N, f, d],
+     optional "b1": [N, f]}
+
+The design matrix of expert k stacks the bottleneck-1 sub-MLP coordinates as
+rows (paper Eq. 3 / Appendix B.3):
+
+    W_k = [ w1_k^T | (b1_k) | (w3_k^T) | w2_k ]  in  R^{f x d_design}
+
+Rows are exchangeable, which is exactly the symmetry the Wasserstein
+barycenter exploits.  ``b2`` is row-independent and therefore left untouched
+(the paper likewise keeps it outside the ensemble).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .barycenter import BarycenterResult, barycenter_by_name, wasserstein_barycenter
+from .residual import CompressedResidual, compress_residual
+
+Array = np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Design matrices
+# ---------------------------------------------------------------------------
+
+
+def bank_design_dims(bank: Dict[str, Array]) -> List[Tuple[str, int]]:
+    """Ordered (name, width) segments of the design matrix columns.
+
+    ``bank`` may be stacked ([N, d, f]) or a single expert ([d, f]).
+    """
+    segs: List[Tuple[str, int]] = []
+    d = bank["w1"].shape[-2]
+    segs.append(("w1", d))
+    if "b1" in bank:
+        segs.append(("b1", 1))
+    if "w3" in bank:
+        segs.append(("w3", d))
+        if "b3" in bank:
+            segs.append(("b3", 1))
+    segs.append(("w2", d))
+    return segs
+
+
+def design_matrices(bank: Dict[str, Array]) -> Array:
+    """[N, f, d_design] design matrices for the whole bank."""
+    parts = []
+    w1 = np.asarray(bank["w1"])  # [N, d, f]
+    parts.append(np.swapaxes(w1, 1, 2))  # [N, f, d]
+    if "b1" in bank:
+        parts.append(np.asarray(bank["b1"])[..., None])
+    if "w3" in bank:
+        parts.append(np.swapaxes(np.asarray(bank["w3"]), 1, 2))
+        if "b3" in bank:
+            parts.append(np.asarray(bank["b3"])[..., None])
+    parts.append(np.asarray(bank["w2"]))  # [N, f, d]
+    return np.concatenate(parts, axis=-1)
+
+
+def split_design(design: Array, bank_like: Dict[str, Array]) -> Dict[str, Array]:
+    """Inverse of :func:`design_matrices` for a single design matrix [f, dd].
+
+    Returns weights in model layout ({"w1": [d, f], ...}).
+    """
+    segs = bank_design_dims(bank_like)
+    out: Dict[str, Array] = {}
+    col = 0
+    for name, width in segs:
+        chunk = design[:, col : col + width]
+        col += width
+        if name in ("w1", "w3"):
+            out[name] = np.ascontiguousarray(chunk.T)
+        elif name in ("b1", "b3"):
+            out[name] = np.ascontiguousarray(chunk[:, 0])
+        else:  # w2: rows are already [f, d]
+            out[name] = np.ascontiguousarray(chunk)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer compression artifact
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LayerCompression:
+    """Compressed representation of one MoE layer's expert bank."""
+
+    center: Array  # [f, d_design] barycenter design matrix
+    residuals: List[CompressedResidual]  # per expert
+    perms: Array  # [N, f] — center row i ~ expert row perms[k][i]
+    segs: List[Tuple[str, int]]
+    method: str
+    keep_ratio: float
+    barycenter_objective: float
+
+    @property
+    def num_experts(self) -> int:
+        return len(self.residuals)
+
+    def restored_design(self, k: int) -> Array:
+        """\\hat W_k = W_omega + Delta_k  (approximates T_k W_k)."""
+        dd = self.residuals[k].to_dense()
+        return self.center + dd[: self.center.shape[0], : self.center.shape[1]]
+
+    def approximation_error(self, design: Array) -> float:
+        """Paper §5.2 metric: mean_k ||T_k W_k - \\hat W_k||_F^2 / p_I."""
+        n, p_i, _ = design.shape
+        tot = 0.0
+        for k in range(n):
+            aligned = design[k][self.perms[k]]
+            diff = aligned - self.restored_design(k)
+            tot += float((diff * diff).sum())
+        return tot / n / p_i
+
+    def storage_bytes(self, dtype_bytes: int = 2) -> int:
+        n = self.center.size * dtype_bytes
+        n += sum(r.storage_bytes(dtype_bytes) for r in self.residuals)
+        return n
+
+    def num_params(self) -> int:
+        return int(self.center.size) + sum(r.num_params() for r in self.residuals)
+
+
+def compress_bank(
+    bank: Dict[str, Array],
+    method: str = "svd",
+    keep_ratio: float = 0.25,
+    center: str = "wb",
+    barycenter_iters: int = 10,
+    ot_solver: str = "exact",
+    block_shape: Tuple[int, int] = (8, 128),
+    seed: int = 0,
+) -> LayerCompression:
+    """Run the full ResMoE pipeline (Algorithm 1) on one expert bank."""
+    design = design_matrices(bank)  # [N, f, dd]
+    bc: BarycenterResult = barycenter_by_name(
+        center,
+        design,
+        **(
+            dict(num_iters=barycenter_iters, solver=ot_solver, seed=seed)
+            if center in ("wb", "wasserstein", "barycenter")
+            else {}
+        ),
+    )
+    residuals = []
+    for k in range(design.shape[0]):
+        aligned = design[k][bc.perms[k]]
+        delta = aligned - bc.center
+        residuals.append(compress_residual(delta, method, keep_ratio, block_shape))
+    return LayerCompression(
+        center=bc.center.astype(np.float32),
+        residuals=residuals,
+        perms=bc.perms,
+        segs=bank_design_dims(bank),
+        method=method,
+        keep_ratio=keep_ratio,
+        barycenter_objective=bc.objective,
+    )
+
+
+def restored_bank(comp: LayerCompression, bank_like: Dict[str, Array]) -> Dict[str, Array]:
+    """Materialize the restored expert bank (paper Algorithm 2).
+
+    Output uses the *aligned* row order; this changes nothing functionally
+    because simultaneous row/col permutation is an invariance of the expert.
+    """
+    outs: Dict[str, List[Array]] = {}
+    for k in range(comp.num_experts):
+        w = split_design(comp.restored_design(k), bank_like)
+        for name, arr in w.items():
+            outs.setdefault(name, []).append(arr)
+    restored = {name: np.stack(arrs) for name, arrs in outs.items()}
+    if "b2" in bank_like:  # untouched by ResMoE
+        restored["b2"] = np.asarray(bank_like["b2"])
+    return restored
+
+
+# ---------------------------------------------------------------------------
+# Factored access for the fused (restore-free) forward path
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FusedLayerParams:
+    """Arrays consumed by the fused ResMoE-SVD forward path.
+
+    center_*: barycenter weights in model layout.
+    u: [N, f, r]     shared row factor of every segment's correction.
+    v_*: [N, r, d]   per-segment column factors (v sliced per segment).
+    """
+
+    center: Dict[str, Array]
+    u: Array
+    v: Dict[str, Array]
+    rank: int
+
+
+def fused_params(comp: LayerCompression, bank_like: Dict[str, Array]) -> FusedLayerParams:
+    if comp.method != "svd":
+        raise ValueError("fused path requires method='svd'")
+    center_w = split_design(comp.center, bank_like)
+    us, vs = [], {name: [] for name, _ in comp.segs}
+    rank = max(r.u.shape[1] for r in comp.residuals)
+    for r in comp.residuals:
+        u, v = r.u, r.v
+        if u.shape[1] < rank:  # pad ranks to a common static size
+            u = np.pad(u, ((0, 0), (0, rank - u.shape[1])))
+            v = np.pad(v, ((0, rank - v.shape[0]), (0, 0)))
+        us.append(u)
+        col = 0
+        for name, width in comp.segs:
+            vs[name].append(v[:, col : col + width])
+            col += width
+    return FusedLayerParams(
+        center=center_w,
+        u=np.stack(us),
+        v={k: np.stack(v) for k, v in vs.items()},
+        rank=rank,
+    )

@@ -1,0 +1,202 @@
+"""Optimal transport solvers used by the Wasserstein-barycenter extraction.
+
+ResMoE only ever needs OT between two *uniform* discrete distributions with
+*equal* support size ``p_I`` (the rows of two expert design matrices).  By
+Peyre & Cuturi Prop. 2.1 the optimal plan is then ``1/p_I`` times a
+permutation matrix, so the problem reduces to a linear assignment:
+
+    pi = argmin_{pi in S_{p_I}} sum_i || X[pi(i)] - Y[i] ||^2
+
+We provide:
+  * ``exact_assignment``     — Jonker–Volgenant via scipy (host, float64).
+  * ``auction_assignment``   — pure-numpy auction algorithm fallback/oracle.
+  * ``sinkhorn``             — entropic OT in JAX (jittable, differentiable),
+                               with ``round_to_permutation`` for large p_I.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # scipy is available in this environment; keep the fallback honest.
+    from scipy.optimize import linear_sum_assignment as _lsa
+
+    _HAVE_SCIPY = True
+except Exception:  # pragma: no cover
+    _HAVE_SCIPY = False
+
+
+# ---------------------------------------------------------------------------
+# Cost matrices
+# ---------------------------------------------------------------------------
+
+
+def pairwise_sq_dists(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """||x_i - y_j||^2 cost matrix, numerically-stable expansion."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    x2 = (x * x).sum(-1)[:, None]
+    y2 = (y * y).sum(-1)[None, :]
+    c = x2 + y2 - 2.0 * (x @ y.T)
+    return np.maximum(c, 0.0)
+
+
+def pairwise_sq_dists_jax(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    x2 = (x * x).sum(-1)[:, None]
+    y2 = (y * y).sum(-1)[None, :]
+    return jnp.maximum(x2 + y2 - 2.0 * (x @ y.T), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Exact assignment
+# ---------------------------------------------------------------------------
+
+
+def exact_assignment(cost: np.ndarray) -> np.ndarray:
+    """Return ``perm`` s.t. row ``perm[j]`` of the source matches target ``j``.
+
+    Minimizes sum_j cost[perm[j], j].
+    """
+    if _HAVE_SCIPY:
+        rows, cols = _lsa(np.asarray(cost, dtype=np.float64))
+        perm = np.empty(cost.shape[0], dtype=np.int64)
+        perm[cols] = rows
+        return perm
+    return auction_assignment(cost)
+
+
+def auction_assignment(cost: np.ndarray, eps_start: float = 1.0) -> np.ndarray:
+    """Bertsekas auction algorithm (minimization form) — numpy fallback.
+
+    O(n^2) per round with eps-scaling; exact for integer-scaled costs, and
+    within n*eps of optimal in general. Used as an independent oracle in
+    tests and as a scipy-free fallback.
+    """
+    c = np.asarray(cost, dtype=np.float64)
+    n = c.shape[0]
+    benefit = -c  # auction maximizes
+    scale = max(1.0, np.abs(benefit).max())
+    eps = eps_start * scale
+    prices = np.zeros(n)
+    owner = np.full(n, -1, dtype=np.int64)  # owner[j] = row assigned to col j
+    assigned_col = np.full(n, -1, dtype=np.int64)
+    eps_min = scale / (2.0 * n * n) + 1e-12
+    while True:
+        owner[:] = -1
+        assigned_col[:] = -1
+        unassigned = list(range(n))
+        while unassigned:
+            i = unassigned.pop()
+            values = benefit[i] - prices
+            j = int(np.argmax(values))
+            v1 = values[j]
+            values[j] = -np.inf
+            v2 = values.max() if n > 1 else v1
+            prices[j] += (v1 - v2) + eps
+            prev = owner[j]
+            owner[j] = i
+            assigned_col[i] = j
+            if prev >= 0:
+                assigned_col[prev] = -1
+                unassigned.append(prev)
+        if eps <= eps_min:
+            break
+        eps = max(eps / 4.0, eps_min)
+    perm = np.empty(n, dtype=np.int64)
+    for j in range(n):
+        perm[j] = owner[j]
+    return perm
+
+
+def assignment_to_matrix(perm: np.ndarray) -> np.ndarray:
+    """T[j, perm[j]] = 1 : row-permutation matrix s.t. (T @ X)[j] = X[perm[j]]."""
+    n = perm.shape[0]
+    t = np.zeros((n, n), dtype=np.float64)
+    t[np.arange(n), perm] = 1.0
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Entropic OT (JAX)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def sinkhorn(
+    cost: jnp.ndarray,
+    reg: float = 0.01,
+    num_iters: int = 200,
+) -> jnp.ndarray:
+    """Log-domain Sinkhorn between two uniform distributions of equal size.
+
+    Returns the (dense) transport plan, row/col sums = 1/n.
+    """
+    n, m = cost.shape
+    log_a = jnp.full((n,), -jnp.log(n))
+    log_b = jnp.full((m,), -jnp.log(m))
+    # scale reg by median cost for shape-independent behaviour
+    med = jnp.median(cost) + 1e-30
+    eps = reg * med
+    log_k = -cost / eps
+
+    def body(_, fg):
+        f, g = fg
+        f = eps * (log_a - jax.scipy.special.logsumexp((log_k + g[None, :] / eps), axis=1))
+        g = eps * (log_b - jax.scipy.special.logsumexp((log_k + f[:, None] / eps), axis=0))
+        return f, g
+
+    f0 = jnp.zeros((n,))
+    g0 = jnp.zeros((m,))
+    f, g = jax.lax.fori_loop(0, num_iters, body, (f0, g0))
+    return jnp.exp(log_k + f[:, None] / eps + g[None, :] / eps)
+
+
+def round_plan_to_permutation(plan: np.ndarray) -> np.ndarray:
+    """Greedy rounding of a (near-)permutation plan to an exact permutation.
+
+    Returns ``perm`` with target-j matched to source ``perm[j]`` (same
+    convention as :func:`exact_assignment`, with plan[i, j] mass from source
+    i to target j).
+    """
+    p = np.asarray(plan, dtype=np.float64).copy()
+    n = p.shape[0]
+    perm = np.full(n, -1, dtype=np.int64)
+    # take matches in decreasing mass order
+    order = np.argsort(-p, axis=None)
+    used_i = np.zeros(n, dtype=bool)
+    used_j = np.zeros(n, dtype=bool)
+    count = 0
+    for flat in order:
+        i, j = divmod(int(flat), n)
+        if not used_i[i] and not used_j[j]:
+            perm[j] = i
+            used_i[i] = True
+            used_j[j] = True
+            count += 1
+            if count == n:
+                break
+    return perm
+
+
+def ot_permutation(
+    x: np.ndarray,
+    y: np.ndarray,
+    solver: str = "exact",
+    reg: float = 0.01,
+    iters: int = 200,
+) -> np.ndarray:
+    """Permutation aligning source rows ``x`` to target rows ``y``.
+
+    Returns ``perm`` with ``x[perm]`` row-aligned to ``y`` — i.e. ``perm`` is
+    T_k of the paper in index form (T_k @ X = X[perm]).
+    """
+    cost = pairwise_sq_dists(x, y)
+    if solver == "exact":
+        return exact_assignment(cost)
+    if solver == "sinkhorn":
+        plan = np.asarray(sinkhorn(jnp.asarray(cost, jnp.float32), reg, iters))
+        return round_plan_to_permutation(plan)
+    raise ValueError(f"unknown OT solver: {solver}")

@@ -1,0 +1,199 @@
+"""Residual compressors: unstructured prune, TPU block prune (BCSR), SVD.
+
+All compressors consume a residual matrix ``delta = T_k W_k - W_omega`` of
+shape [p_I, d_design] and emit a ``CompressedResidual`` that knows how to
+(1) reconstruct a dense approximation, (2) report its true storage cost in
+bytes, and (3) expose raw factors for the fused kernels.
+
+Parameter accounting matches Appendix A.3/A.4 of the paper: a keep_ratio of
+0.25 means the stored representation holds ~25% of the residual's entries
+(UP/block: nonzeros; SVD: rank chosen so k*(m+n) = 0.25*m*n).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class CompressedResidual:
+    method: str  # "up" | "block" | "svd" | "none"
+    shape: Tuple[int, int]
+    # up: dense masked matrix (and the mask); storage accounted as CSR-int32.
+    dense: Optional[np.ndarray] = None
+    nnz: int = 0
+    # block (BCSR): values [nblocks, bm, bn] + block col idx + row ptr.
+    block_values: Optional[np.ndarray] = None
+    block_col_idx: Optional[np.ndarray] = None
+    block_row_ptr: Optional[np.ndarray] = None
+    block_shape: Tuple[int, int] = (8, 128)
+    # svd: delta ~= u @ v, u: [m, r], v: [r, n]
+    u: Optional[np.ndarray] = None
+    v: Optional[np.ndarray] = None
+
+    # -- reconstruction ------------------------------------------------------
+
+    def to_dense(self) -> np.ndarray:
+        m, n = self.shape
+        if self.method == "none":
+            return np.zeros(self.shape, dtype=np.float32)
+        if self.method == "up":
+            return np.asarray(self.dense)
+        if self.method == "svd":
+            return np.asarray(self.u) @ np.asarray(self.v)
+        if self.method == "block":
+            bm, bn = self.block_shape
+            out = np.zeros((m, n), dtype=np.float32)
+            nb_rows = m // bm
+            for br in range(nb_rows):
+                s, e = int(self.block_row_ptr[br]), int(self.block_row_ptr[br + 1])
+                for p in range(s, e):
+                    bc = int(self.block_col_idx[p])
+                    out[br * bm : (br + 1) * bm, bc * bn : (bc + 1) * bn] = self.block_values[p]
+            return out
+        raise ValueError(self.method)
+
+    # -- storage accounting (bytes) ------------------------------------------
+
+    def storage_bytes(self, dtype_bytes: int = 2) -> int:
+        m, n = self.shape
+        if self.method == "none":
+            return 0
+        if self.method == "up":
+            # CSR: values + int32 col idx per nnz + int32 row ptr.
+            return self.nnz * (dtype_bytes + 4) + (m + 1) * 4
+        if self.method == "svd":
+            r = self.u.shape[1]
+            return r * (m + n) * dtype_bytes
+        if self.method == "block":
+            bm, bn = self.block_shape
+            nb = self.block_values.shape[0]
+            return nb * bm * bn * dtype_bytes + nb * 4 + (m // bm + 1) * 4
+        raise ValueError(self.method)
+
+    def num_params(self) -> int:
+        if self.method == "none":
+            return 0
+        if self.method == "up":
+            return int(self.nnz)
+        if self.method == "svd":
+            return int(self.u.size + self.v.size)
+        if self.method == "block":
+            return int(self.block_values.size)
+        raise ValueError(self.method)
+
+
+# ---------------------------------------------------------------------------
+# Unstructured magnitude pruning (paper's UP; Han et al. 2015)
+# ---------------------------------------------------------------------------
+
+
+def prune_unstructured(delta: np.ndarray, keep_ratio: float) -> CompressedResidual:
+    d = np.asarray(delta, dtype=np.float32)
+    k = max(1, int(round(keep_ratio * d.size)))
+    if k >= d.size:
+        return CompressedResidual(method="up", shape=d.shape, dense=d.copy(), nnz=int(d.size))
+    flat = np.abs(d).ravel()
+    # threshold = k-th largest magnitude
+    thresh = np.partition(flat, d.size - k)[d.size - k]
+    mask = np.abs(d) >= thresh
+    # resolve ties deterministically to exactly k entries
+    extra = int(mask.sum()) - k
+    if extra > 0:
+        tie_idx = np.flatnonzero((np.abs(d) == thresh).ravel())[:extra]
+        mask.ravel()[tie_idx] = False
+    out = np.where(mask, d, 0.0).astype(np.float32)
+    return CompressedResidual(method="up", shape=d.shape, dense=out, nnz=int(mask.sum()))
+
+
+# ---------------------------------------------------------------------------
+# Block-structured pruning (TPU adaptation — see DESIGN.md §4.1)
+# ---------------------------------------------------------------------------
+
+
+def prune_block(
+    delta: np.ndarray, keep_ratio: float, block_shape: Tuple[int, int] = (8, 128)
+) -> CompressedResidual:
+    """Keep the top blocks by Frobenius norm so that kept params ~= ratio.
+
+    The matrix is zero-padded to a block multiple for scoring; emitted BCSR
+    blocks are tile-aligned for the Pallas kernel.
+    """
+    d = np.asarray(delta, dtype=np.float32)
+    m, n = d.shape
+    bm, bn = block_shape
+    pm, pn = (-m) % bm, (-n) % bn
+    dp = np.pad(d, ((0, pm), (0, pn)))
+    mb, nb = dp.shape[0] // bm, dp.shape[1] // bn
+    blocks = dp.reshape(mb, bm, nb, bn).transpose(0, 2, 1, 3)  # [mb, nb, bm, bn]
+    scores = (blocks.astype(np.float64) ** 2).sum(axis=(2, 3))
+    total_blocks = mb * nb
+    k = max(1, int(round(keep_ratio * total_blocks)))
+    flat = scores.ravel()
+    keep_idx = np.argsort(-flat, kind="stable")[:k]
+    keep_mask = np.zeros(total_blocks, dtype=bool)
+    keep_mask[keep_idx] = True
+    keep_mask = keep_mask.reshape(mb, nb)
+
+    values, col_idx, row_ptr = [], [], [0]
+    for br in range(mb):
+        for bc in range(nb):
+            if keep_mask[br, bc]:
+                values.append(blocks[br, bc])
+                col_idx.append(bc)
+        row_ptr.append(len(col_idx))
+    return CompressedResidual(
+        method="block",
+        shape=(dp.shape[0], dp.shape[1]),
+        block_values=np.stack(values).astype(np.float32),
+        block_col_idx=np.asarray(col_idx, dtype=np.int32),
+        block_row_ptr=np.asarray(row_ptr, dtype=np.int32),
+        block_shape=block_shape,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Truncated SVD (paper's SVD variant; Denton et al. 2014)
+# ---------------------------------------------------------------------------
+
+
+def svd_rank_for_ratio(m: int, n: int, keep_ratio: float) -> int:
+    """Rank r such that r*(m+n) ~= keep_ratio*m*n (Appendix A.4)."""
+    return max(1, int(round(keep_ratio * m * n / (m + n))))
+
+
+def compress_svd(
+    delta: np.ndarray, keep_ratio: float, rank: Optional[int] = None
+) -> CompressedResidual:
+    d = np.asarray(delta, dtype=np.float32)
+    m, n = d.shape
+    r = rank if rank is not None else svd_rank_for_ratio(m, n, keep_ratio)
+    r = min(r, min(m, n))
+    u, s, vt = np.linalg.svd(d.astype(np.float64), full_matrices=False)
+    sq = np.sqrt(s[:r])
+    uu = (u[:, :r] * sq[None, :]).astype(np.float32)
+    vv = (sq[:, None] * vt[:r]).astype(np.float32)
+    return CompressedResidual(method="svd", shape=(m, n), u=uu, v=vv)
+
+
+def compress_residual(
+    delta: np.ndarray,
+    method: str,
+    keep_ratio: float,
+    block_shape: Tuple[int, int] = (8, 128),
+    rank: Optional[int] = None,
+) -> CompressedResidual:
+    if method == "up":
+        return prune_unstructured(delta, keep_ratio)
+    if method == "block":
+        return prune_block(delta, keep_ratio, block_shape)
+    if method == "svd":
+        return compress_svd(delta, keep_ratio, rank)
+    if method == "none":
+        return CompressedResidual(method="none", shape=tuple(delta.shape))
+    raise ValueError(f"unknown residual method: {method}")

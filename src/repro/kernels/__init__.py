@@ -1,0 +1,21 @@
+"""Pallas TPU kernels (validated in interpret mode against ref oracles):
+
+  * resmoe_lowrank — fused restore-free ResMoE-SVD matmul (hot path)
+  * block_sparse   — BCSR residual matmul (TPU adaptation of UP)
+  * wkv6           — chunked RWKV6 recurrence (state VMEM-resident)
+"""
+from .block_sparse import block_sparse_matmul, prepare_bcsr
+from .ops import bcsr_from_residual, resmoe_block_apply, resmoe_svd_apply
+from .resmoe_lowrank import lowrank_restore_matmul
+from .wkv6 import wkv6_chunk, wkv6_ref
+
+__all__ = [
+    "block_sparse_matmul",
+    "prepare_bcsr",
+    "bcsr_from_residual",
+    "resmoe_block_apply",
+    "resmoe_svd_apply",
+    "lowrank_restore_matmul",
+    "wkv6_chunk",
+    "wkv6_ref",
+]

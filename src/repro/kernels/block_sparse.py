@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: block-sparse residual matmul (BCSR, scalar prefetch).
+
+TPU adaptation of ResMoE's unstructured-pruning residuals (DESIGN.md §4.1):
+residual Delta is pruned at tile granularity and stored as coordinate blocks
+
+    values [nnzb, bk, bn], block_row [nnzb], block_col [nnzb]
+
+The kernel computes  y = x @ Delta  visiting ONLY the surviving blocks.
+Blocks are pre-sorted by column tile so that every output tile is visited in
+one consecutive run of grid steps — the accumulator tile stays resident in
+VMEM across the run and is stored exactly once (Pallas's revisiting rule).
+``is_first`` (scalar-prefetched) marks the head of each run so the tile is
+initialized rather than accumulated.  Host-side preparation pads the block
+list so every output column tile has at least one (possibly zero) block.
+
+Grid: (M/bm, nnzb) — j (the block index) innermost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(brow_ref, bcol_ref, first_ref, x_ref, v_ref, o_ref):
+    j = pl.program_id(1)
+    contrib = jnp.dot(x_ref[...], v_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(first_ref[j] == 1)
+    def _set():
+        o_ref[...] = contrib.astype(o_ref.dtype)
+
+    @pl.when(first_ref[j] == 0)
+    def _add():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + contrib).astype(o_ref.dtype)
+
+
+def prepare_bcsr(
+    values: np.ndarray,  # [nnzb, bk, bn]
+    block_row: np.ndarray,
+    block_col: np.ndarray,
+    n_col_blocks: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Sort blocks by column tile; pad so every column tile is covered.
+
+    Returns (values, block_row, block_col, is_first) ready for the kernel.
+    """
+    values = np.asarray(values)
+    block_row = np.asarray(block_row, np.int32)
+    block_col = np.asarray(block_col, np.int32)
+    order = np.argsort(block_col, kind="stable")
+    values, block_row, block_col = values[order], block_row[order], block_col[order]
+    present = np.zeros(n_col_blocks, bool)
+    present[block_col] = True
+    missing = np.flatnonzero(~present).astype(np.int32)
+    if missing.size:
+        pad_vals = np.zeros((missing.size,) + values.shape[1:], values.dtype)
+        values = np.concatenate([values, pad_vals])
+        block_row = np.concatenate([block_row, np.zeros(missing.size, np.int32)])
+        block_col = np.concatenate([block_col, missing])
+        order = np.argsort(block_col, kind="stable")
+        values, block_row, block_col = values[order], block_row[order], block_col[order]
+    is_first = np.ones(len(block_col), np.int32)
+    is_first[1:] = (block_col[1:] != block_col[:-1]).astype(np.int32)
+    return values, block_row, block_col, is_first
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bm", "interpret", "out_dtype"))
+def block_sparse_matmul(
+    x: jnp.ndarray,  # [M, K]
+    values: jnp.ndarray,  # [nnzb, bk, bn] (column-sorted, padded)
+    block_row: jnp.ndarray,  # [nnzb] int32
+    block_col: jnp.ndarray,  # [nnzb] int32
+    is_first: jnp.ndarray,  # [nnzb] int32
+    *,
+    n: int,
+    bm: int = 128,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, k = x.shape
+    nnzb, bk, bn = values.shape
+    out_dtype = out_dtype or x.dtype
+    pm = (-m) % bm
+    pk = (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    mp = x.shape[0]
+    pn = (-n) % bn
+    np_ = n + pn
+
+    grid = (mp // bm, nnzb)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, brow, bcol, first: (i, brow[j])),
+                pl.BlockSpec((1, bk, bn), lambda i, j, brow, bcol, first: (j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (bm, bn), lambda i, j, brow, bcol, first: (i, bcol[j])
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=interpret,
+    )(block_row, block_col, is_first, x, values)
+    return out[:m, :n]

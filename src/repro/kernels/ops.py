@@ -1,0 +1,74 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU these lower to Mosaic; on CPU (this container) they run the kernel
+body in interpret mode, which is how the test-suite validates them against
+the ref.py oracles.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .block_sparse import block_sparse_matmul, prepare_bcsr
+from .resmoe_lowrank import lowrank_restore_matmul
+
+
+def resmoe_svd_apply(
+    x: jnp.ndarray,  # [T, K]
+    center: jnp.ndarray,  # [K, N]
+    u: jnp.ndarray,  # row factor in design layout
+    v: jnp.ndarray,  # col factor
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Restore-free expert matmul y = x @ (center + (u@v in weight layout)).
+
+    ``u``: [f, r] design-row factor, ``v``: [r, K] design-col slice for this
+    segment; weight-layout correction for a [K, f] weight is v^T @ u^T, so
+    the kernel's (A, B) are (v^T [K,r], u^T [r, f]=N).
+    """
+    a = v.T  # [K, r]
+    b = u.T  # [r, N]
+    return lowrank_restore_matmul(x, center, a, b, interpret=interpret)
+
+
+def resmoe_block_apply(
+    x: jnp.ndarray,  # [T, K]
+    center: jnp.ndarray,  # [K, N]
+    bcsr: dict,  # values/col_idx/row_ptr/block_shape from CompressedResidual
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """y = x @ (center + Delta_bcsr): dense base matmul + sparse kernel.
+
+    The BCSR store indexes the residual in *design layout* [f, dd]; callers
+    pass the per-segment slice already transposed to weight layout via
+    :func:`bcsr_segment_weight_layout`.
+    """
+    n = center.shape[1]
+    base = x.astype(jnp.float32) @ center.astype(jnp.float32)
+    vals, brow, bcol, first = bcsr["values"], bcsr["block_row"], bcsr["block_col"], bcsr["is_first"]
+    sparse = block_sparse_matmul(
+        x, vals, brow, bcol, first, n=n, interpret=interpret
+    )
+    return base + sparse
+
+
+def bcsr_from_residual(res, n_cols: int) -> dict:
+    """CompressedResidual(method='block') -> kernel-ready arrays."""
+    bm, bn = res.block_shape
+    row_ptr = np.asarray(res.block_row_ptr)
+    nrows = len(row_ptr) - 1
+    block_row = np.repeat(np.arange(nrows, dtype=np.int32), np.diff(row_ptr))
+    vals, brow, bcol, first = prepare_bcsr(
+        res.block_values, block_row, res.block_col_idx, -(-n_cols // bn)
+    )
+    return {
+        "values": jnp.asarray(vals),
+        "block_row": jnp.asarray(brow),
+        "block_col": jnp.asarray(bcol),
+        "is_first": jnp.asarray(first),
+    }

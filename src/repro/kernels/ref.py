@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def lowrank_restore_matmul_ref(
+    x: jnp.ndarray,  # [M, K]
+    w: jnp.ndarray,  # [K, N]  barycenter weight
+    a: jnp.ndarray,  # [K, R]  residual row factor
+    b: jnp.ndarray,  # [R, N]  residual col factor
+) -> jnp.ndarray:
+    """y = x @ (W + A @ B), computed restore-free."""
+    return x.astype(jnp.float32) @ w.astype(jnp.float32) + (
+        x.astype(jnp.float32) @ a.astype(jnp.float32)
+    ) @ b.astype(jnp.float32)
+
+
+def block_sparse_matmul_ref(
+    x: jnp.ndarray,  # [M, K]
+    values: jnp.ndarray,  # [nnzb, bk, bn]
+    block_row: jnp.ndarray,  # [nnzb] int32
+    block_col: jnp.ndarray,  # [nnzb] int32
+    n: int,
+) -> jnp.ndarray:
+    """y = x @ D where D is block-sparse (BCSR coordinates), via densify."""
+    m, k = x.shape
+    nnzb, bk, bn = values.shape
+    d = np.zeros((k, n), np.float32)
+    vals = np.asarray(values, np.float32)
+    br = np.asarray(block_row)
+    bc = np.asarray(block_col)
+    for p in range(nnzb):
+        d[br[p] * bk : (br[p] + 1) * bk, bc[p] * bn : (bc[p] + 1) * bn] += vals[p]
+    return x.astype(jnp.float32) @ jnp.asarray(d)
+
+
+def swiglu_expert_ref(x, w1, w3, w2):
+    """y = (silu(x@w1) * (x@w3)) @ w2 — oracle for the fused expert kernel."""
+    import jax
+
+    xf = x.astype(jnp.float32)
+    h = jax.nn.silu(xf @ w1.astype(jnp.float32)) * (xf @ w3.astype(jnp.float32))
+    return h @ w2.astype(jnp.float32)

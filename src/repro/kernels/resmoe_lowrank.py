@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused restore-free ResMoE-SVD matmul.
+
+Computes  y = x @ (W + A @ B)  without materializing W + A@B in HBM:
+
+    y[m, n] = sum_k x[m,k] W[k,n]  +  sum_r (sum_k x[m,k] A[k,r]) B[r,n]
+
+Grid (M/bm, N/bn, K/bk), k innermost.  Per (m, n) pass we accumulate both
+the dense partial product and the low-rank projection t = x@A in VMEM
+scratch (f32), and flush  acc + t @ B_tile  on the last k step.  The MXU
+sees two back-to-back matmuls per step; W streams HBM->VMEM exactly once
+per (m, n) tile — the memory-bandwidth property that makes the paper's
+restore step free on TPU (DESIGN.md §4.2).
+
+Block shapes are MXU-aligned (multiples of 8 x 128); R (the residual rank)
+is kept whole in VMEM — ResMoE ranks are small (keep_ratio * K*N/(K+N),
+e.g. 736 for a Mixtral expert at 25%).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, t_ref, *, n_k: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    t_ref[...] += jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _flush():
+        lowrank = jnp.dot(
+            t_ref[...].astype(b_ref.dtype), b_ref[...],
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[...] = (acc_ref[...] + lowrank).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def lowrank_restore_matmul(
+    x: jnp.ndarray,  # [M, K]
+    w: jnp.ndarray,  # [K, N]
+    a: jnp.ndarray,  # [K, R]
+    b: jnp.ndarray,  # [R, N]
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, k = x.shape
+    kk, n = w.shape
+    r = a.shape[1]
+    assert kk == k and a.shape[0] == k and b.shape == (r, n), (
+        x.shape, w.shape, a.shape, b.shape)
+    out_dtype = out_dtype or x.dtype
+
+    # pad every dim to its block multiple (kernel-internal; sliced on exit)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    pr = (-r) % 128
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    if pk or pr:
+        a = jnp.pad(a, ((0, pk), (0, pr)))
+    if pr or pn:
+        b = jnp.pad(b, ((0, pr), (0, pn)))
+    mp, kp = x.shape
+    np_ = w.shape[1]
+    rp = a.shape[1]
+    n_k = kp // bk
+
+    grid = (mp // bm, np_ // bn, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk, rp), lambda i, j, s: (s, 0)),
+            pl.BlockSpec((rp, bn), lambda i, j, s: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, rp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, a, b)
+    return out[:m, :n]

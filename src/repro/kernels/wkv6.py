@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: chunked RWKV6 (wkv) recurrence.
+
+The roofline analysis (EXPERIMENTS.md §Roofline) shows rwkv6 train/prefill
+memory terms dominated by per-timestep state traffic: the lax.scan lowering
+reads+writes the [H, hd, hd] state from HBM every token.  This kernel keeps
+the state resident in VMEM across a whole sequence chunk — state HBM
+traffic drops by the chunk length (e.g. 512x).
+
+Grid: (batch*heads,).  Each program owns one head's state and walks the
+time dimension with a fori_loop over VMEM-resident r/k/v/w blocks:
+
+    y_t = r_t @ (S + u * (k_t v_t^T));   S <- diag(w_t) S + k_t v_t^T
+
+Shapes per program: r/k/v/w [T, hd]; state scratch [hd, hd] f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, s_scr):
+    s_scr[...] = s0_ref[0]
+    t_len = r_ref.shape[1]
+
+    def step(t, _):
+        rt = r_ref[0, t, :]  # [hd]
+        kt = k_ref[0, t, :]
+        vt = v_ref[0, t, :]
+        wt = w_ref[0, t, :]
+        kv = kt[:, None] * vt[None, :]  # [hd, hd]
+        s = s_scr[...]
+        y = jnp.sum(rt[:, None] * (s + u_ref[0][:, None] * kv), axis=0)
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        s_scr[...] = wt[:, None] * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, t_len, step, 0)
+    sT_ref[0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6_chunk(
+    r: jnp.ndarray,  # [BH, T, hd]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,  # decay in (0, 1)
+    u: jnp.ndarray,  # [BH, hd] bonus
+    s0: jnp.ndarray,  # [BH, hd, hd] incoming state
+    *,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [BH, T, hd], s_final [BH, hd, hd])."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bh, t, hd = r.shape
+    grid = (bh,)
+    y, s_fin = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, hd), lambda i: (i, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_fin
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Pure-jnp oracle (same math as models.recurrent._wkv6_scan)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[:, :, None] * vt[:, None, :]
+        y = jnp.sum(rt[:, :, None] * (s + u[:, :, None] * kv), axis=1)
+        s = wt[:, :, None] * s + kv
+        return s, y
+
+    xs = tuple(x.swapaxes(0, 1) for x in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), s_fin

@@ -1,0 +1,354 @@
+import os
+
+if __name__ == "__main__" or os.environ.get("REPRO_DRYRUN") == "1":
+    # MUST run before any jax import — jax locks the device count on first
+    # init. Guarded so that merely importing this module (tests, benchmarks)
+    # does NOT leak 512 placeholder devices into the process.
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build abstract params/caches (ShapeDtypeStruct — zero
+allocation), jit the production step with explicit in/out shardings, then
+
+    lowered  = jax.jit(step, ...).lower(**input_specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # fits-on-chip evidence
+    print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+and additionally parse the post-SPMD HLO for per-device collective bytes
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute)
+— cost_analysis does not expose them.  Results land in one JSON per cell
+under --out (benchmarks/roofline consumes them).
+
+NOTE the import-order contract: XLA_FLAGS is set above BEFORE any jax
+import so the CPU platform exposes 512 placeholder devices.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    """Sum bytes of every typed shape literal in ``txt``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes by collective kind, from the post-SPMD module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "fusion" in ls.split("(")[0]:
+            continue
+        for kind in _COLLECTIVES:
+            # match the op name as the instruction, e.g. "= bf16[...] all-gather("
+            if re.search(rf"=\s*[\w\[\],\{{}}\s]*{kind}(-start|-done)?\(", ls):
+                # operand bytes: shapes inside the call parens
+                call = ls.split(f"{kind}", 1)[1]
+                inner = call[call.find("(") + 1 :]
+                depth = 1
+                buf = []
+                for ch in inner:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    buf.append(ch)
+                operand_bytes = _shape_bytes("".join(buf))
+                result_bytes = _shape_bytes(ls.split("=", 1)[1].split(kind)[0])
+                if kind == "all-gather":
+                    moved = result_bytes  # each device receives the gathered
+                elif kind in ("all-reduce", "collective-permute"):
+                    moved = result_bytes
+                else:  # reduce-scatter / all-to-all: operand leaves the device
+                    moved = operand_bytes
+                if "-done(" in ls:
+                    moved = 0  # avoid double counting start/done pairs
+                out[kind] += moved
+                counts[kind] += 1
+                break
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    microbatches: Optional[int] = None,
+    sharding_overrides: Optional[Dict[str, Optional[str]]] = None,
+    apply_mode: Optional[str] = None,
+    compressed: bool = False,
+):
+    """Lower one (arch, shape, mesh) cell; returns (lowered, meta)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import SHAPES, get_config
+    from ..models import build_model
+    from ..optim import cosine_warmup_schedule, make_optimizer
+    from ..sharding import make_rules, shardings_from_axes, use_rules
+    from .train import _opt_shardings, make_train_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    rules = make_rules(mesh, overrides=sharding_overrides)
+    if compressed:
+        from ..models.model import abstract_compressed_params
+
+        abs_params, axes = abstract_compressed_params(cfg)
+    else:
+        abs_params, axes = model.abstract_params()
+    param_sh = shardings_from_axes(axes, rules, abs_params)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def batch_sh(tree):
+        def one(v):
+            axes = ("batch",) + (None,) * (len(v.shape) - 1)
+            return rules.sharding_for(axes, tuple(v.shape))
+        return jax.tree_util.tree_map(one, tree)
+
+    specs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        mb = microbatches if microbatches is not None else _default_microbatches(cfg, shape)
+        opt = make_optimizer(cfg.optimizer, cosine_warmup_schedule(3e-4, 100, 10000))
+        abs_opt = jax.eval_shape(opt.init, abs_params)
+        opt_sh = _opt_shardings(abs_opt, abs_params, param_sh, mesh)
+        step = make_train_step(model, opt, microbatches=mb)
+
+        def fn(params, opt_state, batch):
+            with use_rules(rules):
+                return step(params, opt_state, batch)
+
+        jitted = jax.jit(
+            fn,
+            in_shardings=(param_sh, opt_sh, batch_sh(specs)),
+            out_shardings=(param_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(abs_params, abs_opt, specs)
+        meta = dict(kind="train", microbatches=mb)
+    elif shape.kind == "prefill":
+        def fn(params, batch):
+            with use_rules(rules):
+                from ..models import transformer as _tfm
+
+                logits, _, _ = _tfm.forward(
+                    params, batch, cfg, apply_mode=apply_mode, last_only=True
+                )
+                return logits[:, -1, ...]
+
+        jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh(specs)),
+                         out_shardings=None)
+        with mesh:
+            lowered = jitted.lower(abs_params, specs)
+        meta = dict(kind="prefill")
+    else:  # decode
+        cache_abs, cache_axes = model.abstract_cache(shape.global_batch, shape.seq_len)
+        cache_sh = shardings_from_axes(cache_axes, rules, cache_abs)
+        pos = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+        def fn(params, batch, cache, positions):
+            with use_rules(rules):
+                logits, new_cache = model.decode_step(
+                    params, batch, cache, positions, apply_mode=apply_mode
+                )
+                return logits, new_cache
+
+        jitted = jax.jit(
+            fn,
+            in_shardings=(param_sh, batch_sh(specs), cache_sh,
+                          rules.sharding_for(("batch", None),
+                                             (shape.global_batch, 1))),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(2,),
+        )
+        with mesh:
+            lowered = jitted.lower(abs_params, specs, cache_abs, pos)
+        meta = dict(kind="decode")
+    return lowered, meta
+
+
+def _default_microbatches(cfg, shape) -> int:
+    """Activation-memory-driven default: keep the live microbatch modest."""
+    tokens = shape.seq_len * shape.global_batch
+    # target ~64k tokens per microbatch for d_model>=8k, 128k otherwise
+    target = 65536 if cfg.d_model >= 8192 else 131072
+    mb = max(1, tokens // target)
+    while shape.global_batch % mb:
+        mb -= 1
+    return mb
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             **kw) -> Dict[str, Any]:
+    import jax
+
+    from .mesh import make_production_mesh
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record: Dict[str, Any] = dict(
+        arch=arch, shape=shape_name, mesh=mesh_name, status="ok",
+    )
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh, **kw)
+        record.update(meta)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        try:
+            mem = compiled.memory_analysis()
+            record["memory_analysis"] = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # pragma: no cover — backend-dependent
+            record["memory_analysis"] = {"error": repr(e)}
+        try:
+            ca = compiled.cost_analysis()
+            record["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "bytes accessed", "optimal_seconds")
+                    or k.startswith("bytes accessed")
+                    or k.startswith("utilization")
+                )
+            }
+        except Exception as e:
+            record["cost_analysis"] = {"error": repr(e)}
+        try:
+            hlo = compiled.as_text()
+            record["collectives"] = collective_bytes_from_hlo(hlo)
+            record["hlo_ops"] = _op_histogram(hlo)
+            # trip-count-aware re-derivation (cost_analysis counts loop
+            # bodies once — see hlo_cost.py)
+            from .hlo_cost import analyze_hlo_text
+
+            record["hlo_cost"] = analyze_hlo_text(hlo)
+        except Exception as e:
+            record["collectives"] = {"error": repr(e)}
+        record["lower_s"] = round(t1 - t0, 2)
+        record["compile_s"] = round(t2 - t1, 2)
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"(lower {record['lower_s']}s, compile {record['compile_s']}s)")
+        ma = record.get("memory_analysis", {})
+        print("  memory_analysis:", ma)
+        ca = record.get("cost_analysis", {})
+        print("  cost_analysis: flops=%.3e bytes=%.3e" % (
+            ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
+        print("  collectives:", record.get("collectives", {}).get("bytes"))
+    except Exception as e:
+        record["status"] = "fail"
+        record["error"] = repr(e)
+        record["traceback"] = traceback.format_exc()
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {e!r}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "_".join(str(v) for v in kw.values() if v is not None)
+        fname = f"{arch}__{shape_name}__{mesh_name}" + (f"__{suffix}" if suffix else "")
+        with open(os.path.join(out_dir, fname + ".json"), "w") as fh:
+            json.dump(record, fh, indent=1)
+    return record
+
+
+def _op_histogram(hlo: str) -> Dict[str, int]:
+    hist: Dict[str, int] = {}
+    for m in re.finditer(r"=\s*[\w\[\],\{}\s]*?(\b[a-z][\w-]*)\(", hlo):
+        op = m.group(1)
+        hist[op] = hist.get(op, 0) + 1
+    return {k: v for k, v in sorted(hist.items(), key=lambda kv: -kv[1])[:40]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="dryrun_results")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--apply-mode", default=None)
+    args = ap.parse_args()
+
+    from ..configs import ASSIGNED, applicable_shapes, get_config
+
+    cells = []
+    if args.all:
+        for name, cfg in ASSIGNED.items():
+            for sh in applicable_shapes(cfg):
+                cells.append((name, sh.name))
+    else:
+        shapes = [args.shape] if args.shape else [
+            s.name for s in applicable_shapes(get_config(args.arch))
+        ]
+        for sh in shapes:
+            cells.append((args.arch, sh))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            results.append(run_cell(arch, shape, mp, args.out,
+                                    microbatches=args.microbatches,
+                                    apply_mode=args.apply_mode))
+    ok = sum(r["status"] == "ok" for r in results)
+    print(f"[dryrun] {ok}/{len(results)} cells passed")
+    if ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because the dry-run
+must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) data x model single pod, or (2,16,16) pod x data x model."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    from jax.sharding import Mesh
+
+    dev = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh over the first prod(shape) devices (tests, examples)."""
+    import jax
+    from jax.sharding import Mesh
+
+    need = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:need]).reshape(shape)
+    return Mesh(dev, axes)

@@ -1,0 +1,309 @@
+"""Production training driver: pjit train step, microbatching, remat,
+checkpoint/restart, straggler logging, optional int8 DP grad compression.
+
+Step construction is pure (``make_train_step``) so the dry-run can lower the
+exact production computation; the CLI (``python -m repro.launch.train``)
+wires in the data pipeline, checkpointer and supervisor.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import logging
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..checkpoint import Checkpointer, latest_step
+from ..configs import get_config, reduced_config
+from ..data import make_pipeline
+from ..models import build_model
+from ..optim import (
+    compress_decompress_allreduce,
+    init_grad_compression,
+    make_optimizer,
+    cosine_warmup_schedule,
+)
+from ..runtime import StragglerDetector, TrainSupervisor
+from ..sharding import make_rules, shardings_from_axes, split_logical, use_rules
+
+log = logging.getLogger("repro.train")
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model, optimizer, microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` splits the global batch on axis 0 and accumulates
+    grads with a lax.scan (activation memory / #microbatches).
+    """
+    cfg = model.cfg
+
+    def loss_of(params, mb):
+        return model.loss(params, mb, remat=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch
+            )
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(split, batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def acc(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    params, mb
+                )
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, loss_acc + loss), metrics
+
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc, (zero_g, jnp.zeros((), jnp.float32)), mbs
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+
+        new_params, new_opt, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_dp_compressed_train_step(model, optimizer, mesh, dp_axis: str = "data"):
+    """Pure-DP training with int8 error-feedback gradient all-reduce.
+
+    Params/opt-state replicated, batch sharded over ``dp_axis``; the grad
+    collective is an explicit shard_map psum over quantized payloads
+    (DESIGN.md §5). Use on DP-only meshes.
+    """
+    from jax import shard_map
+
+    def step(params, opt_state, comp_state, batch):
+        def per_shard(params, comp_err, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, remat=False)[0]
+            )(params)
+            from ..optim.compression import GradCompressionState
+
+            grads, new_comp = compress_decompress_allreduce(
+                grads, GradCompressionState(comp_err), dp_axis
+            )
+            loss = jax.lax.pmean(loss, dp_axis)
+            return grads, new_comp.error, loss
+
+        pspec_rep = jax.tree_util.tree_map(lambda _: P(), params)
+        pspec_err = jax.tree_util.tree_map(lambda _: P(), comp_state.error)
+        bspec = jax.tree_util.tree_map(lambda _: P(dp_axis), batch)
+        grads, new_err, loss = shard_map(
+            per_shard,
+            mesh=mesh,
+            in_specs=(pspec_rep, pspec_err, bspec),
+            out_specs=(pspec_rep, pspec_err, P()),
+        )(params, comp_state.error, batch)
+        new_params, new_opt, om = optimizer.update(grads, opt_state, params)
+        from ..optim.compression import GradCompressionState
+
+        return new_params, new_opt, GradCompressionState(new_err), {
+            "loss": loss, **om
+        }
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Jit wiring with shardings
+# ---------------------------------------------------------------------------
+
+
+def jit_train_step(model, optimizer, mesh, rules=None, microbatches: int = 1,
+                   donate: bool = True):
+    """Returns (jitted step, param_shardings, opt_shardings, batch_sharding_fn)."""
+    rules = rules or make_rules(mesh)
+    abs_params, axes = model.abstract_params()
+    param_sh = shardings_from_axes(axes, rules, abs_params)
+    abs_opt = jax.eval_shape(optimizer.init, abs_params)
+    # opt state: factored stats inherit the param sharding where shapes match
+    opt_sh = _opt_shardings(abs_opt, abs_params, param_sh, mesh)
+
+    def batch_shardings(batch_tree):
+        return jax.tree_util.tree_map(
+            lambda x: NamedSharding(
+                mesh, P(tuple(rules.batch_axes) if len(rules.batch_axes) > 1
+                        else rules.batch_axes[0])
+            ),
+            batch_tree,
+        )
+
+    step = make_train_step(model, optimizer, microbatches=microbatches)
+
+    def wrapped(params, opt_state, batch):
+        with use_rules(rules):
+            return step(params, opt_state, batch)
+
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=(param_sh, opt_sh, None),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, param_sh, opt_sh, batch_shardings
+
+
+def _opt_shardings(abs_opt, abs_params, param_sh, mesh):
+    """Match optimizer-state leaves to param shardings by shape; else replicate.
+
+    AdamW m/v mirror params exactly; Adafactor vr/vc are reductions — their
+    sharding drops the reduced axis. We re-derive by shape matching against
+    the param of the same subtree path prefix.
+    """
+    import jax.tree_util as jtu
+
+    p_flat = {tuple(str(k) for k in path): (leaf, sh) for (path, leaf), (_, sh) in zip(
+        jtu.tree_flatten_with_path(abs_params)[0],
+        jtu.tree_flatten_with_path(param_sh)[0],
+    )}
+
+    def best(path, leaf):
+        keys = tuple(str(k) for k in path)
+        # strip optimizer-state prefixes like ['m'] / ['stats'] / suffix 'vr'
+        for start in range(len(keys)):
+            sub = keys[start:]
+            for end in range(len(sub), 0, -1):
+                cand = sub[:end]
+                if cand in p_flat:
+                    pl, sh = p_flat[cand]
+                    if tuple(pl.shape) == tuple(leaf.shape):
+                        return sh
+                    # factored stats: match a reduced shape -> drop last axes
+                    if tuple(pl.shape[: len(leaf.shape)]) == tuple(leaf.shape) or \
+                       tuple(pl.shape[:-2] + pl.shape[-1:]) == tuple(leaf.shape):
+                        spec = sh.spec
+                        return NamedSharding(mesh, P(*spec[: len(leaf.shape) - 1], None)
+                                             if len(spec) >= len(leaf.shape) else P())
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jtu.tree_flatten_with_path(abs_opt)
+    return jtu.tree_unflatten(treedef, [best(path, leaf) for path, leaf in flat])
+
+
+# ---------------------------------------------------------------------------
+# CLI driver
+# ---------------------------------------------------------------------------
+
+
+def run_training(
+    arch: str,
+    steps: int = 300,
+    seq_len: int = 256,
+    global_batch: int = 8,
+    lr: float = 3e-3,
+    ckpt_dir: Optional[str] = None,
+    checkpoint_every: int = 100,
+    reduced: bool = True,
+    microbatches: int = 1,
+    seed: int = 0,
+    log_every: int = 20,
+    fail_at: Tuple[int, ...] = (),
+) -> Dict[str, Any]:
+    cfg = reduced_config(arch) if reduced else get_config(arch)
+    model = build_model(cfg)
+    params_l = model.init(jax.random.PRNGKey(seed))
+    params, _ = split_logical(params_l)
+    opt = make_optimizer(cfg.optimizer, cosine_warmup_schedule(lr, 20, steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt, microbatches=microbatches),
+                      donate_argnums=(0, 1))
+    pipe = make_pipeline(cfg, seq_len, global_batch, seed=seed)
+    ckpt = Checkpointer(ckpt_dir, keep=2) if ckpt_dir else None
+    losses = []
+
+    from ..runtime import FailureInjector
+
+    injector = FailureInjector(fail_at_steps=fail_at)
+
+    def one_step(step, state):
+        params, opt_state = state
+        injector.maybe_fail(step)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            l = float(metrics["loss"])
+            losses.append((step, l))
+            log.info("step %d loss %.4f", step, l)
+        return params, opt_state
+
+    def save(step, state):
+        if ckpt:
+            ckpt.save_async(step, {"params": state[0], "opt": state[1]})
+
+    def restore():
+        if not ckpt:
+            raise RuntimeError("no checkpoint dir configured")
+        ckpt.wait()
+        s = latest_step(ckpt.directory)
+        if s is None:
+            return 0, (params, opt_state)
+        tree, _ = ckpt.restore(s, {"params": params, "opt": opt_state})
+        return s, (tree["params"], tree["opt"])
+
+    sup = TrainSupervisor(one_step, save, restore, checkpoint_every=checkpoint_every)
+    state, final_step = sup.run((params, opt_state), 0, steps)
+    if ckpt:
+        ckpt.save(final_step, {"params": state[0], "opt": state[1]})
+        ckpt.wait()
+    return {
+        "losses": losses,
+        "final_step": final_step,
+        "restarts": sup.restarts,
+        "params": state[0],
+        "straggler_flags": sup.straggler.flagged,
+    }
+
+
+def main():
+    logging.basicConfig(level=logging.INFO)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true", help="use the full config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    out = run_training(
+        args.arch, steps=args.steps, seq_len=args.seq_len, global_batch=args.batch,
+        lr=args.lr, reduced=not args.full, ckpt_dir=args.ckpt_dir,
+        microbatches=args.microbatches,
+    )
+    print("final losses:", out["losses"][-3:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Model substrate: attention/recurrent mixers, FFN/MoE, transformer assembly."""
+from .model import Model, build_model, compress_model_params, iter_moe_banks
+from .transformer import build_plan, forward, init_cache, init_params, layer_specs, loss_fn
+
+__all__ = [
+    "Model",
+    "build_model",
+    "compress_model_params",
+    "iter_moe_banks",
+    "build_plan",
+    "forward",
+    "init_cache",
+    "init_params",
+    "layer_specs",
+    "loss_fn",
+]

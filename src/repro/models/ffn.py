@@ -1,0 +1,32 @@
+"""Dense feed-forward layers (MLP / SwiGLU)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import LogicalParam, hint
+from .layers import activation_fn, dense_param
+
+
+def init_ffn(key, d_model: int, d_ff: int, glu: bool, dtype) -> Dict[str, LogicalParam]:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": dense_param(ks[0], (d_model, d_ff), ("embed", "mlp"), dtype),
+        "w2": dense_param(ks[1], (d_ff, d_model), ("mlp", "embed"), dtype, fan_in=d_ff),
+    }
+    if glu:
+        p["w3"] = dense_param(ks[2], (d_model, d_ff), ("embed", "mlp"), dtype)
+    return p
+
+
+def ffn(params: Dict[str, jnp.ndarray], x: jnp.ndarray, activation: str = "silu") -> jnp.ndarray:
+    act = activation_fn(activation)
+    h = jnp.einsum("...d,df->...f", x, params["w1"])
+    h = act(h)
+    if "w3" in params:
+        h = h * jnp.einsum("...d,df->...f", x, params["w3"])
+    h = hint(h, ("batch", "seq", "mlp")) if h.ndim == 3 else h
+    return jnp.einsum("...f,fd->...d", h, params["w2"])

@@ -1,0 +1,144 @@
+"""Basic layers: norms, RoPE, embeddings, initializers.
+
+All layers are pure functions over explicit param dicts; params are created
+through the ``init_*`` helpers which return trees of
+:class:`repro.sharding.LogicalParam` so the distribution layer can derive
+PartitionSpecs without a second source of truth.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import LogicalParam, hint
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def dense_param(key, shape: Tuple[int, ...], axes, dtype, fan_in: Optional[int] = None) -> LogicalParam:
+    fi = fan_in if fan_in is not None else shape[0]
+    return LogicalParam(normal_init(key, shape, 1.0 / math.sqrt(max(1, fi)), dtype), axes)
+
+
+def zeros_param(shape, axes, dtype=jnp.float32) -> LogicalParam:
+    return LogicalParam(jnp.zeros(shape, dtype=dtype), axes)
+
+
+def ones_param(shape, axes, dtype=jnp.float32) -> LogicalParam:
+    return LogicalParam(jnp.ones(shape, dtype=dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # Full f32 elementwise chain. A bf16-rescale variant was tried and
+    # REFUTED (+24% HBM traffic on llama3 train: the extra converts defeat
+    # fusion) — see EXPERIMENTS.md §Perf iter2.
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int) -> LogicalParam:
+    # stored as (weight - 1) like gemma; rms_norm adds the 1 back.
+    return zeros_param((d,), ("embed_act",))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray,  # [B, S, H, D]
+    positions: jnp.ndarray,  # [B, S]
+    theta,
+) -> jnp.ndarray:
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))  # [D/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs[None, None, :]  # [B,S,D/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> LogicalParam:
+    # sigma = 1/sqrt(d): unit-variance inputs after the sqrt(d) embed scale
+    # AND O(1) logits under tied readout.
+    return LogicalParam(normal_init(key, (vocab, d), d ** -0.5, dtype), ("vocab", "embed"))
+
+
+def embed_tokens(table: jnp.ndarray, tokens: jnp.ndarray, scale: bool = True) -> jnp.ndarray:
+    out = jnp.take(table, tokens, axis=0)
+    if scale:
+        out = out * jnp.asarray(math.sqrt(table.shape[1]), out.dtype)
+    return out
+
+
+def logits_from_embedding(table: jnp.ndarray, x: jnp.ndarray,
+                          softcap: float = 0.0) -> jnp.ndarray:
+    """Tied-embedding readout: x [..., d] @ table^T -> [..., vocab]."""
+    logits = jnp.einsum("...d,vd->...v", x, table)
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,  # [..., V]
+    labels: jnp.ndarray,  # [...]
+    mask: Optional[jnp.ndarray] = None,
+    z_loss: float = 0.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over unmasked tokens (f32 math). Returns (loss, denom)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss > 0.0:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = jnp.asarray(nll.size, jnp.float32)
+    return nll.sum() / denom, denom

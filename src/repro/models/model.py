@@ -1,0 +1,300 @@
+"""Model facade: init/loss/prefill/decode + shape specs + ResMoE adapters."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..sharding import LogicalParam, split_logical
+from . import transformer as tfm
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, rng) -> PyTree:
+        """Concrete params as a LogicalParam tree."""
+        return tfm.init_params(rng, self.cfg)
+
+    def init_split(self, rng) -> Tuple[PyTree, PyTree]:
+        return split_logical(self.init(rng))
+
+    def abstract_params(self) -> Tuple[PyTree, PyTree]:
+        """(ShapeDtypeStruct tree, logical-axes tree) without allocation."""
+        tree = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), self.cfg))
+        values, axes = split_logical(tree)
+        return values, axes
+
+    # -- caches ----------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_seq: int) -> PyTree:
+        return tfm.init_cache(self.cfg, batch, max_seq)
+
+    def abstract_cache(self, batch: int, max_seq: int) -> Tuple[PyTree, PyTree]:
+        tree = jax.eval_shape(lambda: tfm.init_cache(self.cfg, batch, max_seq))
+        return split_logical(tree)
+
+    # -- compute ---------------------------------------------------------------
+
+    def loss(self, params, batch, remat: bool = True):
+        return tfm.loss_fn(params, batch, self.cfg, remat=remat)
+
+    def forward(self, params, batch, apply_mode: Optional[str] = None):
+        logits, _, aux = tfm.forward(params, batch, self.cfg, apply_mode=apply_mode)
+        return logits, aux
+
+    def prefill(self, params, batch, cache, positions=None, last_only: bool = True):
+        logits, new_cache, _ = tfm.forward(
+            params, batch, self.cfg, cache=cache, positions=positions,
+            last_only=last_only,
+        )
+        return logits, new_cache
+
+    def decode_step(self, params, batch, cache, positions, apply_mode=None):
+        logits, new_cache, _ = tfm.forward(
+            params, batch, self.cfg, cache=cache, positions=positions,
+            apply_mode=apply_mode,
+        )
+        return logits, new_cache
+
+    # -- input specs (dry-run stand-ins; no allocation) --------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        b = shape.global_batch
+        s = shape.seq_len
+        i32 = jnp.int32
+        dt = jnp.bfloat16
+        if shape.kind == "train":
+            if cfg.frontend == "vision":
+                p = cfg.num_prefix_embeddings
+                st = s - p
+                return {
+                    "patch_embeddings": jax.ShapeDtypeStruct((b, p, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                    "labels": jax.ShapeDtypeStruct((b, st), i32),
+                }
+            if cfg.frontend == "audio":
+                return {
+                    "frame_embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                    "labels": jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if shape.kind == "prefill":
+            if cfg.frontend == "vision":
+                p = cfg.num_prefix_embeddings
+                return {
+                    "patch_embeddings": jax.ShapeDtypeStruct((b, p, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((b, s - p), i32),
+                }
+            if cfg.frontend == "audio":
+                return {"frame_embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        # decode: one new token against a seq_len-deep cache
+        if cfg.frontend == "audio":
+            return {"frame_embeddings": jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    def decode_positions_spec(self, shape: ShapeConfig) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def abstract_compressed_params(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
+    """ShapeDtypeStruct tree of the ResMoE-SVD compressed store (+ axes).
+
+    Mirrors what compress_model_params produces, without running the
+    barycenter — used by the dry-run to lower compressed serving at full
+    scale. Only method='svd' stores are supported abstractly (up/block keep
+    dense deltas and change no shapes worth dry-running).
+    """
+    import jax
+
+    from ..core.residual import svd_rank_for_ratio
+
+    if cfg.resmoe.method != "svd":
+        raise ValueError("abstract compressed store: method must be 'svd'")
+    values, axes = jax.eval_shape(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), cfg)
+    ), None
+    from ..sharding import LogicalParam, split_logical
+
+    tree = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    values, axes = split_logical(tree)
+    m = cfg.moe
+    d, f = cfg.d_model, m.expert_d_ff
+    dd = (3 * d) if cfg.glu else (2 * d)
+    r = svd_rank_for_ratio(f, dd, cfg.resmoe.keep_ratio)
+    f32 = jnp.bfloat16  # serving store dtype
+
+    for seg_v, seg_a in zip(values["segments"], axes["segments"]):
+        for slot_v, slot_a in zip(seg_v["slots"], seg_a["slots"]):
+            ffn_v = slot_v.get("ffn")
+            if not (isinstance(ffn_v, dict) and "router" in ffn_v
+                    and "w1" in ffn_v):
+                continue
+            stacked = len(ffn_v["w1"].shape) == 4
+            lead = ffn_v["w1"].shape[:1] if stacked else ()
+            e = ffn_v["w1"].shape[1 if stacked else 0]
+            lax = ("layers",) if stacked else ()
+            center_v = {
+                "w1": jax.ShapeDtypeStruct(lead + (d, f), f32),
+                "w2": jax.ShapeDtypeStruct(lead + (f, d), f32),
+            }
+            # center: replicated on d (operand xg carries full d), TP-
+            # sharded on f — kills the per-layer psums the data-sharded
+            # center caused (EXPERIMENTS.md §Perf deepseek iter2).
+            center_a = {
+                "w1": lax + (None, "mlp"),
+                "w2": lax + ("mlp", None),
+            }
+            v_v = {
+                "w1": jax.ShapeDtypeStruct(lead + (e, r, d), f32),
+                "w2": jax.ShapeDtypeStruct(lead + (e, r, d), f32),
+            }
+            v_a = {
+                "w1": lax + ("experts", "rank", "embed"),
+                "w2": lax + ("experts", "rank", "embed"),
+            }
+            if cfg.glu:
+                center_v["w3"] = jax.ShapeDtypeStruct(lead + (d, f), f32)
+                center_a["w3"] = lax + (None, "mlp")
+                v_v["w3"] = jax.ShapeDtypeStruct(lead + (e, r, d), f32)
+                v_a["w3"] = lax + ("experts", "rank", "embed")
+            for k in ("w1", "w2", "w3"):
+                slot_v["ffn"].pop(k, None)
+                slot_a["ffn"].pop(k, None)
+            slot_v["ffn"]["center"] = center_v
+            slot_a["ffn"]["center"] = center_a
+            slot_v["ffn"]["u"] = jax.ShapeDtypeStruct(lead + (e, f, r), f32)
+            slot_a["ffn"]["u"] = lax + ("experts", "expert_mlp", "rank")
+            slot_v["ffn"]["v"] = v_v
+            slot_a["ffn"]["v"] = v_a
+    return values, axes
+
+
+# ---------------------------------------------------------------------------
+# ResMoE <-> model param adapters
+# ---------------------------------------------------------------------------
+
+_EXPERT_KEYS = ("w1", "w2", "w3", "b1", "b3")
+
+
+def iter_moe_banks(params: PyTree):
+    """Yield (segment_idx, slot_idx, ffn_dict, stacked: bool) for MoE slots."""
+    for si, seg in enumerate(params["segments"]):
+        for li, slot in enumerate(seg["slots"]):
+            f = slot.get("ffn")
+            if isinstance(f, dict) and "router" in f and "w1" in f:
+                stacked = np.ndim(f["w1"]) == 4  # [R, E, d, ff]
+                yield si, li, f, stacked
+
+
+def compress_model_params(params: PyTree, cfg: ModelConfig, center: str = "wb"):
+    """Replace every MoE expert bank with its ResMoE compressed store.
+
+    Works on concrete (host) params; returns (new_params, report).
+    """
+    from ..core.api import CompressionReport, ResMoECompressor
+    from ..core.compress import design_matrices
+
+    rcfg = cfg.resmoe
+    comp = ResMoECompressor(rcfg, center=center)
+    params = jax.tree_util.tree_map(np.asarray, params)
+    reports = []
+    errs = []
+    total_orig = 0
+    total_comp = 0
+    layer_counter = 0
+
+    for si, li, f, stacked in iter_moe_banks(params):
+        reps = f["w1"].shape[0] if stacked else 1
+        new_layers = []
+        for r in range(reps):
+            bank = {
+                k: (f[k][r] if stacked else f[k]) for k in _EXPERT_KEYS if k in f
+            }
+            orig_bytes = sum(int(v.size) * 2 for v in bank.values())
+            total_orig += orig_bytes
+            if layer_counter < rcfg.first_layer:
+                new_layers.append(None)
+                total_comp += orig_bytes
+                layer_counter += 1
+                continue
+            lc = comp.compress_bank(bank, seed=layer_counter)
+            err = lc.approximation_error(design_matrices(bank))
+            cb = lc.storage_bytes(2)
+            reports.append(dict(layer=layer_counter, approx_error=err,
+                                original_bytes=orig_bytes, compressed_bytes=cb))
+            errs.append(err)
+            total_comp += cb
+            new_layers.append((lc, bank))
+            layer_counter += 1
+        _install_store(f, new_layers, rcfg, stacked)
+
+    report = CompressionReport(
+        layers=reports, original_bytes=total_orig, compressed_bytes=total_comp,
+        mean_approx_error=float(np.mean(errs)) if errs else 0.0,
+    )
+    return params, report
+
+
+def _install_store(f: Dict[str, Any], new_layers, rcfg, stacked: bool):
+    """Mutate the ffn dict in place: expert weights -> compressed store."""
+    from ..core.compress import fused_params, split_design
+
+    if any(nl is None for nl in new_layers):
+        raise NotImplementedError(
+            "first_layer>0 within a scanned stack requires per-layer apply "
+            "modes; compress the whole stack or set scan_layers=False."
+        )
+    if rcfg.method == "svd":
+        fused = [fused_params(lc, bank) for (lc, bank) in new_layers]
+        rank = max(fp.rank for fp in fused)
+        def pad_u(fp):
+            return np.pad(fp.u, ((0, 0), (0, 0), (0, rank - fp.rank)))
+        def pad_v(v, r):
+            return np.pad(v, ((0, 0), (0, rank - r), (0, 0)))
+        center = {k: np.stack([fp.center[k] for fp in fused]) for k in fused[0].center}
+        u = np.stack([pad_u(fp) for fp in fused])
+        v = {k: np.stack([pad_v(fp.v[k], fp.rank) for fp in fused]) for k in fused[0].v}
+        if not stacked:
+            center = {k: x[0] for k, x in center.items()}
+            u = u[0]
+            v = {k: x[0] for k, x in v.items()}
+        f["center"] = center
+        f["u"] = u.astype(np.float32)
+        f["v"] = {k: x.astype(np.float32) for k, x in v.items()}
+    else:  # up / block -> dense delta store (Algorithm 2 restore path)
+        centers, deltas = [], []
+        for (lc, bank) in new_layers:
+            centers.append(split_design(lc.center, bank))
+            dw = [split_design(lc.residuals[k].to_dense()[: lc.center.shape[0],
+                                                          : lc.center.shape[1]], bank)
+                  for k in range(lc.num_experts)]
+            deltas.append({name: np.stack([d[name] for d in dw]) for name in dw[0]})
+        center = {k: np.stack([c[k] for c in centers]) for k in centers[0]}
+        delta = {k: np.stack([d[k] for d in deltas]) for k in deltas[0]}
+        if not stacked:
+            center = {k: x[0] for k, x in center.items()}
+            delta = {k: x[0] for k, x in delta.items()}
+        f["center"] = {k: x.astype(np.float32) for k, x in center.items()}
+        f["delta"] = {k: x.astype(np.float32) for k, x in delta.items()}
+    for k in _EXPERT_KEYS:
+        f.pop(k, None)

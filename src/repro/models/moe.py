@@ -1,0 +1,306 @@
+"""Mixture-of-Experts layer: routing, gather-based dispatch, expert paths.
+
+Three interchangeable expert-compute paths share one router/dispatch:
+
+  * dense            — original expert bank {w1, (w3), w2}: [E, ...]
+  * resmoe restored  — paper Algorithm 2: materialize W_c + Delta in-graph,
+                       then run the dense path (methods: up/block/svd).
+  * resmoe fused     — beyond-paper: never materialize the restored bank;
+                       y = x@Wc + (x@V^T)@U^T per segment (method: svd).
+                       ``fused_shared`` additionally computes the two big
+                       center matmuls ONCE per token before dispatch (they
+                       are expert-independent), removing (k-1)/k of the
+                       center FLOPs for top-k routing.
+
+Dispatch is sort/gather-based (MaxText-style "sparse matmul" path): tokens
+are sorted by expert id, padded to a static per-expert capacity, processed
+with grouped einsums, and combined with a scatter-add. This keeps HLO FLOPs
+proportional to *active* parameters (critical for the roofline analysis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from ..sharding import LogicalParam, hint
+from .ffn import ffn, init_ffn
+from .layers import activation_fn, dense_param
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Dict[str, LogicalParam]:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+    ks = jax.random.split(key, 8)
+    p: Dict[str, LogicalParam] = {
+        "router": dense_param(ks[0], (d, e), ("embed", None), jnp.float32),
+        "w1": dense_param(ks[1], (e, d, f), ("experts", "embed", "expert_mlp"), dtype),
+        "w2": dense_param(ks[2], (e, f, d), ("experts", "expert_mlp", "embed"), dtype, fan_in=f),
+    }
+    if cfg.glu:
+        p["w3"] = dense_param(ks[3], (e, d, f), ("experts", "embed", "expert_mlp"), dtype)
+    if m.upcycled_init:
+        # Mixtral-style: every expert = expert 0 + 10% relative noise.
+        for name in ("w1", "w2", "w3"):
+            if name in p:
+                w = p[name].value
+                base = jnp.broadcast_to(w[:1], w.shape)
+                p[name] = LogicalParam(
+                    (base + 0.1 * (w - base)).astype(w.dtype), p[name].axes
+                )
+    if m.router_type == "sigmoid":
+        p["router_bias"] = LogicalParam(jnp.zeros((e,), jnp.float32), (None,))
+    if m.num_shared_experts:
+        p["shared"] = init_ffn(ks[4], d, f * m.num_shared_experts, cfg.glu, dtype)
+    if m.dense_residual:
+        p["dense"] = init_ffn(ks[5], d, cfg.d_ff, cfg.glu, dtype)
+    return p
+
+
+def expert_capacity(num_tokens: int, m: MoEConfig) -> int:
+    cap = int(math.ceil(m.capacity_factor * num_tokens * m.top_k / m.num_experts))
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def route(
+    params: Dict[str, jnp.ndarray], x2d: jnp.ndarray, m: MoEConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Return (expert_ids [T,k], gates [T,k], aux metrics)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), params["router"])
+    if m.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params.get("router_bias", 0.0)  # aux-free balance bias
+        gate_vals, expert_ids = jax.lax.top_k(sel, m.top_k)
+        gates = jnp.take_along_axis(scores, expert_ids, axis=-1)
+        if m.normalize_gates:
+            gates = gates / (gates.sum(-1, keepdims=True) + 1e-20)
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-20)
+    else:
+        gate_vals, expert_ids = jax.lax.top_k(logits, m.top_k)
+        gates = jax.nn.softmax(gate_vals, axis=-1) if m.normalize_gates else jax.nn.softmax(
+            logits, axis=-1
+        ).max(-1, keepdims=True)
+        probs = jax.nn.softmax(logits, axis=-1)
+
+    # Switch-style load-balance loss + router z-loss
+    e = m.num_experts
+    onehot = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    frac_tokens = onehot.mean(0)
+    frac_probs = probs.mean(0)
+    aux = {
+        "load_balance_loss": e * jnp.sum(frac_tokens * frac_probs),
+        "router_z_loss": jnp.mean(
+            jnp.square(jax.scipy.special.logsumexp(logits, axis=-1))
+        ),
+    }
+    return expert_ids, gates.astype(x2d.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Dispatch / combine (sort + capacity padding)
+# ---------------------------------------------------------------------------
+
+
+def make_dispatch(expert_ids: jnp.ndarray, num_experts: int, capacity: int):
+    """Compute gather/scatter indexing for the grouped expert matmuls.
+
+    Returns (token_idx [T*k], dest [T*k], keep [T*k]):
+      * xg[dest] = x[token_idx] for kept pairs; dest == E*C for dropped.
+    """
+    t, k = expert_ids.shape
+    flat_e = expert_ids.reshape(-1).astype(jnp.int32)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(num_experts, dtype=jnp.int32))
+    slot = jnp.arange(t * k, dtype=jnp.int32) - group_start[sorted_e]
+    keep = slot < capacity
+    dest = jnp.where(keep, sorted_e * capacity + slot, num_experts * capacity)
+    token_idx = sort_idx // k
+    return token_idx, dest, keep, sort_idx
+
+
+def dispatch_tokens(x2d: jnp.ndarray, token_idx, dest, keep, num_experts: int,
+                    capacity: int) -> jnp.ndarray:
+    t, d = x2d.shape
+    gathered = x2d[token_idx] * keep[:, None].astype(x2d.dtype)
+    gathered = hint(gathered, ("expert_tok", None))
+    # dropped rows carry zeros, so scatter-ADD with their dest clamped to row
+    # 0 is a no-op — keeps the buffer exactly [E*C, d] (hint-friendly shape).
+    dest_c = jnp.where(keep, dest, 0)
+    buf = hint(jnp.zeros((num_experts * capacity, d), x2d.dtype), ("expert_tok", None))
+    xg = buf.at[dest_c].add(gathered)
+    xg = xg.reshape(num_experts, capacity, d)
+    return hint(xg, ("experts", "expert_cap", None))
+
+
+def combine_tokens(
+    yg: jnp.ndarray,  # [E, C, d]
+    gates_flat: jnp.ndarray,  # [T*k] in (token, k) order
+    token_idx,
+    dest,
+    keep,
+    num_tokens: int,
+    sort_idx,
+) -> jnp.ndarray:
+    e, c, d = yg.shape
+    yflat = hint(yg.reshape(e * c, d), ("expert_tok", None))
+    rows = jnp.where(keep, dest, 0)
+    vals = yflat[rows] * keep[:, None].astype(yg.dtype)
+    vals = hint(vals, ("expert_tok", None))
+    g = gates_flat[sort_idx][:, None].astype(yg.dtype)
+    buf = hint(jnp.zeros((num_tokens, d), yg.dtype), ("batch", None))
+    out = buf.at[token_idx].add(vals * g)
+    return hint(out, ("batch", None))
+
+
+# ---------------------------------------------------------------------------
+# Expert compute paths
+# ---------------------------------------------------------------------------
+
+
+def _dense_expert_ffn(bank, xg: jnp.ndarray, activation: str) -> jnp.ndarray:
+    act = activation_fn(activation)
+    h = jnp.einsum("ecd,edf->ecf", xg, bank["w1"])
+    h = act(h)
+    if "w3" in bank:
+        h = h * jnp.einsum("ecd,edf->ecf", xg, bank["w3"])
+    h = hint(h, ("experts", "expert_cap", "expert_mlp"))
+    y = jnp.einsum("ecf,efd->ecd", h, bank["w2"])
+    # keep the output d-sharded like w2's d: weights stay stationary and the
+    # (tiny) activations reshard, instead of all-gathering the whole w2 bank
+    # over 'data' every layer (was 92% of deepseek-decode collective bytes).
+    return hint(y, ("experts", "expert_cap", "embed"))
+
+
+def _restored_bank(params: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Materialize the restored expert bank in-graph (paper Algorithm 2)."""
+    c = params["center"]
+    out = {}
+    if "delta" in params:  # up / block store
+        for name in ("w1", "w3", "w2"):
+            if name in c:
+                out[name] = c[name][None] + params["delta"][name]
+    else:  # svd store: delta = u @ v per segment
+        u = params["u"]  # [E, f, r]
+        for name in ("w1", "w3"):
+            if name in c:
+                dw = jnp.einsum("efr,erd->edf", u, params["v"][name])
+                out[name] = c[name][None] + dw
+        dw2 = jnp.einsum("efr,erd->efd", u, params["v"]["w2"])
+        out["w2"] = c["w2"][None] + dw2
+    return out
+
+
+def _fused_expert_ffn(params, xg: jnp.ndarray, activation: str,
+                      base1: Optional[jnp.ndarray] = None,
+                      base3: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Restore-free SVD path: y = x@Wc + (x@V^T)@U^T per segment.
+
+    ``base1``/``base3`` carry pre-dispatch center products for the
+    fused_shared variant ([E, C, f], already dispatched).
+    """
+    act = activation_fn(activation)
+    c, u, v = params["center"], params["u"], params["v"]
+    if base1 is None:
+        base1 = jnp.einsum("ecd,df->ecf", xg, c["w1"])
+    tv = jnp.einsum("ecd,erd->ecr", xg, v["w1"])
+    h1 = base1 + jnp.einsum("ecr,efr->ecf", tv, u)
+    h = act(h1)
+    if "w3" in c:
+        if base3 is None:
+            base3 = jnp.einsum("ecd,df->ecf", xg, c["w3"])
+        tv3 = jnp.einsum("ecd,erd->ecr", xg, v["w3"])
+        h = h * (base3 + jnp.einsum("ecr,efr->ecf", tv3, u))
+    h = hint(h, ("experts", "expert_cap", "expert_mlp"))
+    y = jnp.einsum("ecf,fd->ecd", h, c["w2"])
+    t2 = jnp.einsum("ecf,efr->ecr", h, u)
+    return y + jnp.einsum("ecr,erd->ecd", t2, v["w2"])
+
+
+# ---------------------------------------------------------------------------
+# Full layer
+# ---------------------------------------------------------------------------
+
+
+def moe_layer(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # [B, S, d]
+    cfg: ModelConfig,
+    apply_mode: Optional[str] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Run one MoE layer. ``params`` holds either a dense bank or a ResMoE
+    compressed store (decided by key presence); ``apply_mode`` overrides
+    cfg.resmoe.apply_mode ("restored" | "fused" | "fused_shared").
+
+    Under a sharding-rules context with a divisible 'model' axis, the dense
+    path switches to the explicit shard_map expert-parallel layer
+    (moe_ep.py) — one psum per layer instead of GSPMD's resharding chain.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    x2d = hint(x.reshape(t, d), ("batch", None))
+
+    from ..sharding import current_rules
+    from .moe_ep import ep_applicable, ep_moe_layer
+
+    rules = current_rules()
+    if "center" not in params and ep_applicable(params, cfg, rules, num_tokens=t):
+        y2d, aux = ep_moe_layer(params, x2d, cfg, rules)
+        return y2d.reshape(b, s, d).astype(x.dtype), aux
+
+    expert_ids, gates, aux = route(params, x2d, m)
+    capacity = expert_capacity(t, m)
+    token_idx, dest, keep, sort_idx = make_dispatch(expert_ids, m.num_experts, capacity)
+    gates_flat = gates.reshape(-1)
+
+    compressed = "center" in params
+    mode = apply_mode or cfg.resmoe.apply_mode
+
+    if not compressed:
+        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
+        yg = _dense_expert_ffn(params, xg, cfg.activation)
+    elif mode == "restored" or "delta" in params:
+        bank = _restored_bank(params)
+        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
+        yg = _dense_expert_ffn(bank, xg, cfg.activation)
+    elif mode == "fused":
+        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
+        yg = _fused_expert_ffn(params, xg, cfg.activation)
+    elif mode == "fused_shared":
+        # center products computed ONCE per token (expert-independent)
+        c = params["center"]
+        b1 = jnp.einsum("td,df->tf", x2d, c["w1"])
+        b3 = jnp.einsum("td,df->tf", x2d, c["w3"]) if "w3" in c else None
+        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
+        b1g = dispatch_tokens(b1, token_idx, dest, keep, m.num_experts, capacity)
+        b3g = (
+            dispatch_tokens(b3, token_idx, dest, keep, m.num_experts, capacity)
+            if b3 is not None
+            else None
+        )
+        yg = _fused_expert_ffn(params, xg, cfg.activation, base1=b1g, base3=b3g)
+    else:
+        raise ValueError(f"unknown apply mode {mode}")
+
+    y2d = combine_tokens(yg, gates_flat, token_idx, dest, keep, t, sort_idx)
+
+    if "shared" in params:
+        y2d = y2d + ffn(params["shared"], x2d, cfg.activation)
+    if "dense" in params:
+        y2d = y2d + ffn(params["dense"], x2d, cfg.activation)
+    # compressed stores may carry a wider dtype; keep the stream dtype stable
+    return y2d.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,176 @@
+"""Expert-parallel MoE layer via shard_map (explicit collectives).
+
+The §Perf audit showed the gather/scatter dispatch under GSPMD reshards
+token buffers ~10x more than the minimal EP exchange (EXPERIMENTS.md cell
+3). This layer makes every data movement explicit:
+
+  * activations x2d [T, d]: sharded over the batch axes, REPLICATED over
+    'model' — each model shard sees its data shard's tokens with full d;
+  * experts: sharded over 'model' (E_loc = E/|model| per shard);
+  * each shard locally dispatches ONLY the (token, expert) pairs whose
+    expert it owns — zero communication for dispatch;
+  * combine = one psum over 'model' of the [T_loc, d] partial outputs
+    (shared experts / arctic's dense-residual branch are computed f-sharded
+    inside the same region and folded into the SAME psum).
+
+Per-layer communication: exactly one [T_loc, d] all-reduce (+ the ZeRO-3
+weight gather inserted by pjit when expert weights are also data-sharded
+for capacity) — the minimal schedule for replicated-activation EP.
+
+Used automatically by moe_layer when a rules context is active and the
+expert count divides the 'model' axis; falls back to the GSPMD path
+otherwise (small expert counts, no mesh).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..sharding import ShardingRules, use_rules
+from .layers import activation_fn
+
+
+_EP_MIN_LOCAL_TOKENS = 2048  # below this, weight gathers dominate — GSPMD
+                             # with the weight-stationary hints wins (decode)
+
+
+def ep_applicable(params: Dict, cfg: ModelConfig, rules: Optional[ShardingRules],
+                  num_tokens: Optional[int] = None) -> bool:
+    if rules is None or cfg.moe is None:
+        return False
+    if "w1" not in params:  # compressed stores keep the GSPMD path
+        return False
+    mesh = rules.mesh
+    if "model" not in mesh.axis_names:
+        return False
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes["model"]
+    m = cfg.moe
+    if m.num_experts % msize or msize <= 1:
+        return False
+    # shared/dense branches are f-sharded over model inside the region
+    f_sh = m.expert_d_ff * max(1, m.num_shared_experts)
+    if m.num_shared_experts and f_sh % msize:
+        return False
+    if m.dense_residual and cfg.d_ff % msize:
+        return False
+    if num_tokens is not None:
+        dp = 1
+        for a in rules.batch_axes:
+            dp *= sizes[a]
+        if num_tokens // dp < _EP_MIN_LOCAL_TOKENS:
+            return False  # decode/small-batch: EP's per-layer weight
+            # all-gather (ZeRO-3 over 'data') exceeds the activation
+            # resharding of the GSPMD path (measured: deepseek decode
+            # 0.10 -> 3.35 s collective) — see EXPERIMENTS.md §Perf.
+    return True
+
+
+def _param_specs(params: Dict, cfg: ModelConfig) -> Dict:
+    """shard_map in_specs for the MoE param dict (weight layouts)."""
+    specs: Dict = {}
+    for k in params:
+        if k in ("w1", "w3"):
+            specs[k] = P("model", None, None)
+        elif k == "w2":
+            specs[k] = P("model", None, None)
+        elif k == "router":
+            specs[k] = P(None, None)
+        elif k == "router_bias":
+            specs[k] = P(None)
+        elif k in ("shared", "dense"):
+            sub = {"w1": P(None, "model"), "w2": P("model", None)}
+            if "w3" in params[k]:
+                sub["w3"] = P(None, "model")
+            specs[k] = sub
+    return specs
+
+
+def ep_moe_layer(
+    params: Dict[str, jnp.ndarray],
+    x2d: jnp.ndarray,  # [T, d] (global)
+    cfg: ModelConfig,
+    rules: ShardingRules,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    from .moe import (
+        combine_tokens,
+        dispatch_tokens,
+        expert_capacity,
+        make_dispatch,
+        route,
+    )
+
+    m = cfg.moe
+    mesh = rules.mesh
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    e_loc = m.num_experts // msize
+    batch_axes = tuple(rules.batch_axes)
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    t_global = x2d.shape[0]
+    dp = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in batch_axes:
+        dp *= sizes[a]
+    t_loc = t_global // dp if t_global % dp == 0 else t_global
+    # per-LOCAL-expert capacity for the local token slice (already a
+    # per-expert quantity — do NOT divide by the model-axis size)
+    cap = expert_capacity(t_loc, m)
+
+    def region(params, x_loc):
+        # hints are no-ops inside shard_map (local arrays)
+        with use_rules(None):
+            expert_ids, gates, aux = route(
+                {k: params[k] for k in ("router", "router_bias") if k in params},
+                x_loc, m,
+            )
+            my_lo = jax.lax.axis_index("model") * e_loc
+            local_ids = expert_ids - my_lo
+            mine = (local_ids >= 0) & (local_ids < e_loc)
+            # foreign pairs -> dummy expert e_loc (dropped by capacity mask)
+            ids = jnp.where(mine, local_ids, e_loc).astype(jnp.int32)
+            gates = jnp.where(mine, gates, 0.0)
+            token_idx, dest, keep, sort_idx = make_dispatch(ids, e_loc + 1, cap)
+            xg = dispatch_tokens(x_loc, token_idx, dest, keep, e_loc + 1, cap)
+            xg = xg[:e_loc]  # drop the dummy group
+
+            act = activation_fn(cfg.activation)
+            h = jnp.einsum("ecd,edf->ecf", xg, params["w1"])
+            h = act(h)
+            if "w3" in params:
+                h = h * jnp.einsum("ecd,edf->ecf", xg, params["w3"])
+            yg = jnp.einsum("ecf,efd->ecd", h, params["w2"])
+            yg = jnp.concatenate(
+                [yg, jnp.zeros((1,) + yg.shape[1:], yg.dtype)], axis=0
+            )  # restore dummy slot for combine indexing
+            y_part = combine_tokens(
+                yg, gates.reshape(-1), token_idx, dest, keep, x_loc.shape[0],
+                sort_idx,
+            )
+            # f-sharded always-on branches fold into the same psum
+            for name in ("shared", "dense"):
+                if name in params:
+                    w = params[name]
+                    hh = jnp.einsum("td,df->tf", x_loc, w["w1"])
+                    hh = act(hh)
+                    if "w3" in w:
+                        hh = hh * jnp.einsum("td,df->tf", x_loc, w["w3"])
+                    y_part = y_part + jnp.einsum("tf,fd->td", hh, w["w2"])
+            y = jax.lax.psum(y_part, "model")
+            # aux identical across 'model'; average over the batch axes
+            aux = jax.tree_util.tree_map(
+                lambda a: jax.lax.pmean(a, batch_axes), aux
+            )
+            return y, aux
+
+    other_axes = tuple(a for a in mesh.axis_names if a not in batch_axes)
+    in_specs = (_param_specs(params, cfg), P(bspec, None))
+    out_specs = (P(bspec, None), P())
+    y, aux = jax.shard_map(
+        region, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )({k: v for k, v in params.items() if k in _param_specs(params, cfg)}, x2d)
+    return y, aux

@@ -1,0 +1,268 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma/Griffin) and RWKV6 (Finch).
+
+Both expose (full-sequence, state-carrying) and (single-step, decode) forms.
+The RG-LRU linear recurrence uses ``jax.lax.associative_scan`` (log-depth,
+TPU-friendly); RWKV6's matrix-valued state uses ``jax.lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import LogicalParam, hint
+from .layers import dense_param, init_rms_norm, rms_norm, zeros_param
+
+State = Dict[str, jnp.ndarray]
+
+_RGLRU_C = 8.0
+_CONV_WIDTH = 4
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype) -> Dict[str, LogicalParam]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    p = {
+        "w_gate": dense_param(ks[0], (d, w), ("embed", "lru"), dtype),
+        "w_in": dense_param(ks[1], (d, w), ("embed", "lru"), dtype),
+        "conv_w": dense_param(ks[2], (_CONV_WIDTH, w), (None, "lru"), dtype, fan_in=_CONV_WIDTH),
+        "conv_b": zeros_param((w,), ("lru",), dtype),
+        "w_a": dense_param(ks[3], (w, w), ("lru", "lru"), dtype, fan_in=w),
+        "b_a": zeros_param((w,), ("lru",), dtype),
+        "w_x": dense_param(ks[4], (w, w), ("lru", "lru"), dtype, fan_in=w),
+        "b_x": zeros_param((w,), ("lru",), dtype),
+        # Lambda init so that a = sigmoid(lam)^c lands in [0.9, 0.999]
+        "lam": LogicalParam(
+            jnp.asarray(
+                jax.random.uniform(ks[5], (w,), jnp.float32, 0.3, 0.9)
+            ),
+            ("lru",),
+        ),
+        "w_out": dense_param(ks[6], (w, d), ("lru", "embed"), dtype, fan_in=w),
+    }
+    return p
+
+
+def _causal_conv(z: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 carry: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv, width _CONV_WIDTH. carry: [B, W-1, C] history."""
+    bsz, s, c = z.shape
+    if carry is None:
+        carry = jnp.zeros((bsz, _CONV_WIDTH - 1, c), z.dtype)
+    zc = jnp.concatenate([carry, z], axis=1)
+    out = jnp.zeros_like(z)
+    for i in range(_CONV_WIDTH):
+        out = out + zc[:, i : i + s, :] * w[i][None, None, :]
+    new_carry = zc[:, -(_CONV_WIDTH - 1) :, :]
+    return out + b[None, None, :], new_carry
+
+
+def _rglru_coeffs(params, z: jnp.ndarray):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", z, params["w_a"]) + params["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", z, params["w_x"]) + params["b_x"])
+    log_a = -_RGLRU_C * r.astype(jnp.float32) * jax.nn.softplus(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = (mult * (i.astype(jnp.float32) * z.astype(jnp.float32)))
+    return a, b  # f32 [B,S,W] each
+
+
+def rglru_block(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # [B, S, d]
+    cfg: ModelConfig,
+    state: Optional[State] = None,
+) -> Tuple[jnp.ndarray, Optional[State]]:
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate"]), approximate=True)
+    z = jnp.einsum("bsd,dw->bsw", x, params["w_in"])
+    conv_carry = state["conv"] if state is not None else None
+    z, new_conv = _causal_conv(z, params["conv_w"], params["conv_b"], conv_carry)
+    a, b = _rglru_coeffs(params, z)
+
+    if state is None:
+        # h_t = a_t h_{t-1} + b_t  ->  associative scan over (a, b)
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_state = None
+    else:
+        h_prev = state["h"].astype(jnp.float32)  # [B, W]
+        # sequential (decode may still have S>1 for short bursts)
+        def step(hp, ab):
+            at, bt = ab
+            hn = at * hp + bt
+            return hn, hn
+
+        hT, hs = jax.lax.scan(step, h_prev, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+        h = hs.swapaxes(0, 1)
+        new_state = {"h": hT, "conv": new_conv}
+    out = (h.astype(x.dtype) * gate)
+    return jnp.einsum("bsw,wd->bsd", out, params["w_out"]), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> State:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": LogicalParam(jnp.zeros((batch, w), jnp.float32), ("batch", "lru")),
+        "conv": LogicalParam(
+            jnp.zeros((batch, _CONV_WIDTH - 1, w), jnp.bfloat16), ("batch", None, "lru")
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+_RWKV_HEAD = 64
+_LORA_DIM = 64
+
+
+def init_rwkv6_block(key, cfg: ModelConfig, dtype) -> Dict[str, LogicalParam]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 16)
+    def lin(i, shape, axes, fan=None):
+        return dense_param(ks[i], shape, axes, dtype, fan_in=fan)
+
+    p = {
+        # token-shift mix coefficients (static part) for r,k,v,w,g
+        "mu": zeros_param((5, d), (None, "embed"), jnp.float32),
+        # data-dependent shift lora: tanh(x @ A) @ B -> per-target mix delta
+        "maa_a": lin(0, (d, 5, _LORA_DIM // 2), ("embed", None, None)),
+        "maa_b": lin(1, (5, _LORA_DIM // 2, d), (None, None, "embed"), fan=_LORA_DIM // 2),
+        "wr": lin(2, (d, d), ("embed", "heads")),
+        "wk": lin(3, (d, d), ("embed", "heads")),
+        "wv": lin(4, (d, d), ("embed", "heads")),
+        "wg": lin(5, (d, d), ("embed", "heads")),
+        "wo": lin(6, (d, d), ("heads", "embed"), fan=d),
+        # decay: w = exp(-exp(w0 + lora(xw)))
+        "w0": LogicalParam(
+            jnp.linspace(-6.0, -1.0, d, dtype=jnp.float32), ("embed",)
+        ),
+        "w_a": lin(7, (d, _LORA_DIM), ("embed", None)),
+        "w_b": lin(8, (_LORA_DIM, d), (None, "embed"), fan=_LORA_DIM),
+        "u": zeros_param((d,), ("embed",), jnp.float32),  # bonus
+        "ln_x": init_rms_norm(d),  # per-head group norm approx
+        # channel mix
+        "cm_mu": zeros_param((2, d), (None, "embed"), jnp.float32),
+        "cm_k": lin(9, (d, cfg.d_ff), ("embed", "mlp")),
+        "cm_v": lin(10, (cfg.d_ff, d), ("mlp", "embed"), fan=cfg.d_ff),
+        "cm_r": lin(11, (d, d), ("embed", "embed")),
+    }
+    return p
+
+
+def _shift(x: jnp.ndarray, carry: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Previous-token sequence ([B,S,d]); carry [B,d] = last token of prev chunk."""
+    if carry is None:
+        prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        prev = jnp.concatenate([carry[:, None, :], x[:, :-1]], axis=1)
+    return prev, x[:, -1, :]
+
+
+def _wkv6_scan(r, k, v, w, u, state):
+    """r,k,v,w: [B,S,H,hd] (w = decay in (0,1)); state: [B,H,hd,hd].
+
+    y_t[j] = sum_i r_i (S[i,j] + u_i k_i v_j);  S <- diag(w) S + k v^T.
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B,H,hd]
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))  # [S,B,H,hd]
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1), final  # [B,S,H,hd]
+
+
+def rwkv6_time_mix(
+    params, x: jnp.ndarray, cfg: ModelConfig, state: Optional[State]
+) -> Tuple[jnp.ndarray, Optional[State]]:
+    b, s, d = x.shape
+    h = d // _RWKV_HEAD
+    shift_carry = state["shift_att"] if state is not None else None
+    prev, last = _shift(x, shift_carry)
+    xx = prev - x
+    # data-dependent lerp for the five targets
+    mix = jnp.tanh(jnp.einsum("bsd,dnk->bsnk", x, params["maa_a"]))
+    mix = jnp.einsum("bsnk,nkd->bsnd", mix, params["maa_b"])  # [B,S,5,d]
+    mu = params["mu"][None, None]  # [1,1,5,d]
+    xs = (x[:, :, None, :] + xx[:, :, None, :] * (mu + mix)).astype(x.dtype)
+    xr, xk, xv, xw, xg = [xs[:, :, i, :] for i in range(5)]
+
+    r = jnp.einsum("bsd,de->bse", xr, params["wr"]).reshape(b, s, h, _RWKV_HEAD)
+    k = jnp.einsum("bsd,de->bse", xk, params["wk"]).reshape(b, s, h, _RWKV_HEAD)
+    v = jnp.einsum("bsd,de->bse", xv, params["wv"]).reshape(b, s, h, _RWKV_HEAD)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["wg"]))
+    logw = params["w0"][None, None] + jnp.einsum(
+        "bsd,dk,ke->bse", jnp.tanh(xw.astype(jnp.float32)), params["w_a"].astype(jnp.float32),
+        params["w_b"].astype(jnp.float32)
+    )
+    w = jnp.exp(-jnp.exp(logw)).reshape(b, s, h, _RWKV_HEAD)
+
+    s0 = (
+        state["wkv"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, h, _RWKV_HEAD, _RWKV_HEAD), jnp.float32)
+    )
+    u = params["u"].reshape(h, _RWKV_HEAD).astype(jnp.float32)
+    y, s_fin = _wkv6_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w.astype(jnp.float32), u, s0
+    )
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, params["ln_x"], cfg.norm_eps) * g
+    out = jnp.einsum("bsd,de->bse", y, params["wo"])
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["wkv"] = s_fin
+        new_state["shift_att"] = last
+    return out, new_state
+
+
+def rwkv6_channel_mix(
+    params, x: jnp.ndarray, cfg: ModelConfig, state: Optional[State]
+) -> Tuple[jnp.ndarray, Optional[State]]:
+    shift_carry = state["shift_ffn"] if state is not None else None
+    prev, last = _shift(x, shift_carry)
+    xx = prev - x
+    mu = params["cm_mu"][None, None]
+    xk = (x + xx * mu[:, :, 0]).astype(x.dtype)
+    xr = (x + xx * mu[:, :, 1]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, params["cm_k"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, params["cm_v"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["cm_r"])) * kv
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["shift_ffn"] = last
+    return out, new_state
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int) -> State:
+    d = cfg.d_model
+    h = d // _RWKV_HEAD
+    return {
+        "wkv": LogicalParam(
+            jnp.zeros((batch, h, _RWKV_HEAD, _RWKV_HEAD), jnp.float32),
+            ("batch", "heads", None, None),
+        ),
+        "shift_att": LogicalParam(jnp.zeros((batch, d), jnp.bfloat16), ("batch", None)),
+        "shift_ffn": LogicalParam(jnp.zeros((batch, d), jnp.bfloat16), ("batch", None)),
+    }

@@ -1,0 +1,473 @@
+"""Transformer assembly: layer plans, scan-over-layers, train/prefill/decode.
+
+An architecture config compiles to a *layer plan*: a list of segments, each a
+``(pattern, repeats)`` pair where ``pattern`` is a tuple of LayerSpecs (one
+per slot).  Segments with ``repeats > 1`` are executed with ``jax.lax.scan``
+over stacked parameters — compile time is O(#segments × pattern), not
+O(num_layers), which is what makes the 126-layer dry-runs tractable.
+
+Heterogeneous stacks (gemma3 local/global, recurrentgemma's rec-rec-attn
+pattern, deepseek's dense prefix) are expressed by multi-slot patterns with
+*static* per-slot specs, so every scanned leaf keeps a uniform shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import LogicalParam, hint, split_logical
+from . import attention as attn
+from . import recurrent as rec
+from .ffn import ffn, init_ffn
+from .layers import (
+    cross_entropy_loss,
+    dense_param,
+    embed_tokens,
+    init_embedding,
+    init_rms_norm,
+    logits_from_embedding,
+    rms_norm,
+)
+from .moe import init_moe, moe_layer
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Layer plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str  # "gqa" | "mla" | "rglru" | "rwkv"
+    ffn: str  # "ffn" | "moe" | "rwkv_cm"
+    window: int = attn.GLOBAL_WINDOW
+    rope_theta: float = 10000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[LayerSpec, ...]
+    repeats: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+def layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
+    """Per-layer specs in execution order."""
+    specs = []
+    for i in range(cfg.num_layers):
+        theta = cfg.rope_theta
+        window = attn.GLOBAL_WINDOW
+        mixer = "gqa"
+        if cfg.attention_type == "mla":
+            mixer = "mla"
+        if cfg.recurrent_type == "rglru":
+            period = cfg.recurrent_pattern or 3
+            mixer = "gqa" if (i % period) == (period - 1) else "rglru"
+            if mixer == "gqa":
+                window = cfg.sliding_window or attn.GLOBAL_WINDOW
+        elif cfg.recurrent_type == "rwkv6":
+            mixer = "rwkv"
+        if cfg.local_global_ratio > 0:
+            period = cfg.local_global_ratio + 1
+            is_global = (i % period) == (period - 1)
+            if not is_global:
+                window = cfg.sliding_window or 1024
+                theta = 10000.0
+            else:
+                theta = cfg.rope_theta
+        elif cfg.sliding_window > 0 and cfg.recurrent_type == "none":
+            window = cfg.sliding_window
+
+        f = "ffn"
+        if cfg.recurrent_type == "rwkv6":
+            f = "rwkv_cm"
+        elif cfg.is_moe and i >= cfg.moe_first_layer and (
+            (i - cfg.moe_first_layer) % cfg.moe_every == 0
+        ):
+            f = "moe"
+        specs.append(LayerSpec(mixer=mixer, ffn=f, window=window, rope_theta=theta))
+    return specs
+
+
+def build_plan(cfg: ModelConfig) -> List[Segment]:
+    """Greedy segmentation of the layer list into repeated patterns."""
+    specs = layer_specs(cfg)
+    # natural pattern period for this arch
+    if cfg.recurrent_type == "rglru":
+        period = cfg.recurrent_pattern or 3
+    elif cfg.local_global_ratio > 0:
+        period = cfg.local_global_ratio + 1
+    else:
+        period = 1
+
+    segments: List[Segment] = []
+    i = 0
+    n = len(specs)
+    while i < n:
+        # a dense-prefix / pattern-change boundary: extend a uniform run
+        pat = tuple(specs[i : i + period])
+        if len(pat) < period:
+            segments.append(Segment(tuple(specs[i:]), 1))
+            break
+        reps = 1
+        j = i + period
+        while j + period <= n and tuple(specs[j : j + period]) == pat:
+            reps += 1
+            j += period
+        # handle a short tail that doesn't fit the pattern
+        segments.append(Segment(pat, reps))
+        i = j
+    # merge trailing partial pattern handled above by the break
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _dtype_of(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def init_block(key, cfg: ModelConfig, spec: LayerSpec) -> Dict[str, Any]:
+    dt = _dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": init_rms_norm(cfg.d_model), "norm2": init_rms_norm(cfg.d_model)}
+    if spec.mixer == "gqa":
+        p["attn"] = attn.init_gqa(k1, cfg, dt)
+    elif spec.mixer == "mla":
+        p["attn"] = attn.init_mla(k1, cfg, dt)
+    elif spec.mixer == "rglru":
+        p["attn"] = rec.init_rglru_block(k1, cfg, dt)
+    elif spec.mixer == "rwkv":
+        p["attn"] = rec.init_rwkv6_block(k1, cfg, dt)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "ffn":
+        p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.glu, dt)
+    elif spec.ffn == "moe":
+        p["ffn"] = init_moe(k2, cfg, dt)
+    elif spec.ffn == "rwkv_cm":
+        p["ffn"] = {}  # rwkv channel-mix params live inside the mixer dict
+    return p
+
+
+def apply_block(
+    params: Dict[str, Any],
+    x: jnp.ndarray,
+    spec: LayerSpec,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    cache: Optional[Dict] = None,
+    apply_mode: Optional[str] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict], Dict[str, jnp.ndarray]]:
+    aux = {"load_balance_loss": jnp.zeros((), jnp.float32),
+           "router_z_loss": jnp.zeros((), jnp.float32)}
+    x = hint(x, ("batch", "seq", "embed_act"))
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    new_cache = cache
+    if spec.mixer == "gqa":
+        y, new_cache = attn.gqa_attention(
+            params["attn"], h, positions, cfg, window=spec.window,
+            rope_theta=spec.rope_theta, cache=cache, norm_eps=cfg.norm_eps,
+        )
+    elif spec.mixer == "mla":
+        y, new_cache = attn.mla_attention(params["attn"], h, positions, cfg, cache=cache)
+    elif spec.mixer == "rglru":
+        y, new_cache = rec.rglru_block(params["attn"], h, cfg, state=cache)
+    elif spec.mixer == "rwkv":
+        y, new_cache = rec.rwkv6_time_mix(params["attn"], h, cfg, state=cache)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+
+    h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+    if spec.ffn == "ffn":
+        y2 = ffn(params["ffn"], h2, cfg.activation)
+    elif spec.ffn == "moe":
+        y2, aux = moe_layer(params["ffn"], h2, cfg, apply_mode=apply_mode)
+    elif spec.ffn == "rwkv_cm":
+        y2, new_cache = rec.rwkv6_channel_mix(params["attn"], h2, cfg, state=new_cache)
+    else:
+        raise ValueError(spec.ffn)
+    return x + y2, new_cache, aux
+
+
+def init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int):
+    dt = _dtype_of(cfg)
+    if spec.mixer == "gqa":
+        window = spec.window
+        s = min(max_seq, window + 8) if window < attn.GLOBAL_WINDOW else max_seq
+        # round cache length to multiple of 128 for tiling friendliness
+        s = min(max_seq, -(-s // 128) * 128)
+        return attn.init_gqa_cache(cfg, batch, s, dt)
+    if spec.mixer == "mla":
+        return attn.init_mla_cache(cfg, batch, max_seq, dt)
+    if spec.mixer == "rglru":
+        return rec.init_rglru_state(cfg, batch)
+    if spec.mixer == "rwkv":
+        return rec.init_rwkv6_state(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    """Returns a tree of LogicalParam (use sharding.split_logical to strip)."""
+    dt = _dtype_of(cfg)
+    plan = build_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 3)
+    params: Dict[str, Any] = {}
+    if cfg.num_codebooks > 1:
+        params["embed"] = LogicalParam(
+            (jax.random.normal(keys[0], (cfg.num_codebooks, cfg.vocab_size, cfg.d_model),
+                               jnp.float32) * cfg.d_model ** -0.5).astype(dt),
+            ("codebooks", "vocab", "embed"),
+        )
+    else:
+        params["embed"] = init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dt)
+
+    segments = []
+    for si, seg in enumerate(plan):
+        skeys = jax.random.split(keys[si + 1], max(seg.repeats, 1) * len(seg.pattern))
+        slots = []
+        for slot_idx, spec in enumerate(seg.pattern):
+            if seg.repeats > 1:
+                reps = [
+                    init_block(skeys[r * len(seg.pattern) + slot_idx], cfg, spec)
+                    for r in range(seg.repeats)
+                ]
+                stacked = jax.tree_util.tree_map(
+                    lambda *xs: LogicalParam(
+                        jnp.stack([x.value for x in xs]),
+                        ("layers",) + xs[0].axes,
+                    ),
+                    *reps,
+                    is_leaf=lambda x: isinstance(x, LogicalParam),
+                )
+                slots.append(stacked)
+            else:
+                slots.append(init_block(skeys[slot_idx], cfg, spec))
+        segments.append({"slots": slots})
+    params["segments"] = segments
+    params["final_norm"] = init_rms_norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            params["head"] = LogicalParam(
+                jax.random.normal(
+                    keys[-1], (cfg.num_codebooks, cfg.d_model, cfg.vocab_size), jnp.float32
+                ).astype(dt)
+                / (cfg.d_model ** 0.5),
+                ("codebooks", "embed", "vocab"),
+            )
+        else:
+            params["head"] = dense_param(
+                keys[-1], (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dt
+            )
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    plan = build_plan(cfg)
+    out = []
+    for seg in plan:
+        slots = []
+        for spec in seg.pattern:
+            c = init_block_cache(cfg, spec, batch, max_seq)
+            if seg.repeats > 1:
+                c = jax.tree_util.tree_map(
+                    lambda p: LogicalParam(
+                        jnp.broadcast_to(p.value, (seg.repeats,) + p.value.shape).copy(),
+                        ("layers",) + p.axes,
+                    ),
+                    c,
+                    is_leaf=lambda x: isinstance(x, LogicalParam),
+                )
+            slots.append(c)
+        out.append({"slots": slots})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "nothing_saveable":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    raise ValueError(name)
+
+
+def _zero_aux():
+    return {"load_balance_loss": jnp.zeros((), jnp.float32),
+            "router_z_loss": jnp.zeros((), jnp.float32)}
+
+
+def run_segments(
+    params: PyTree,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    cache: Optional[PyTree] = None,
+    remat: bool = False,
+    apply_mode: Optional[str] = None,
+) -> Tuple[jnp.ndarray, Optional[PyTree], Dict[str, jnp.ndarray]]:
+    plan = build_plan(cfg)
+    aux_tot = _zero_aux()
+    new_cache: Optional[list] = [] if cache is not None else None
+    policy = _remat_policy(cfg.remat_policy) if remat else None
+
+    for si, seg in enumerate(plan):
+        seg_params = params["segments"][si]
+        seg_cache = cache[si] if cache is not None else None
+
+        def run_pattern(x, slot_params, slot_cache):
+            aux_p = _zero_aux()
+            outs = []
+            for slot_idx, spec in enumerate(seg.pattern):
+                c = slot_cache[slot_idx] if slot_cache is not None else None
+                x, nc, aux = apply_block(
+                    slot_params[slot_idx], x, spec, cfg, positions, cache=c,
+                    apply_mode=apply_mode,
+                )
+                outs.append(nc)
+                aux_p = jax.tree_util.tree_map(jnp.add, aux_p, aux)
+            return x, outs, aux_p
+
+        if seg.repeats > 1 and cfg.scan_layers:
+            has_cache = seg_cache is not None
+
+            def body(carry, xs):
+                x, aux_c = carry
+                if has_cache:
+                    slot_params, slot_cache = xs
+                else:
+                    slot_params, slot_cache = xs, None
+                x, ncs, aux_p = run_pattern(x, slot_params, slot_cache)
+                ys = ncs if has_cache else 0
+                return (x, jax.tree_util.tree_map(jnp.add, aux_c, aux_p)), ys
+
+            if remat and cfg.remat_policy != "none":
+                body = jax.checkpoint(body, policy=policy)
+            xs = (seg_params["slots"], seg_cache["slots"]) if has_cache else seg_params["slots"]
+            (x, aux_tot), ys = jax.lax.scan(body, (x, aux_tot), xs)
+            if has_cache:
+                new_cache.append({"slots": ys})
+        else:
+            x, ncs, aux_p = run_pattern(
+                x, seg_params["slots"], seg_cache["slots"] if seg_cache is not None else None
+            )
+            aux_tot = jax.tree_util.tree_map(jnp.add, aux_tot, aux_p)
+            if cache is not None:
+                new_cache.append({"slots": ncs})
+    return x, new_cache, aux_tot
+
+
+# ---------------------------------------------------------------------------
+# Entry points: embed -> segments -> head
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """Assemble the input activation sequence from the batch dict."""
+    parts = []
+    if "patch_embeddings" in batch:  # VLM stub frontend
+        parts.append(batch["patch_embeddings"].astype(_dtype_of(cfg)))
+    if "frame_embeddings" in batch:  # audio stub frontend
+        parts.append(batch["frame_embeddings"].astype(_dtype_of(cfg)))
+    if "tokens" in batch:
+        table = params["embed"]
+        if cfg.num_codebooks > 1:
+            toks = batch["tokens"]  # [B, S, K]
+            embs = [embed_tokens(table[k], toks[..., k]) for k in range(cfg.num_codebooks)]
+            parts.append(sum(embs))
+        else:
+            parts.append(embed_tokens(table, batch["tokens"]))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    return x
+
+
+def readout(params: PyTree, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.num_codebooks > 1:
+        head = params["head"]  # [K, d, V]
+        return jnp.einsum("bsd,kdv->bskv", x, head)
+    if cfg.tie_embeddings:
+        return logits_from_embedding(params["embed"], x, cfg.logit_softcap)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def forward(
+    params: PyTree,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    cache: Optional[PyTree] = None,
+    positions: Optional[jnp.ndarray] = None,
+    remat: bool = False,
+    apply_mode: Optional[str] = None,
+    last_only: bool = False,
+):
+    x = embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    x = hint(x, ("batch", "seq", "embed_act"))
+    x, new_cache, aux = run_segments(
+        params, x, cfg, positions, cache=cache, remat=remat, apply_mode=apply_mode
+    )
+    if last_only:  # serving prefill: only the last position feeds sampling
+        x = x[:, -1:, :]
+    logits = readout(params, x, cfg)
+    return logits, new_cache, aux
+
+
+def loss_fn(
+    params: PyTree,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    remat: bool = True,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, _, aux = forward(params, batch, cfg, remat=remat)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if cfg.num_codebooks > 1:
+        # labels [B,S,K]; logits [B,S,K,V]
+        ce, _ = cross_entropy_loss(logits, labels, mask=None)
+    else:
+        if "patch_embeddings" in batch:
+            # VLM: loss only on the text tail
+            n_text = labels.shape[1]
+            logits = logits[:, -n_text:]
+        ce, _ = cross_entropy_loss(logits, labels, mask=mask)
+    loss = ce
+    metrics = {"ce_loss": ce}
+    if cfg.is_moe:
+        m = cfg.moe
+        loss = loss + m.aux_loss_coef * aux["load_balance_loss"]
+        if m.router_z_loss_coef:
+            loss = loss + m.router_z_loss_coef * aux["router_z_loss"]
+        metrics["load_balance_loss"] = aux["load_balance_loss"]
+    metrics["loss"] = loss
+    return loss, metrics

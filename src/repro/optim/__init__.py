@@ -1,0 +1,23 @@
+"""Optimizers + schedules (no external deps): AdamW, Adafactor, grad utils."""
+from .adamw import adamw_init, adamw_update
+from .adafactor import adafactor_init, adafactor_update
+from .api import Optimizer, make_optimizer
+from .compression import (
+    GradCompressionState,
+    compress_decompress_allreduce,
+    init_grad_compression,
+)
+from .schedule import cosine_warmup_schedule
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "adafactor_init",
+    "adafactor_update",
+    "Optimizer",
+    "make_optimizer",
+    "GradCompressionState",
+    "compress_decompress_allreduce",
+    "init_grad_compression",
+    "cosine_warmup_schedule",
+]

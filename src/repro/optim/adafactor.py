@@ -1,0 +1,78 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moment, O(m+n) state.
+
+The default optimizer for the >=100B-parameter configs — second-moment
+memory drops from O(mn) to O(m+n) per matrix, which is what lets the
+llama3-405b / deepseek-v3 train cells fit v5e HBM (DESIGN.md §5).
+Momentum is omitted (beta1=0), matching common large-scale practice.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+def adafactor_init(params: PyTree) -> PyTree:
+    def init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "stats": jax.tree_util.tree_map(init, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    grads: PyTree,
+    state: PyTree,
+    params: PyTree,
+    lr,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Tuple[PyTree, PyTree]:
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    beta2 = 1.0 - c ** (-decay)
+
+    def upd(g, s, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if "vr" in s:
+            vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(-2)
+            # normalizer: sqrt((vr_i / mean_i vr) * vc_j)
+            r = vr / jnp.clip(vr.mean(-1, keepdims=True), 1e-30)
+            denom = r[..., :, None] * jnp.expand_dims(vc, -2)
+            u = g / jnp.sqrt(jnp.maximum(denom, 1e-30))
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            u = g / jnp.sqrt(jnp.maximum(v, 1e-30))
+            new_s = {"v": v}
+        # update clipping (RMS <= clip_threshold)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        step = lr * u + lr * weight_decay * p.astype(jnp.float32)
+        return new_s, (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_s = treedef.flatten_up_to(state["stats"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_stats = treedef.unflatten([o[0] for o in out])
+    new_p = treedef.unflatten([o[1] for o in out])
+    return new_p, {"stats": new_stats, "count": count}

@@ -1,0 +1,59 @@
+"""Optimizer facade: name -> (init, update) with global-norm clipping."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adafactor import adafactor_init, adafactor_update
+from .adamw import adamw_init, adamw_update
+
+PyTree = Any
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+@dataclasses.dataclass
+class Optimizer:
+    name: str
+    lr_fn: Callable
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+    def init(self, params: PyTree) -> PyTree:
+        if self.name == "adamw":
+            return adamw_init(params)
+        if self.name == "adafactor":
+            return adafactor_init(params)
+        raise ValueError(self.name)
+
+    def update(self, grads: PyTree, state: PyTree, params: PyTree):
+        step = state["count"]
+        lr = self.lr_fn(step)
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        if self.name == "adamw":
+            new_p, new_s = adamw_update(grads, state, params, lr,
+                                        weight_decay=self.weight_decay)
+        elif self.name == "adafactor":
+            new_p, new_s = adafactor_update(grads, state, params, lr,
+                                            weight_decay=self.weight_decay)
+        else:
+            raise ValueError(self.name)
+        return new_p, new_s, {"grad_norm": gnorm, "lr": lr}
+
+
+def make_optimizer(name: str, lr_fn, weight_decay: float = 0.01,
+                   clip_norm: float = 1.0) -> Optimizer:
+    return Optimizer(name=name, lr_fn=lr_fn, weight_decay=weight_decay,
+                     clip_norm=clip_norm)

@@ -1,0 +1,7 @@
+from .fault_tolerance import (
+    FailureInjector,
+    StragglerDetector,
+    TrainSupervisor,
+)
+
+__all__ = ["FailureInjector", "StragglerDetector", "TrainSupervisor"]

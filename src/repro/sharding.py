@@ -1,0 +1,215 @@
+"""Logical-axis sharding: named axes on params/activations -> PartitionSpec.
+
+Model code never mentions mesh axes.  Params carry *logical* axis names
+(recorded at init); activations request hints via :func:`hint`.  A
+``ShardingRules`` context maps logical names to mesh axes (or None).  With no
+active context every hint is a no-op, so all model code runs unmodified on a
+single CPU device.
+
+Logical axes used across the framework:
+  batch, seq, embed(d_model), vocab, heads, kv_heads, head_dim, mlp(d_ff),
+  experts, expert_cap, layers(stacked scan dim), lru, rank(resmoe), kv_lora,
+  q_lora, conv, codebooks, stats
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_state = threading.local()
+
+
+# Default production rules (see DESIGN.md §5).  ``pod`` is prepended to the
+# batch axis automatically when the active mesh has a "pod" axis.
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "batch": "data",
+    "seq": None,
+    "embed": "data",        # FSDP-style parameter shard of d_model
+    "embed_act": None,      # activations keep d_model replicated by default
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,       # often not divisible by model axis -> replicate
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,   # expert inner dim: EP already uses 'model'
+    "expert_cap": "data",
+    # flattened (expert-major) dispatch buffers [E*C, d]
+    "expert_tok": ("data",),
+    "expert_group": None,
+    "cache_seq": "model",   # sequence-sharded KV cache for decode
+    "layers": None,
+    "lru": "model",
+    "kv_lora": None,
+    "q_lora": None,
+    "rank": None,
+    "conv": None,
+    "codebooks": None,
+    "stats": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: Dict[str, Optional[str]]
+    # mesh axes that multiply the data-parallel batch dimension
+    batch_axes: Tuple[str, ...] = ("data",)
+
+    def _mesh_size(self, entry) -> int:
+        if entry is None:
+            return 1
+        names = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for name in names:
+            n *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
+        return n
+
+    def spec_for(
+        self,
+        axes: Tuple[Optional[str], ...],
+        shape: Optional[Tuple[int, ...]] = None,
+    ) -> P:
+        """Resolve logical axes to a PartitionSpec.
+
+        Shape-aware: a mesh axis that does not divide the dimension is
+        dropped (e.g. 56 heads on a 16-way 'model' axis -> replicated).
+        Mesh axes already consumed by an earlier dimension are dropped too.
+        """
+        parts = []
+        used: set = set()
+        for i, a in enumerate(axes):
+            if a is None:
+                parts.append(None)
+                continue
+            if a == "batch":
+                entry = (tuple(self.batch_axes) if len(self.batch_axes) > 1
+                         else self.batch_axes[0])
+            else:
+                entry = self.rules.get(a)
+            if entry is None:
+                parts.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            names = tuple(n for n in names
+                          if n not in used and n in self.mesh.axis_names)
+            if not names:
+                parts.append(None)
+                continue
+            if shape is not None:
+                size = 1
+                for n in names:
+                    size *= self._mesh_size(n)
+                if shape[i] % size != 0:
+                    parts.append(None)
+                    continue
+            used.update(names)
+            parts.append(names if len(names) > 1 else names[0])
+        return P(*parts)
+
+    def sharding_for(
+        self, axes: Tuple[Optional[str], ...], shape: Optional[Tuple[int, ...]] = None
+    ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def make_rules(mesh: Mesh, overrides: Optional[Dict[str, Optional[str]]] = None) -> ShardingRules:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    return ShardingRules(mesh=mesh, rules=rules, batch_axes=batch_axes)
+
+
+def hint(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """Constrain activation sharding if a rules context is active."""
+    r = current_rules()
+    if r is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"hint rank mismatch: {x.shape} vs {axes}")
+    return jax.lax.with_sharding_constraint(x, r.sharding_for(axes, tuple(x.shape)))
+
+
+# ---------------------------------------------------------------------------
+# Param logical-axis bookkeeping
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LogicalParam:
+    """A parameter tagged with logical axis names (pre-split container)."""
+
+    value: Any  # jnp array or ShapeDtypeStruct
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    LogicalParam,
+    lambda p: ((p.value,), tuple(p.axes)),
+    lambda axes, children: LogicalParam(children[0], axes),
+)
+
+
+def is_logical(x: Any) -> bool:
+    return isinstance(x, LogicalParam)
+
+
+def split_logical(tree: PyTree) -> Tuple[PyTree, PyTree]:
+    """Split a tree of LogicalParam into (values, axes) trees."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_logical)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_logical)
+    return values, axes
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+def specs_from_axes(axes_tree: PyTree, rules: ShardingRules,
+                    values: Optional[PyTree] = None) -> PyTree:
+    """Axes tree (+ optional abstract values for divisibility) -> specs."""
+    if values is None:
+        return jax.tree_util.tree_map(
+            lambda axes: rules.spec_for(axes), axes_tree, is_leaf=_is_axes_leaf
+        )
+    return jax.tree_util.tree_map(
+        lambda axes, v: rules.spec_for(axes, tuple(v.shape)),
+        axes_tree, values, is_leaf=_is_axes_leaf,
+    )
+
+
+def shardings_from_axes(axes_tree: PyTree, rules: ShardingRules,
+                        values: Optional[PyTree] = None) -> PyTree:
+    if values is None:
+        return jax.tree_util.tree_map(
+            lambda axes: rules.sharding_for(axes), axes_tree, is_leaf=_is_axes_leaf
+        )
+    # values tree has the same structure; zip per-leaf shapes in
+    flat_a, td = jax.tree_util.tree_flatten(axes_tree, is_leaf=_is_axes_leaf)
+    flat_v = td.flatten_up_to(values)
+    return td.unflatten([
+        rules.sharding_for(a, tuple(v.shape)) for a, v in zip(flat_a, flat_v)
+    ])

@@ -1,0 +1,37 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device. Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_clustered_design(rng, n_experts=6, p_i=32, d=24, noise=0.25, distinct=0.5):
+    """Synthetic expert bank design tensor with ResMoE-favourable structure:
+    common pattern + per-expert distinct component + noise, rows shuffled."""
+    base = rng.normal(size=(p_i, d))
+    mats = []
+    for _ in range(n_experts):
+        own = distinct * rng.normal(size=(p_i, d))
+        perm = rng.permutation(p_i)
+        mats.append((base + own + noise * rng.normal(size=(p_i, d)))[perm])
+    return np.stack(mats).astype(np.float64)
+
+
+def make_bank(rng, n=4, d=16, f=24, glu=True):
+    bank = {
+        "w1": rng.normal(size=(n, d, f)).astype(np.float32),
+        "w2": rng.normal(size=(n, f, d)).astype(np.float32),
+    }
+    if glu:
+        bank["w3"] = rng.normal(size=(n, d, f)).astype(np.float32)
+    return bank

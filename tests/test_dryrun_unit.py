@@ -1,0 +1,71 @@
+"""Dry-run machinery unit tests (no 512-device spawn)."""
+import subprocess
+import sys
+import os
+
+from repro.launch.dryrun import _op_histogram, collective_bytes_from_hlo
+
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[2048,7168]{1,0} parameter(0)
+  %ag = bf16[32768,7168]{1,0} all-gather(bf16[2048,7168]{1,0} %p0), replica_groups={}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%add
+  %rs = bf16[1024]{0} reduce-scatter(bf16[16384]{0} %y), dimensions={0}
+  %a2a = bf16[64,128]{1,0} all-to-all(bf16[64,128]{1,0} %z)
+  %cp = u32[16]{0} collective-permute(u32[16]{0} %w), source_target_pairs={{0,1}}
+  %fused = bf16[8]{0} fusion(bf16[8]{0} %q), kind=kLoop
+}
+"""
+
+
+def test_collective_parser():
+    res = collective_bytes_from_hlo(HLO)
+    b = res["bytes"]
+    assert b["all-gather"] == 32768 * 7168 * 2  # result bytes
+    assert b["all-reduce"] == 1024 * 4
+    assert b["reduce-scatter"] == 16384 * 2  # operand bytes
+    assert b["all-to-all"] == 64 * 128 * 2
+    assert b["collective-permute"] == 16 * 4
+    assert res["counts"]["all-gather"] == 1
+    assert res["total_bytes"] == sum(b.values())
+
+
+def test_op_histogram():
+    hist = _op_histogram(HLO)
+    assert hist.get("all-gather") == 1
+    assert hist.get("fusion") == 1
+
+
+def test_default_microbatches():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import _default_microbatches
+
+    mb = _default_microbatches(get_config("llama3-405b"), SHAPES["train_4k"])
+    assert mb >= 8 and SHAPES["train_4k"].global_batch % mb == 0
+    mb_small = _default_microbatches(get_config("rwkv6-1.6b"), SHAPES["train_4k"])
+    assert mb_small >= 1
+
+
+def test_production_mesh_requires_devices():
+    """On the 1-device test process the production mesh must refuse."""
+    import pytest
+
+    from repro.launch.mesh import make_production_mesh
+
+    with pytest.raises(RuntimeError):
+        make_production_mesh()
+
+
+def test_dryrun_cli_single_cell_subprocess():
+    """Full CLI path on the smallest cell, in its own 512-device process."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "rwkv6-1.6b",
+         "--shape", "decode_32k", "--mesh", "both", "--out", "/tmp/dryrun_pytest"],
+        env=env, capture_output=True, text=True, timeout=560,
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "2/2 cells passed" in out.stdout

@@ -1,0 +1,93 @@
+"""Trip-count-aware HLO cost analyzer: exactness probes.
+
+These are the probes that justified replacing XLA:CPU's cost_analysis for
+the roofline (it counts while-loop bodies once); they now guard against
+regressions in the parser across jax/XLA upgrades.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo_text
+
+ONE_MATMUL = 2 * 256 ** 3
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def _scan_matmuls(n):
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, 0
+
+        return jax.lax.scan(body, x, ws)[0]
+
+    return _compile(
+        f,
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((n, 256, 256), jnp.float32),
+    )
+
+
+def test_plain_matmul_flops():
+    comp = _compile(
+        lambda a, b: a @ b,
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+    )
+    got = analyze_hlo_text(comp.as_text())["flops"]
+    assert got == ONE_MATMUL
+
+
+@pytest.mark.parametrize("n", [1, 4, 16])
+def test_scan_multiplies_trip_count(n):
+    comp = _scan_matmuls(n)
+    got = analyze_hlo_text(comp.as_text())["flops"]
+    assert got == n * ONE_MATMUL
+    # document the XLA undercount this module exists to fix
+    assert comp.cost_analysis()["flops"] == pytest.approx(ONE_MATMUL, rel=0.01)
+
+
+def test_nested_scan():
+    def g(x, ws):
+        def outer(c, w2):
+            def inner(c2, w):
+                return c2 @ w, 0
+
+            return jax.lax.scan(inner, c, w2)[0], 0
+
+        return jax.lax.scan(outer, x, ws)[0]
+
+    comp = _compile(
+        g,
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((4, 8, 256, 256), jnp.float32),
+    )
+    got = analyze_hlo_text(comp.as_text())["flops"]
+    assert got == 32 * ONE_MATMUL
+
+
+def test_grad_of_scan_counts_fwd_and_bwd():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, 0
+
+        return jax.lax.scan(body, x, ws)[0].sum()
+
+    comp = _compile(
+        jax.grad(f, argnums=1),
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((8, 256, 256), jnp.float32),
+    )
+    got = analyze_hlo_text(comp.as_text())["flops"]
+    # 8 fwd + 2x8 bwd matmuls
+    assert got == 24 * ONE_MATMUL
+
+
+def test_bytes_and_collectives_nonnegative():
+    comp = _scan_matmuls(4)
+    res = analyze_hlo_text(comp.as_text())
+    assert res["bytes"] > 4 * 2 * 256 * 256 * 4  # at least the streamed ws
+    assert res["coll_total"] == 0  # single device: no collectives

@@ -1,0 +1,148 @@
+"""MoE layer invariants: routing, dispatch/combine, ResMoE forward paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import MoEConfig
+from repro.models import build_model, compress_model_params
+from repro.models.moe import (
+    combine_tokens,
+    dispatch_tokens,
+    expert_capacity,
+    make_dispatch,
+    moe_layer,
+    route,
+)
+
+
+def _moe_cfg(**kw):
+    cfg = reduced_config("mixtral-8x7b")
+    if kw:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, **kw))
+    return cfg
+
+
+def test_dispatch_combine_is_weighted_sum(rng):
+    """With ample capacity, dispatch+identity-experts+combine must equal
+    sum_k gate_k * x for every token."""
+    t, d, e, k = 32, 8, 4, 2
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    expert_ids = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    # ensure distinct experts per token for clean accounting
+    expert_ids = expert_ids.at[:, 1].set((expert_ids[:, 0] + 1) % e)
+    gates = jnp.asarray(rng.random((t, k)), jnp.float32)
+    cap = t * k  # no drops
+    token_idx, dest, keep, sort_idx = make_dispatch(expert_ids, e, cap)
+    assert bool(keep.all())
+    xg = dispatch_tokens(x, token_idx, dest, keep, e, cap)
+    out = combine_tokens(xg, gates.reshape(-1), token_idx, dest, keep, t, sort_idx)
+    expected = (gates.sum(-1, keepdims=True)) * x
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=1e-5)
+
+
+def test_capacity_drops_exactly(rng):
+    t, e, k = 64, 4, 1
+    expert_ids = jnp.zeros((t, k), jnp.int32)  # all tokens to expert 0
+    cap = 16
+    token_idx, dest, keep, _ = make_dispatch(expert_ids, e, cap)
+    assert int(keep.sum()) == cap
+
+
+def test_route_topk_properties(rng):
+    cfg = _moe_cfg()
+    m = cfg.moe
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    # find the moe params of layer 0
+    f = params["segments"][0]["slots"][0]["ffn"]
+    bank = {k: v[0] for k, v in f.items() if hasattr(v, "shape")}
+    bank["router"] = f["router"][0]
+    x = jnp.asarray(rng.normal(size=(16, cfg.d_model)), jnp.float32)
+    ids, gates, aux = route({"router": bank["router"]}, x, m)
+    assert ids.shape == (16, m.top_k)
+    assert gates.shape == (16, m.top_k)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+    # distinct experts per token
+    assert int((ids[:, 0] == ids[:, 1]).sum()) == 0
+    assert float(aux["load_balance_loss"]) >= 0.99  # >= 1 at balance optimum
+
+
+def test_sigmoid_router(rng):
+    cfg = _moe_cfg(router_type="sigmoid")
+    x = jnp.asarray(rng.normal(size=(8, cfg.d_model)), jnp.float32)
+    router = jnp.asarray(rng.normal(size=(cfg.d_model, cfg.moe.num_experts)),
+                         jnp.float32)
+    ids, gates, _ = route(
+        {"router": router, "router_bias": jnp.zeros(cfg.moe.num_experts)},
+        x, cfg.moe)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_moe_layer_expert_permutation_invariance(rng):
+    """Permuting an expert's bottleneck rows (w1/w3 cols, w2 rows) must not
+    change the layer output — the symmetry ResMoE builds on."""
+    cfg = _moe_cfg()
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    f = params["segments"][0]["slots"][0]["ffn"]
+    bank = {k: np.asarray(v[0]) for k, v in f.items()
+            if k in ("router", "w1", "w2", "w3")}
+    x = jnp.asarray(rng.normal(size=(2, 6, cfg.d_model)), jnp.float32)
+    out0, _ = moe_layer(bank, x, cfg)
+    perm = rng.permutation(bank["w1"].shape[-1])
+    bank2 = dict(bank)
+    bank2["w1"] = bank["w1"][:, :, perm]
+    bank2["w3"] = bank["w3"][:, :, perm]
+    bank2["w2"] = bank["w2"][:, perm, :]
+    out1, _ = moe_layer(bank2, x, cfg)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(out1),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_resmoe_paths_agree(rng):
+    """restored / fused / fused_shared must agree exactly (same math)."""
+    cfg = _moe_cfg()
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(1))
+    cp, _ = compress_model_params(params, cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)),
+                                   jnp.int32)}
+    outs = {}
+    for mode in ("restored", "fused", "fused_shared"):
+        logits, _ = jax.jit(
+            lambda p, b, m=mode: model.forward(p, b, apply_mode=m))(cp, batch)
+        outs[mode] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["restored"], outs["fused"], rtol=5e-3,
+                               atol=5e-3)
+    np.testing.assert_allclose(outs["fused"], outs["fused_shared"], rtol=5e-3,
+                               atol=5e-3)
+
+
+def test_resmoe_up_keep1_lossless(rng):
+    cfg = _moe_cfg()
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="up", keep_ratio=1.0,
+                                        apply_mode="restored"))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(2))
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 12)),
+                                   jnp.int32)}
+    base, _ = jax.jit(model.forward)(params, batch)
+    cp, report = compress_model_params(params, cfg)
+    comp, _ = jax.jit(lambda p, b: model.forward(p, b, apply_mode="restored"))(
+        cp, batch)
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+    assert report.mean_approx_error < 1e-8
+
+
+def test_expert_capacity_rounding():
+    m = MoEConfig(num_experts=8, top_k=2, expert_d_ff=64, capacity_factor=1.25)
+    c = expert_capacity(1024, m)
+    assert c % 8 == 0 and c >= 1.25 * 1024 * 2 / 8

@@ -1,0 +1,101 @@
+"""Optimizer unit tests: AdamW, Adafactor, clipping, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    cosine_warmup_schedule,
+    make_optimizer,
+)
+from repro.optim.api import clip_by_global_norm, global_norm
+
+
+def _quadratic_losses(update_fn, init_fn, steps=60, lr=0.1):
+    """Minimize ||x - t||^2 with the optimizer; return loss trace."""
+    t = jnp.asarray(np.random.default_rng(0).normal(size=(16, 130)), jnp.float32)
+    params = {"x": jnp.zeros_like(t)}
+    state = init_fn(params)
+
+    def loss(p):
+        return jnp.sum((p["x"] - t) ** 2)
+
+    traces = []
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = update_fn(g, state, params, lr)
+        traces.append(float(loss(params)))
+    return traces
+
+
+def test_adamw_converges():
+    tr = _quadratic_losses(
+        lambda g, s, p, lr: adamw_update(g, s, p, lr, weight_decay=0.0),
+        adamw_init,
+    )
+    assert tr[-1] < 0.05 * tr[0]
+
+
+def test_adafactor_converges():
+    # adafactor clips the update RMS, so lr ~ the per-step movement; 0.1
+    # converges smoothly where 0.5 oscillates (verified by sweep).
+    tr = _quadratic_losses(
+        lambda g, s, p, lr: adafactor_update(g, s, p, lr, weight_decay=0.0),
+        adafactor_init, steps=120, lr=0.1,
+    )
+    assert tr[-1] < 0.01 * tr[0]
+
+
+def test_adafactor_state_is_factored():
+    p = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((7,))}
+    s = adafactor_init(p)
+    assert set(s["stats"]["w"]) == {"vr", "vc"}
+    assert s["stats"]["w"]["vr"].shape == (256,)
+    assert s["stats"]["w"]["vc"].shape == (512,)
+    assert set(s["stats"]["b"]) == {"v"}  # small tensors unfactored
+    # O(m+n) vs O(mn) memory
+    fac = s["stats"]["w"]["vr"].size + s["stats"]["w"]["vc"].size
+    assert fac < 0.01 * p["w"].size
+
+
+def test_weight_decay_shrinks_params():
+    p = {"x": jnp.ones((8, 8))}
+    s = adamw_init(p)
+    zero_g = {"x": jnp.zeros((8, 8))}
+    p2, _ = adamw_update(zero_g, s, p, lr=0.1, weight_decay=0.5)
+    assert float(p2["x"].mean()) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 10.0, rtol=1e-5)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-4)
+    # below the bound: untouched
+    same, _ = clip_by_global_norm(g, 100.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), np.asarray(g["a"]))
+
+
+def test_cosine_warmup_schedule():
+    lr = cosine_warmup_schedule(1e-3, warmup_steps=10, total_steps=100,
+                                final_frac=0.1)
+    assert float(lr(0)) < float(lr(5)) < float(lr(9))
+    np.testing.assert_allclose(float(lr(10)), 1e-3, rtol=1e-2)
+    assert float(lr(99)) < 1.2e-4 + 1e-5
+    # monotone decay after warmup
+    vals = [float(lr(s)) for s in range(10, 100, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_optimizer_facade_counts_steps():
+    opt = make_optimizer("adamw", cosine_warmup_schedule(1e-3, 2, 10))
+    p = {"x": jnp.ones((4,))}
+    s = opt.init(p)
+    g = {"x": jnp.ones((4,))}
+    p, s, m = opt.update(g, s, p)
+    assert int(s["count"]) == 1
+    assert "grad_norm" in m and "lr" in m

@@ -1,0 +1,75 @@
+"""OT solver unit tests: exact assignment, auction oracle, Sinkhorn."""
+import numpy as np
+import pytest
+
+from repro.core.ot import (
+    auction_assignment,
+    exact_assignment,
+    ot_permutation,
+    pairwise_sq_dists,
+    round_plan_to_permutation,
+    sinkhorn,
+)
+
+
+def _cost(rng, n):
+    x = rng.normal(size=(n, 8))
+    y = rng.normal(size=(n, 8))
+    return pairwise_sq_dists(x, y), x, y
+
+
+def test_exact_assignment_beats_random(rng):
+    c, _, _ = _cost(rng, 16)
+    perm = exact_assignment(c)
+    opt = c[perm, np.arange(16)].sum()
+    for _ in range(50):
+        p = rng.permutation(16)
+        assert opt <= c[p, np.arange(16)].sum() + 1e-9
+
+
+def test_exact_is_permutation(rng):
+    c, _, _ = _cost(rng, 33)
+    perm = exact_assignment(c)
+    assert sorted(perm) == list(range(33))
+
+
+def test_auction_matches_scipy(rng):
+    for n in (4, 9, 17):
+        c, _, _ = _cost(rng, n)
+        p_scipy = exact_assignment(c)
+        p_auction = auction_assignment(c)
+        v1 = c[p_scipy, np.arange(n)].sum()
+        v2 = c[p_auction, np.arange(n)].sum()
+        assert v2 <= v1 * (1 + 1e-6) + 1e-6  # auction is eps-optimal
+
+
+def test_permutation_recovery(rng):
+    """Aligning a shuffled copy of a matrix must recover the shuffle."""
+    x = rng.normal(size=(24, 12))
+    perm = rng.permutation(24)
+    y = x[perm]
+    got = ot_permutation(y, x)  # y[got] should equal x
+    np.testing.assert_array_equal(y[got], x)
+
+
+def test_sinkhorn_marginals(rng):
+    c, _, _ = _cost(rng, 12)
+    plan = np.asarray(sinkhorn(c.astype(np.float32), 0.05, 300))
+    np.testing.assert_allclose(plan.sum(1), np.full(12, 1 / 12), atol=1e-3)
+    np.testing.assert_allclose(plan.sum(0), np.full(12, 1 / 12), atol=1e-3)
+
+
+def test_sinkhorn_rounding_is_permutation(rng):
+    c, _, _ = _cost(rng, 10)
+    plan = np.asarray(sinkhorn(c.astype(np.float32), 0.02, 500))
+    perm = round_plan_to_permutation(plan)
+    assert sorted(perm) == list(range(10))
+
+
+def test_sinkhorn_near_exact_on_separated(rng):
+    """With well-separated points, Sinkhorn + rounding = exact solution."""
+    x = rng.normal(size=(8, 4)) * 10
+    perm = rng.permutation(8)
+    y = x[perm]
+    got = ot_permutation(y, x, solver="sinkhorn", reg=0.01, iters=500)
+    np.testing.assert_array_equal(y[got], x)

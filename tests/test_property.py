@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compress import compress_bank, design_matrices, restored_bank
+from repro.core.ot import ot_permutation
+from repro.core.residual import prune_unstructured, svd_rank_for_ratio
+
+_settings = dict(max_examples=20, deadline=None)
+
+
+@given(
+    n=st.integers(2, 5),
+    p_i=st.integers(2, 12),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+@settings(**_settings)
+def test_ot_permutation_recovery(n, p_i, d, seed):
+    """For any matrix with distinct rows, OT alignment of a shuffled copy
+    recovers the shuffle exactly."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(p_i, d)) * 3
+    perm = rng.permutation(p_i)
+    got = ot_permutation(x[perm], x)
+    np.testing.assert_allclose(x[perm][got], x)
+
+
+@given(
+    m=st.integers(1, 24),
+    n=st.integers(1, 24),
+    ratio=st.floats(0.05, 1.0),
+    seed=st.integers(0, 10_000),
+)
+@settings(**_settings)
+def test_prune_monotone_error(m, n, ratio, seed):
+    """Pruning error is monotone non-increasing in keep ratio, and exact-k."""
+    rng = np.random.default_rng(seed)
+    d = rng.normal(size=(m, n)).astype(np.float32)
+    c1 = prune_unstructured(d, ratio)
+    c2 = prune_unstructured(d, min(1.0, ratio + 0.3))
+    e1 = ((c1.to_dense() - d) ** 2).sum()
+    e2 = ((c2.to_dense() - d) ** 2).sum()
+    assert e2 <= e1 + 1e-6
+    assert c1.nnz == max(1, round(ratio * d.size))
+
+
+@given(
+    m=st.integers(2, 64),
+    n=st.integers(2, 64),
+    ratio=st.floats(0.05, 0.9),
+)
+@settings(**_settings)
+def test_svd_rank_positive_and_bounded(m, n, ratio):
+    r = svd_rank_for_ratio(m, n, ratio)
+    assert 1 <= r
+    # never more params than the requested budget + one rank step
+    assert r * (m + n) <= ratio * m * n + (m + n)
+
+
+@given(seed=st.integers(0, 1000), keep=st.floats(0.1, 0.9))
+@settings(max_examples=8, deadline=None)
+def test_resmoe_error_bounded_by_center_distance(seed, keep):
+    """The ResMoE error never exceeds the uncompressed residual energy
+    (compressing the residual can only reduce what's stored, and keeping
+    top-magnitude entries keeps error <= full residual energy)."""
+    rng = np.random.default_rng(seed)
+    n, d, f = 4, 6, 8
+    bank = {
+        "w1": rng.normal(size=(n, d, f)).astype(np.float32),
+        "w3": rng.normal(size=(n, d, f)).astype(np.float32),
+        "w2": rng.normal(size=(n, f, d)).astype(np.float32),
+    }
+    design = design_matrices(bank)
+    comp = compress_bank(bank, method="up", keep_ratio=keep)
+    err = comp.approximation_error(design)
+    # residual energy with NO compression of deltas:
+    full_energy = 0.0
+    for k in range(n):
+        dd = design[k][comp.perms[k]] - comp.center
+        full_energy += (dd * dd).sum()
+    full_energy /= n * design.shape[1]
+    assert err <= full_energy + 1e-9
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=6, deadline=None)
+def test_restored_expert_function_invariance(seed):
+    """Restore at keep=1 (UP) preserves every expert as a function for any
+    random bank — the permutation-invariance property end-to-end."""
+    import jax
+
+    rng = np.random.default_rng(seed)
+    n, d, f = 3, 5, 7
+    bank = {
+        "w1": rng.normal(size=(n, d, f)).astype(np.float32),
+        "w3": rng.normal(size=(n, d, f)).astype(np.float32),
+        "w2": rng.normal(size=(n, f, d)).astype(np.float32),
+    }
+    comp = compress_bank(bank, method="up", keep_ratio=1.0)
+    rb = restored_bank(comp, {k: v[0] for k, v in bank.items()})
+    x = rng.normal(size=(4, d)).astype(np.float32)
+
+    def f_expert(w, x):
+        h = jax.nn.silu(x @ w["w1"]) * (x @ w["w3"])
+        return np.asarray(h @ w["w2"])
+
+    for k in range(n):
+        a = f_expert({m: bank[m][k] for m in bank}, x)
+        b = f_expert({m: rb[m][k] for m in rb}, x)
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+@given(
+    t=st.integers(1, 40),
+    e=st.integers(2, 8),
+    k=st.integers(1, 2),
+    seed=st.integers(0, 5000),
+)
+@settings(**_settings)
+def test_dispatch_conservation(t, e, k, seed):
+    """Every kept (token, expert) pair lands in exactly one slot and is
+    recovered by combine with weight 1."""
+    import jax.numpy as jnp
+
+    from repro.models.moe import combine_tokens, dispatch_tokens, make_dispatch
+
+    rng = np.random.default_rng(seed)
+    k = min(k, e)
+    ids = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    cap = t * k
+    token_idx, dest, keep, sort_idx = make_dispatch(ids, e, cap)
+    x = jnp.asarray(rng.normal(size=(t, 4)), jnp.float32)
+    xg = dispatch_tokens(x, token_idx, dest, keep, e, cap)
+    ones = jnp.ones((t * k,), jnp.float32)
+    out = combine_tokens(xg, ones, token_idx, dest, keep, t, sort_idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(k * x),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,86 @@
+"""Residual compressor unit tests."""
+import numpy as np
+import pytest
+
+from repro.core.residual import (
+    compress_residual,
+    compress_svd,
+    prune_block,
+    prune_unstructured,
+    svd_rank_for_ratio,
+)
+
+
+def test_prune_exact_count(rng):
+    d = rng.normal(size=(32, 48)).astype(np.float32)
+    for ratio in (0.1, 0.25, 0.5, 0.99):
+        c = prune_unstructured(d, ratio)
+        assert c.nnz == max(1, round(ratio * d.size))
+        assert (np.asarray(c.dense) != 0).sum() == c.nnz
+
+
+def test_prune_keeps_largest(rng):
+    d = rng.normal(size=(16, 16)).astype(np.float32)
+    c = prune_unstructured(d, 0.25)
+    kept = np.abs(c.dense[c.dense != 0])
+    dropped = np.abs(d[c.dense == 0])
+    assert kept.min() >= dropped.max() - 1e-7
+
+
+def test_prune_full_is_lossless(rng):
+    d = rng.normal(size=(8, 8)).astype(np.float32)
+    c = prune_unstructured(d, 1.0)
+    np.testing.assert_array_equal(c.to_dense(), d)
+
+
+def test_block_roundtrip(rng):
+    d = rng.normal(size=(32, 256)).astype(np.float32)
+    c = prune_block(d, 1.0, block_shape=(8, 128))
+    np.testing.assert_allclose(c.to_dense()[:32, :256], d)
+
+
+def test_block_param_budget(rng):
+    d = rng.normal(size=(64, 256)).astype(np.float32)
+    c = prune_block(d, 0.25, block_shape=(8, 128))
+    total_blocks = (64 // 8) * (256 // 128)
+    assert c.block_values.shape[0] == max(1, round(0.25 * total_blocks))
+
+
+def test_block_keeps_highest_energy(rng):
+    d = np.ones((16, 256), np.float32) * 0.01
+    d[0:8, 0:128] = 5.0  # one hot block
+    c = prune_block(d, 1 / 4, block_shape=(8, 128))
+    dense = c.to_dense()
+    assert dense[0, 0] == 5.0
+
+
+def test_svd_rank_formula():
+    # Appendix A.4: r*(m+n) ~ ratio*m*n
+    m, n, ratio = 128, 384, 0.25
+    r = svd_rank_for_ratio(m, n, ratio)
+    assert abs(r * (m + n) - ratio * m * n) <= (m + n)
+
+
+def test_svd_best_rank_k(rng):
+    d = rng.normal(size=(24, 40)).astype(np.float64)
+    c = compress_svd(d.astype(np.float32), keep_ratio=0.5)
+    r = c.u.shape[1]
+    # Eckart-Young: error equals sum of discarded squared singular values
+    s = np.linalg.svd(d, compute_uv=False)
+    best = (s[r:] ** 2).sum()
+    got = ((c.to_dense() - d) ** 2).sum()
+    np.testing.assert_allclose(got, best, rtol=1e-3)
+
+
+def test_storage_accounting(rng):
+    d = rng.normal(size=(64, 256)).astype(np.float32)
+    up = compress_residual(d, "up", 0.25)
+    blk = compress_residual(d, "block", 0.25)
+    svd = compress_residual(d, "svd", 0.25)
+    dense_bytes = d.size * 2
+    # UP with CSR int32 indexing costs ~3x its value bytes (paper App. A.7)
+    assert up.storage_bytes(2) > 0.25 * dense_bytes
+    # block index overhead is tiny: close to the pure value budget
+    assert blk.storage_bytes(2) < 0.27 * dense_bytes
+    assert svd.storage_bytes(2) <= 0.26 * dense_bytes
+    assert up.num_params() == round(0.25 * d.size)

@@ -1,0 +1,63 @@
+"""Serving loop: continuous batching equals sequential greedy decoding."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.launch.serve import Request, Server
+from repro.models import build_model, compress_model_params
+from repro.sharding import split_logical
+
+
+def _sequential_generate(model, params, prompt, max_new):
+    """Reference: naive prefill + decode for a single prompt."""
+    cache, _ = split_logical(model.init_cache(1, 128))
+    s = len(prompt)
+    pos = jnp.arange(s, dtype=jnp.int32)[None]
+    logits, cache = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                                  cache, positions=pos)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for t in range(max_new - 1):
+        p = jnp.full((1, 1), s + t, jnp.int32)
+        logits, cache = model.decode_step(
+            params, {"tokens": jnp.asarray([[out[-1]]], jnp.int32)}, cache, p)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+def test_server_matches_sequential(rng):
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    prompts = [rng.integers(0, cfg.vocab_size, size=(rng.integers(4, 10),))
+               .astype(np.int32) for _ in range(5)]
+    server = Server(model, params, num_slots=3, max_seq=128)
+    reqs = [Request(prompt=p, max_new_tokens=6) for p in prompts]
+    server.serve(reqs)
+    for p, r in zip(prompts, reqs):
+        ref = _sequential_generate(model, params, p, 6)
+        assert r.output == ref, (r.output, ref)
+
+
+def test_server_with_compressed_params(rng):
+    """Serving with ResMoE-compressed params: runs; near-lossless store
+    reproduces the dense generation."""
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="up", keep_ratio=1.0,
+                                        apply_mode="restored"))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    prompt = rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+
+    dense = Server(model, params, num_slots=2, max_seq=64)
+    comp = Server(model, cp, num_slots=2, max_seq=64, apply_mode="restored")
+    r1 = Request(prompt=prompt, max_new_tokens=5)
+    r2 = Request(prompt=prompt, max_new_tokens=5)
+    dense.serve([r1])
+    comp.serve([r2])
+    assert r1.output == r2.output
