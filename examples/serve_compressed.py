@@ -24,13 +24,17 @@ def main():
     ap.add_argument("--max-new", type=int, default=10)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--keep-ratio", type=float, default=0.5)
+    ap.add_argument("--apply-mode", default="fused",
+                    choices=("restored", "fused", "fused_shared",
+                             "fused_kernel"),
+                    help="fused_kernel = grouped Pallas kernel hot path")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
     cfg = dataclasses.replace(
         cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd",
                                         keep_ratio=args.keep_ratio,
-                                        apply_mode="fused"))
+                                        apply_mode=args.apply_mode))
     model = build_model(cfg)
     # compression targets a TRAINED model (the paper's setting): a short
     # training run gives the experts the shared structure ResMoE exploits.
@@ -49,7 +53,7 @@ def main():
 
     dense = Server(model, params, num_slots=args.slots, max_seq=128)
     comp = Server(model, compressed, num_slots=args.slots, max_seq=128,
-                  apply_mode="fused")
+                  apply_mode=args.apply_mode)
     reqs_d = [Request(prompt=p, max_new_tokens=args.max_new) for p in prompts]
     reqs_c = [Request(prompt=p, max_new_tokens=args.max_new) for p in prompts]
     dense.serve(reqs_d)

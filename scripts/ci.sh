@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Single CI entry point.
+#
+#   scripts/ci.sh            # tier-1: the full test suite (fail-fast)
+#   scripts/ci.sh kernels    # fast kernel-parity subset only (~1 min)
+#   scripts/ci.sh all        # tier-1, then the kernel subset verbosely
+#
+# Tier-1 is the gate every PR must keep green (ROADMAP.md).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+tier1() {
+    python -m pytest -x -q
+}
+
+# Fast parity subset: every Pallas kernel against its ref.py oracle
+# (interpret mode on CPU) + the fused_kernel == fused model-level check.
+kernels() {
+    python -m pytest -q \
+        tests/test_kernels.py \
+        tests/test_wkv6_kernel.py \
+        "tests/test_moe.py::test_resmoe_fused_kernel_matches_fused"
+}
+
+case "${1:-tier1}" in
+    tier1)   tier1 ;;
+    kernels) kernels ;;
+    all)     tier1; kernels ;;
+    *) echo "usage: $0 [tier1|kernels|all]" >&2; exit 2 ;;
+esac

@@ -62,13 +62,26 @@ class ResMoEConfig:
     ot_solver: str = "exact"
     sinkhorn_reg: float = 0.01
     sinkhorn_iters: int = 200
-    # Forward path: "restored" (paper Algorithm 2: materialize W_c + delta)
-    # or "fused" (beyond-paper: never materialize; shared-base + low-rank).
+    # Forward path: "restored" (paper Algorithm 2: materialize W_c + delta),
+    # "fused" (beyond-paper: never materialize; shared-base + low-rank
+    # einsums), "fused_shared" (fused + center products computed once per
+    # token before dispatch), or "fused_kernel" (fused on the grouped Pallas
+    # kernel — one pallas_call per segment over the whole dispatched expert
+    # bank; the serving hot path, DESIGN.md §4.2).
     apply_mode: str = "restored"
     # Beyond-paper: treat per-layer dense FFNs as the expert population.
     scope: str = "experts"  # "experts" | "cross_layer"
     # Block shape for method="block" (TPU tile-aligned).
     block_shape: Tuple[int, int] = (8, 128)
+
+    APPLY_MODES = ("restored", "fused", "fused_shared", "fused_kernel")
+
+    def __post_init__(self):
+        if self.apply_mode not in self.APPLY_MODES:
+            raise ValueError(
+                f"unknown resmoe apply_mode {self.apply_mode!r}; "
+                f"expected one of {self.APPLY_MODES}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,11 +1,19 @@
 """Pallas TPU kernels (validated in interpret mode against ref oracles):
 
-  * resmoe_lowrank — fused restore-free ResMoE-SVD matmul (hot path)
+  * resmoe_lowrank — fused restore-free ResMoE-SVD matmul (single expert)
+  * resmoe_grouped — grouped restore-free matmul over the whole dispatched
+                     expert bank (serving hot path, DESIGN.md §4.2)
   * block_sparse   — BCSR residual matmul (TPU adaptation of UP)
   * wkv6           — chunked RWKV6 recurrence (state VMEM-resident)
 """
 from .block_sparse import block_sparse_matmul, prepare_bcsr
-from .ops import bcsr_from_residual, resmoe_block_apply, resmoe_svd_apply
+from .ops import (
+    bcsr_from_residual,
+    resmoe_block_apply,
+    resmoe_grouped_svd_apply,
+    resmoe_svd_apply,
+)
+from .resmoe_grouped import grouped_lowrank_matmul
 from .resmoe_lowrank import lowrank_restore_matmul
 from .wkv6 import wkv6_chunk, wkv6_ref
 
@@ -15,7 +23,9 @@ __all__ = [
     "bcsr_from_residual",
     "resmoe_block_apply",
     "resmoe_svd_apply",
+    "resmoe_grouped_svd_apply",
     "lowrank_restore_matmul",
+    "grouped_lowrank_matmul",
     "wkv6_chunk",
     "wkv6_ref",
 ]

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .block_sparse import block_sparse_matmul, prepare_bcsr
+from .resmoe_grouped import grouped_lowrank_matmul
 from .resmoe_lowrank import lowrank_restore_matmul
 
 
@@ -33,6 +34,25 @@ def resmoe_svd_apply(
     a = v.T  # [K, r]
     b = u.T  # [r, N]
     return lowrank_restore_matmul(x, center, a, b, interpret=interpret)
+
+
+def resmoe_grouped_svd_apply(
+    xg: jnp.ndarray,  # [E, C, K] dispatched bank
+    center: jnp.ndarray,  # [K, N] shared barycenter segment (weight layout)
+    u: jnp.ndarray,  # [E, N, r] design-row factors
+    v: jnp.ndarray,  # [E, r, K] design-col slices for this segment
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Grouped restore-free bank matmul y[e] = xg[e] @ (center + corr[e]).
+
+    Bank-level counterpart of :func:`resmoe_svd_apply`: the weight-layout
+    correction for a [K, N] segment is v[e]^T @ u[e]^T, so the kernel's
+    per-expert (A, B) are (swapaxes(v) [E, K, r], swapaxes(u) [E, r, N]).
+    """
+    a = jnp.swapaxes(v, 1, 2)
+    b = jnp.swapaxes(u, 1, 2)
+    return grouped_lowrank_matmul(xg, center, a, b, interpret=interpret)
 
 
 def resmoe_block_apply(

@@ -17,6 +17,38 @@ def lowrank_restore_matmul_ref(
     ) @ b.astype(jnp.float32)
 
 
+def grouped_lowrank_matmul_ref(
+    xg: jnp.ndarray,  # [E, C, K] dispatched expert bank
+    w: jnp.ndarray,  # [K, N]    shared barycenter segment
+    a: jnp.ndarray,  # [E, K, R] per-expert residual row factor
+    b: jnp.ndarray,  # [E, R, N] per-expert residual col factor
+) -> jnp.ndarray:
+    """y[e] = xg[e] @ (W + A[e] @ B[e]), computed restore-free per expert."""
+    xf = xg.astype(jnp.float32)
+    base = jnp.einsum("eck,kn->ecn", xf, w.astype(jnp.float32))
+    t = jnp.einsum("eck,ekr->ecr", xf, a.astype(jnp.float32))
+    return base + jnp.einsum("ecr,ern->ecn", t, b.astype(jnp.float32))
+
+
+def grouped_expert_bank_ref(xg, center, u, v, activation="silu"):
+    """Full restore-free expert FFN over the bank (GLU-aware oracle).
+
+    Mirrors moe.py's fused math: h = act(x@Wc1 + corr1) [* (x@Wc3 + corr3)],
+    y = h@Wc2 + corr2, with corr_s the per-expert low-rank correction.
+    """
+    import jax
+
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "relu": jax.nn.relu}[activation]
+    ut = jnp.swapaxes(u, 1, 2)  # [E, r, f]
+    h = act(grouped_lowrank_matmul_ref(
+        xg, center["w1"], jnp.swapaxes(v["w1"], 1, 2), ut))
+    if "w3" in center:
+        h = h * grouped_lowrank_matmul_ref(
+            xg, center["w3"], jnp.swapaxes(v["w3"], 1, 2), ut)
+    return grouped_lowrank_matmul_ref(h, center["w2"], u, v["w2"])
+
+
 def block_sparse_matmul_ref(
     x: jnp.ndarray,  # [M, K]
     values: jnp.ndarray,  # [nnzb, bk, bn]

@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: grouped restore-free ResMoE-SVD expert-bank matmul.
+
+Extends resmoe_lowrank.py from one expert to the *entire dispatched bank*:
+
+    y[e] = xg[e] @ (W + A[e] @ B[e])        e = 0..E-1
+
+where ``W`` ([K, N]) is the expert-independent barycenter segment shared by
+every expert and ``A``/``B`` ([E, K, R] / [E, R, N]) are the per-expert
+low-rank residual factors — the exact math of moe.py's ``fused`` path, but
+in ONE ``pallas_call`` instead of E-strided einsums over the whole
+[E, C, d] dispatch buffer (DESIGN.md §4.2).
+
+Grid: (C/bm, N/bn, E, K/bk) — k innermost, experts *inside* the (m, n)
+tile loops.  Per (e, m, n) pass the kernel follows the single-expert
+two-matmul structure: accumulate the shared-center partial product and the
+low-rank projection t = x @ A[e] in VMEM scratch (f32), flush
+``acc + t @ B_tile`` on the last k step.  Because the W block's index map
+is expert-independent, whenever the (padded) contraction fits one k block
+(the default block picker prefers this while the working set fits VMEM)
+consecutive expert steps map W to the SAME block and Pallas elides the
+refetch: the center tile streams HBM->VMEM once per (m, n) tile instead of
+E times — the property that keeps the restore-free bank at dense-expert
+arithmetic intensity.  R is padded to a lane multiple and kept whole in
+VMEM (ResMoE ranks are small: keep_ratio * K*N/(K+N)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Per-call VMEM working-set budget for the default block picker. Real TPUs
+# have ~16MB/core; leave headroom for Pallas double-buffering (accounted
+# below) and the output buffer.
+_VMEM_BUDGET = 10 * 1024 * 1024
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, t_ref, *, n_k: int):
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    x = x_ref[0]
+    acc_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    t_ref[...] += jnp.dot(x, a_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _flush():
+        lowrank = jnp.dot(
+            t_ref[...].astype(b_ref.dtype), b_ref[0],
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[0] = (acc_ref[...] + lowrank).astype(o_ref.dtype)
+
+
+def _pick_bk(kp: int, bm: int, bn: int, rp: int, itemsize: int) -> int:
+    """Largest MXU-aligned k block whose working set fits the VMEM budget.
+
+    Prefers bk == kp (single k step): that is what lets Pallas reuse the
+    shared center tile across the expert grid axis.
+    """
+
+    def footprint(bk: int) -> int:
+        blocks = bm * bk + bk * bn + bk * rp + rp * bn  # x, w, a, b
+        return 2 * itemsize * blocks + 4 * (bm * bn + bm * rp) + itemsize * bm * bn
+
+    if footprint(kp) <= _VMEM_BUDGET:
+        return kp
+    bk = 1024
+    while bk > 128 and footprint(bk) > _VMEM_BUDGET:
+        bk //= 2
+    return bk
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def grouped_lowrank_matmul(
+    xg: jnp.ndarray,  # [E, C, K] dispatched tokens (C = per-expert capacity)
+    w: jnp.ndarray,  # [K, N]    shared barycenter segment
+    a: jnp.ndarray,  # [E, K, R] per-expert residual row factor
+    b: jnp.ndarray,  # [E, R, N] per-expert residual col factor
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """y[e] = xg[e] @ (w + a[e] @ b[e]) for the whole expert bank."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    e, c, k = xg.shape
+    kk, n = w.shape
+    ee, ka, r = a.shape
+    assert kk == k and ee == e and ka == k and b.shape == (e, r, n), (
+        xg.shape, w.shape, a.shape, b.shape)
+    out_dtype = out_dtype or xg.dtype
+
+    # shrink bm to the (sublane-aligned) capacity — decode-sized banks would
+    # otherwise pad C=8 up to 128 rows of zeros per expert
+    sub = 16 if jnp.dtype(xg.dtype).itemsize == 2 else 8
+    bm = min(bm, max(sub, -(-c // sub) * sub))
+    pr = (-r) % 128
+    rp = r + pr
+    if bk is None:
+        kp0 = k + ((-k) % 128)
+        bk = _pick_bk(kp0, bm, bn, rp, jnp.dtype(xg.dtype).itemsize)
+
+    # pad every dim to its block multiple (kernel-internal; sliced on exit)
+    pm, pn, pk = (-c) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        xg = jnp.pad(xg, ((0, 0), (0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    if pk or pr:
+        a = jnp.pad(a, ((0, 0), (0, pk), (0, pr)))
+    if pr or pn:
+        b = jnp.pad(b, ((0, 0), (0, pr), (0, pn)))
+    cp, kp = xg.shape[1:]
+    np_ = w.shape[1]
+    rp = a.shape[2]
+    n_k = kp // bk
+
+    grid = (cp // bm, np_ // bn, e, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda i, j, g, s: (g, i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, g, s: (s, j)),
+            pl.BlockSpec((1, bk, rp), lambda i, j, g, s: (g, s, 0)),
+            pl.BlockSpec((1, rp, bn), lambda i, j, g, s: (g, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda i, j, g, s: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, np_), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, rp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xg, w, a, b)
+    return out[:, :c, :n]

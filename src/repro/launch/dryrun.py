@@ -258,7 +258,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         except Exception as e:  # pragma: no cover — backend-dependent
             record["memory_analysis"] = {"error": repr(e)}
         try:
-            ca = compiled.cost_analysis()
+            from .hlo_cost import xla_cost_analysis
+
+            ca = xla_cost_analysis(compiled)
             record["cost_analysis"] = {
                 k: float(v) for k, v in ca.items()
                 if isinstance(v, (int, float)) and (

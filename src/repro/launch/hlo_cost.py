@@ -341,3 +341,15 @@ class HloCost:
 
 def analyze_hlo_text(text: str) -> Dict[str, float]:
     return HloCost(text).entry_cost()
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized across jax versions.
+
+    jax <= 0.4.x returns a one-dict-per-device list; newer jax returns the
+    dict directly. Always returns the (first device's) flat dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -11,8 +11,11 @@ Design (vLLM-style, slot-granular):
     slots (max tokens or EOS) are freed and refilled from the queue.
 
 ResMoE integration: pass compressed params and ``apply_mode`` — "restored"
-(paper Algorithm 2: restore-on-the-fly) or "fused"/"fused_shared"
-(beyond-paper restore-free path).
+(paper Algorithm 2: restore-on-the-fly), "fused"/"fused_shared"
+(beyond-paper restore-free einsum path), or "fused_kernel" (restore-free
+path on the grouped Pallas kernel, kernels/resmoe_grouped.py — one
+pallas_call per expert-FFN segment over the whole dispatched bank; see
+DESIGN.md §4.2).
 """
 from __future__ import annotations
 
@@ -99,6 +102,9 @@ class Server:
     # -- request lifecycle ------------------------------------------------------
 
     def _admit(self, req: Request, slot: int):
+        if req.max_new_tokens <= 0:
+            req.output = []
+            return
         toks = np.asarray(req.prompt, np.int32)
         s = len(toks)
         pos = jnp.arange(s, dtype=jnp.int32)[None, :]
@@ -107,12 +113,19 @@ class Server:
             self.params, {"tokens": jnp.asarray(toks)[None, :]}, row, pos
         )
         nxt = int(jnp.argmax(logits[0, -1]))
+        req.output = [nxt]
+        # prefill already emitted one token — a max_new_tokens=1 (or
+        # immediate-EOS) request must finish here, never taking a decode
+        # step (it used to overshoot to 2 tokens).
+        if len(req.output) >= req.max_new_tokens or (
+            req.eos_id is not None and nxt == req.eos_id
+        ):
+            return
         self._insert_row(row, slot)
         self.slot_free[slot] = False
         self.slot_pos[slot] = s
         self.slot_req[slot] = req
         self.slot_last_tok[slot] = nxt
-        req.output = [nxt]
 
     def _step_all(self):
         toks = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
@@ -143,33 +156,47 @@ class Server:
     def serve(self, requests: Sequence[Request]) -> List[Request]:
         """Run the continuous-batching loop until all requests finish."""
         queue = list(requests)
-        pending = len(queue)
-        while pending:
+        while queue or not all(self.slot_free):
             for slot in range(self.num_slots):
-                if self.slot_free[slot] and queue:
+                # a request may finish AT admit (max_new_tokens=1 / instant
+                # EOS) leaving the slot free — keep draining the queue
+                while self.slot_free[slot] and queue:
                     self._admit(queue.pop(0), slot)
-            if all(self.slot_free):
-                break
-            self._step_all()
-            pending = len(queue) + sum(not f for f in self.slot_free)
+            if not all(self.slot_free):
+                self._step_all()
         return list(requests)
 
 
 def main():  # pragma: no cover — exercised by examples/serve_compressed.py
     import argparse
+    import dataclasses
 
     from ..configs import reduced_config
+    from ..configs.base import ResMoEConfig
     from ..models import build_model
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument(
+        "--apply-mode", default=None, choices=ResMoEConfig.APPLY_MODES,
+        help="serve a ResMoE-compressed model under this forward path "
+             "(default: uncompressed dense experts)",
+    )
     args = ap.parse_args()
     cfg = reduced_config(args.arch)
     model = build_model(cfg)
     params, _ = model.init_split(jax.random.PRNGKey(0))
-    server = Server(model, params, num_slots=4, max_seq=128)
+    if args.apply_mode is not None:
+        from ..models import compress_model_params
+
+        cfg = dataclasses.replace(
+            cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd"))
+        model = build_model(cfg)
+        params, _ = compress_model_params(params, cfg)
+    server = Server(model, params, num_slots=4, max_seq=128,
+                    apply_mode=args.apply_mode)
     rng = np.random.default_rng(0)
     reqs = [
         Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,)),

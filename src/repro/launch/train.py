@@ -101,7 +101,7 @@ def make_dp_compressed_train_step(model, optimizer, mesh, dp_axis: str = "data")
     collective is an explicit shard_map psum over quantized payloads
     (DESIGN.md §5). Use on DP-only meshes.
     """
-    from jax import shard_map
+    from ..sharding import shard_map_unchecked
 
     def step(params, opt_state, comp_state, batch):
         def per_shard(params, comp_err, batch):
@@ -119,7 +119,7 @@ def make_dp_compressed_train_step(model, optimizer, mesh, dp_axis: str = "data")
         pspec_rep = jax.tree_util.tree_map(lambda _: P(), params)
         pspec_err = jax.tree_util.tree_map(lambda _: P(), comp_state.error)
         bspec = jax.tree_util.tree_map(lambda _: P(dp_axis), batch)
-        grads, new_err, loss = shard_map(
+        grads, new_err, loss = shard_map_unchecked(
             per_shard,
             mesh=mesh,
             in_specs=(pspec_rep, pspec_err, bspec),

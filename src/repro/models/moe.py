@@ -11,6 +11,13 @@ Three interchangeable expert-compute paths share one router/dispatch:
                        center matmuls ONCE per token before dispatch (they
                        are expert-independent), removing (k-1)/k of the
                        center FLOPs for top-k routing.
+                       ``fused_kernel`` runs the same math on the grouped
+                       Pallas kernel (kernels/resmoe_grouped.py): one
+                       pallas_call per segment over the whole [E, C, d]
+                       dispatch buffer, the shared center tile streamed
+                       HBM->VMEM once per output tile and the per-expert
+                       low-rank factors accumulated in VMEM scratch
+                       (DESIGN.md §4.2) — the serving hot path.
 
 Dispatch is sort/gather-based (MaxText-style "sparse matmul" path): tokens
 are sorted by expert id, padded to a static per-expert capacity, processed
@@ -90,10 +97,15 @@ def route(
         probs = scores / (scores.sum(-1, keepdims=True) + 1e-20)
     else:
         gate_vals, expert_ids = jax.lax.top_k(logits, m.top_k)
-        gates = jax.nn.softmax(gate_vals, axis=-1) if m.normalize_gates else jax.nn.softmax(
-            logits, axis=-1
-        ).max(-1, keepdims=True)
         probs = jax.nn.softmax(logits, axis=-1)
+        if m.normalize_gates:
+            gates = jax.nn.softmax(gate_vals, axis=-1)
+        else:
+            # full-softmax probability of each SELECTED expert — shape [T, k].
+            # (A .max(-1) here once collapsed gates to [T, 1] for k>1, making
+            # combine_tokens index gates_flat out of bounds — silently
+            # clamped by jnp gather.)
+            gates = jnp.take_along_axis(probs, expert_ids, axis=-1)
 
     # Switch-style load-balance loss + router z-loss
     e = m.num_experts
@@ -230,6 +242,29 @@ def _fused_expert_ffn(params, xg: jnp.ndarray, activation: str,
     return y + jnp.einsum("ecr,erd->ecd", t2, v["w2"])
 
 
+def _fused_kernel_expert_ffn(params, xg: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """Restore-free path on the grouped Pallas kernel (DESIGN.md §4.2).
+
+    Identical math to :func:`_fused_expert_ffn`, but each segment's
+    base + low-rank matmul pair runs as ONE ``pallas_call`` over the whole
+    dispatched bank instead of separate einsums — the center segment is
+    never re-read per expert and the restored bank is never materialized.
+    """
+    from ..kernels import grouped_lowrank_matmul
+
+    act = activation_fn(activation)
+    c, u, v = params["center"], params["u"], params["v"]
+    ut = jnp.swapaxes(u, 1, 2)  # [E, r, f] — shared by the w1/w3 segments
+    h = act(grouped_lowrank_matmul(xg, c["w1"], jnp.swapaxes(v["w1"], 1, 2), ut))
+    if "w3" in c:
+        h = h * grouped_lowrank_matmul(
+            xg, c["w3"], jnp.swapaxes(v["w3"], 1, 2), ut
+        )
+    h = hint(h, ("experts", "expert_cap", "expert_mlp"))
+    y = grouped_lowrank_matmul(h, c["w2"], u, v["w2"])
+    return hint(y, ("experts", "expert_cap", "embed"))
+
+
 # ---------------------------------------------------------------------------
 # Full layer
 # ---------------------------------------------------------------------------
@@ -243,7 +278,8 @@ def moe_layer(
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Run one MoE layer. ``params`` holds either a dense bank or a ResMoE
     compressed store (decided by key presence); ``apply_mode`` overrides
-    cfg.resmoe.apply_mode ("restored" | "fused" | "fused_shared").
+    cfg.resmoe.apply_mode
+    ("restored" | "fused" | "fused_shared" | "fused_kernel").
 
     Under a sharding-rules context with a divisible 'model' axis, the dense
     path switches to the explicit shard_map expert-parallel layer
@@ -280,6 +316,9 @@ def moe_layer(
     elif mode == "fused":
         xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
         yg = _fused_expert_ffn(params, xg, cfg.activation)
+    elif mode == "fused_kernel":
+        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
+        yg = _fused_kernel_expert_ffn(params, xg, cfg.activation)
     elif mode == "fused_shared":
         # center products computed ONCE per token (expert-independent)
         c = params["center"]

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
-from ..sharding import ShardingRules, use_rules
+from ..sharding import ShardingRules, shard_map_unchecked, use_rules
 from .layers import activation_fn
 
 
@@ -169,8 +169,7 @@ def ep_moe_layer(
     other_axes = tuple(a for a in mesh.axis_names if a not in batch_axes)
     in_specs = (_param_specs(params, cfg), P(bspec, None))
     out_specs = (P(bspec, None), P())
-    y, aux = jax.shard_map(
+    y, aux = shard_map_unchecked(
         region, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
     )({k: v for k, v in params.items() if k in _param_specs(params, cfg)}, x2d)
     return y, aux

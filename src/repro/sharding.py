@@ -134,6 +134,28 @@ def use_rules(rules: Optional[ShardingRules]):
         _state.rules = prev
 
 
+def shard_map_unchecked(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` with the replication check disabled, across jax versions.
+
+    jax <= 0.4.x: ``jax.experimental.shard_map.shard_map(check_rep=...)``;
+    newer jax promotes it to ``jax.shard_map`` and renames the kwarg to
+    ``check_vma``. Our regions psum to replicated outputs through
+    quantize/dequantize round-trips the checker cannot see through, so the
+    check must be off either way.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:  # transitional releases kept check_rep
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+
+
 def make_rules(mesh: Mesh, overrides: Optional[Dict[str, Optional[str]]] = None) -> ShardingRules:
     rules = dict(DEFAULT_RULES)
     if overrides:

@@ -7,12 +7,19 @@ import pytest
 from repro.kernels import (
     bcsr_from_residual,
     block_sparse_matmul,
+    grouped_lowrank_matmul,
     lowrank_restore_matmul,
     prepare_bcsr,
     resmoe_block_apply,
+    resmoe_grouped_svd_apply,
     resmoe_svd_apply,
 )
-from repro.kernels.ref import block_sparse_matmul_ref, lowrank_restore_matmul_ref
+from repro.kernels.ref import (
+    block_sparse_matmul_ref,
+    grouped_expert_bank_ref,
+    grouped_lowrank_matmul_ref,
+    lowrank_restore_matmul_ref,
+)
 
 
 @pytest.mark.parametrize("m,k,n,r", [
@@ -87,6 +94,106 @@ def test_ops_block_apply_matches_restore(rng):
     y = resmoe_block_apply(jnp.asarray(x), jnp.asarray(center), bcsr, interpret=True)
     yref = x @ (center + res.to_dense()[:K, :N])
     np.testing.assert_allclose(np.asarray(y), yref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("e,c,k,n,r", [
+    (4, 128, 128, 128, 16),
+    (8, 64, 256, 384, 32),
+    (3, 100, 200, 300, 33),   # every dim unaligned -> padding path
+    (2, 8, 512, 128, 1),      # tiny capacity + tiny rank
+    (5, 16, 96, 640, 130),    # rank > 128 -> multi-tile R
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_kernel_allclose(e, c, k, n, r, dtype, rng):
+    xg = jnp.asarray(rng.normal(size=(e, c, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    a = jnp.asarray(rng.normal(size=(e, k, r)), dtype)
+    b = jnp.asarray(rng.normal(size=(e, r, n)), dtype)
+    y = grouped_lowrank_matmul(xg, w, a, b, interpret=True,
+                               out_dtype=jnp.float32)
+    yref = grouped_lowrank_matmul_ref(xg, w, a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    scale = float(jnp.max(jnp.abs(yref))) + 1e-9
+    assert float(jnp.max(jnp.abs(y - yref))) / scale < tol
+
+
+def test_grouped_kernel_multi_k_step(rng):
+    """Force several k blocks: the shared-center accumulator must survive
+    the expert grid axis sitting between (m, n) and k."""
+    e, c, k, n, r = 4, 48, 384, 256, 40
+    xg = jnp.asarray(rng.normal(size=(e, c, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(e, k, r)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(e, r, n)), jnp.float32)
+    y = grouped_lowrank_matmul(xg, w, a, b, bk=128, interpret=True)
+    yref = grouped_lowrank_matmul_ref(xg, w, a, b)
+    scale = float(jnp.max(jnp.abs(yref))) + 1e-9
+    assert float(jnp.max(jnp.abs(y - yref))) / scale < 1e-4
+
+
+def test_grouped_matches_single_expert_kernel(rng):
+    """The grouped kernel over a bank == the single-expert kernel per slice."""
+    e, c, k, n, r = 3, 32, 128, 160, 24
+    xg = jnp.asarray(rng.normal(size=(e, c, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(e, k, r)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(e, r, n)), jnp.float32)
+    y = grouped_lowrank_matmul(xg, w, a, b, interpret=True)
+    for i in range(e):
+        yi = lowrank_restore_matmul(xg[i], w, a[i], b[i], interpret=True)
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(yi),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("glu", [True, False])
+def test_grouped_bank_glu_oracle(glu, rng):
+    """Full expert-FFN bank (both segments, GLU on/off) vs the jnp oracle,
+    composed exactly as moe.py's fused_kernel path composes the kernel."""
+    import jax
+
+    e, c, d, f, r = 3, 24, 96, 160, 20
+    xg = jnp.asarray(rng.normal(size=(e, c, d)), jnp.float32)
+    center = {"w1": jnp.asarray(rng.normal(size=(d, f)), jnp.float32),
+              "w2": jnp.asarray(rng.normal(size=(f, d)), jnp.float32)}
+    if glu:
+        center["w3"] = jnp.asarray(rng.normal(size=(d, f)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(e, f, r)), jnp.float32)
+    v = {s: jnp.asarray(rng.normal(size=(e, r, dd)), jnp.float32)
+         for s, dd in (("w1", d), ("w3", d), ("w2", d)) if glu or s != "w3"}
+
+    ut = jnp.swapaxes(u, 1, 2)
+    h = jax.nn.silu(grouped_lowrank_matmul(
+        xg, center["w1"], jnp.swapaxes(v["w1"], 1, 2), ut, interpret=True))
+    if glu:
+        h = h * grouped_lowrank_matmul(
+            xg, center["w3"], jnp.swapaxes(v["w3"], 1, 2), ut, interpret=True)
+    y = grouped_lowrank_matmul(h, center["w2"], u, v["w2"], interpret=True)
+
+    yref = grouped_expert_bank_ref(xg, center, u, v, activation="silu")
+    scale = float(jnp.max(jnp.abs(yref))) + 1e-9
+    assert float(jnp.max(jnp.abs(y - yref))) / scale < 1e-4
+
+
+def test_ops_grouped_svd_apply_matches_restore(rng):
+    """resmoe_grouped_svd_apply on per-expert SVD stores == explicit
+    per-expert restore."""
+    from repro.core.residual import compress_svd
+
+    e, k, n, t = 3, 96, 160, 24
+    center = rng.normal(size=(k, n)).astype(np.float32)
+    xg = rng.normal(size=(e, t, k)).astype(np.float32)
+    us, vs, refs = [], [], []
+    for i in range(e):
+        dw = (rng.normal(size=(k, n)) * 0.1).astype(np.float32)
+        res = compress_svd(dw.T, keep_ratio=0.5)  # design layout [N, K]
+        us.append(res.u)
+        vs.append(res.v)
+        refs.append(xg[i] @ (center + (res.u @ res.v).T))
+    y = resmoe_grouped_svd_apply(
+        jnp.asarray(xg), jnp.asarray(center),
+        jnp.asarray(np.stack(us)), jnp.asarray(np.stack(vs)), interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.stack(refs),
+                               rtol=2e-4, atol=2e-4)
 
 
 def test_lowrank_kernel_hypothesis(rng):

@@ -124,6 +124,79 @@ def test_resmoe_paths_agree(rng):
                                atol=5e-3)
 
 
+def test_route_softmax_unnormalized_topk_gate_shape(rng):
+    """router_type=softmax + normalize_gates=False + top_k>1: gates must be
+    the full-softmax probabilities of the selected experts, shape [T, k].
+    (A .max(-1) regression collapsed them to [T, 1], so combine_tokens read
+    gates_flat out of bounds — silently clamped by jnp gather.)"""
+    cfg = _moe_cfg(normalize_gates=False, top_k=2)
+    m = cfg.moe
+    t = 16
+    router = jnp.asarray(rng.normal(size=(cfg.d_model, m.num_experts)),
+                         jnp.float32)
+    x = jnp.asarray(rng.normal(size=(t, cfg.d_model)), jnp.float32)
+    ids, gates, _ = route({"router": router}, x, m)
+    assert gates.shape == (t, m.top_k)
+    logits = np.asarray(x, np.float32) @ np.asarray(router)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    expected = np.take_along_axis(probs, np.asarray(ids), axis=-1)
+    np.testing.assert_allclose(np.asarray(gates), expected, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_combine_correct_with_unnormalized_gates(rng):
+    """End-to-end moe_layer under normalize_gates=False must equal a manual
+    per-token sum of gate_k * expert_k(x) — the combine path the [T, 1] gate
+    bug corrupted for k=2."""
+    cfg = _moe_cfg(normalize_gates=False, top_k=2, capacity_factor=8.0)
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(3))
+    f = params["segments"][0]["slots"][0]["ffn"]
+    bank = {k: np.asarray(v[0]) for k, v in f.items()
+            if k in ("router", "w1", "w2", "w3")}
+    x = jnp.asarray(rng.normal(size=(1, 5, cfg.d_model)), jnp.float32)
+    out, _ = moe_layer(bank, x, cfg)
+
+    x2d = np.asarray(x, np.float32).reshape(-1, cfg.d_model)
+    ids, gates, _ = route({"router": jnp.asarray(bank["router"])},
+                          jnp.asarray(x2d), cfg.moe)
+    ids, gates = np.asarray(ids), np.asarray(gates, np.float32)
+
+    def expert(i, xt):
+        import jax
+
+        h = jax.nn.silu(xt @ bank["w1"][i]) * (xt @ bank["w3"][i])
+        return np.asarray(h @ bank["w2"][i])
+
+    expected = np.zeros_like(x2d)
+    for t in range(x2d.shape[0]):
+        for j in range(cfg.moe.top_k):
+            expected[t] += gates[t, j] * expert(ids[t, j], x2d[t])
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, cfg.d_model),
+                               expected, rtol=2e-4, atol=2e-4)
+
+
+def test_resmoe_fused_kernel_matches_fused(rng):
+    """apply_mode='fused_kernel' (grouped Pallas kernel) must match the
+    einsum fused path through the full model, GLU included."""
+    cfg = _moe_cfg()
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(1))
+    cp, _ = compress_model_params(params, cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)),
+                                   jnp.int32)}
+    outs = {}
+    for mode in ("fused", "fused_kernel"):
+        logits, _ = jax.jit(
+            lambda p, b, m=mode: model.forward(p, b, apply_mode=m))(cp, batch)
+        outs[mode] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["fused"], outs["fused_kernel"],
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_resmoe_up_keep1_lossless(rng):
     cfg = _moe_cfg()
     cfg = dataclasses.replace(

@@ -42,6 +42,49 @@ def test_server_matches_sequential(rng):
         assert r.output == ref, (r.output, ref)
 
 
+def test_server_respects_max_new_tokens(rng):
+    """No decode overshoot: a request never receives more than
+    max_new_tokens tokens (a max_new_tokens=1 request used to get 2)."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    server = Server(model, params, num_slots=2, max_seq=64)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(5,)).astype(np.int32)
+               for _ in range(4)]
+    reqs = [Request(prompt=p, max_new_tokens=n)
+            for p, n in zip(prompts, (1, 1, 2, 4))]
+    server.serve(reqs)
+    for r in reqs:
+        assert len(r.output) == r.max_new_tokens, (len(r.output),
+                                                   r.max_new_tokens)
+    # the emitted prefixes must agree with an unconstrained generation
+    ref = _sequential_generate(model, params, prompts[0], 4)
+    assert reqs[0].output == ref[:1]
+
+
+def test_server_honors_eos(rng):
+    """Generation stops AT the first EOS token (still emitted, never
+    continued past) — including an EOS produced by prefill itself."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    prompt = rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+    free = _sequential_generate(model, params, prompt, 8)
+    # pick the greedy continuation's 3rd token as "EOS" so it fires mid-decode
+    eos = free[2]
+    server = Server(model, params, num_slots=2, max_seq=64)
+    req = Request(prompt=prompt, max_new_tokens=8, eos_id=eos)
+    server.serve([req])
+    first = req.output.index(eos)
+    assert req.output == free[: first + 1]
+    assert len(req.output) <= req.max_new_tokens
+    # EOS at the very first (prefill-emitted) token
+    server2 = Server(model, params, num_slots=2, max_seq=64)
+    req2 = Request(prompt=prompt, max_new_tokens=8, eos_id=free[0])
+    server2.serve([req2])
+    assert req2.output == [free[0]]
+
+
 def test_server_with_compressed_params(rng):
     """Serving with ResMoE-compressed params: runs; near-lossless store
     reproduces the dense generation."""
