@@ -5,7 +5,7 @@ Tables map 1:1 to the paper (see DESIGN.md §8):
   approx_error     -> Table 1      ablation_center -> Table 4
   downstream_eval  -> Tables 2/3/7 rate_sweep      -> Figure 4
   memory           -> Table 10     runtime         -> Table 11
-  flops_table      -> Table 12     roofline        -> EXPERIMENTS.md §Roofline
+  flops_table      -> Table 12     roofline        -> §4.3 cost model sweep
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only t1,t4,...] [--fast]
 """

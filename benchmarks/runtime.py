@@ -59,6 +59,89 @@ def run(seed: int = 0):
 
     rows.extend(grouped_comparison(rng))
     rows.extend(grouped_roofline_mixtral())
+    rows.extend(ep_vs_gspmd_compressed())
+    return rows
+
+
+def ep_vs_gspmd_compressed(mesh_shape=(2, 4)):
+    """EP-compressed vs GSPMD-compressed forward on a (data, model) mesh.
+
+    Compiles the same ResMoE-SVD fused forward twice — once with the EP
+    gate closed (GSPMD lowers the sharded store) and once with it open
+    (moe_ep.py shard_map: replicated center, sharded u/v, one [T_loc, d]
+    psum per layer, DESIGN.md §6) — and reports end-to-end wall-clock +
+    whole-model collective bytes, plus the §4.3 cost model's collective
+    bytes of ONE standalone MoE layer (lowered in isolation, so
+    attention/embedding collectives cannot pollute the per-layer number).
+
+    Needs prod(mesh_shape) devices; on a bare CPU run it emits a skip row
+    (rerun under XLA_FLAGS=--xla_force_host_platform_device_count=8).
+    """
+    need = int(np.prod(mesh_shape))
+    if len(jax.devices()) < need:
+        return [("T11/ep_compressed/skipped", 0.0,
+                 f"needs {need} devices; rerun under XLA_FLAGS="
+                 f"--xla_force_host_platform_device_count={need}")]
+
+    from repro.launch.hlo_cost import analyze_hlo_text
+    from repro.launch.mesh import make_mesh
+    from repro.models.model import abstract_compressed_params
+    from repro.sharding import make_rules, shardings_from_axes, use_rules
+
+    rng = np.random.default_rng(0)
+    base = reduced_config("mixtral-8x7b")
+    base = dataclasses.replace(
+        base, resmoe=dataclasses.replace(base.resmoe, method="svd",
+                                         keep_ratio=0.25))
+    model = build_model(base)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, base)
+    batch = {"tokens": jnp.asarray(rng.integers(0, base.vocab_size, (4, 64)),
+                                   jnp.int32)}
+    mesh = make_mesh(mesh_shape, ("data", "model"))
+    rules = make_rules(mesh)
+    # layer-0 slice of the stacked store, for the standalone-layer lowering
+    bank = jax.tree_util.tree_map(
+        lambda a: jnp.asarray(a[0]), cp["segments"][0]["slots"][0]["ffn"])
+    x_layer = jnp.asarray(rng.normal(size=(4, 64, base.d_model)), jnp.float32)
+
+    rows = []
+    # same params/batch; only the EP gate differs between the two variants
+    for name, thr in (("gspmd", 1 << 30), ("ep", 1)):
+        cfg = dataclasses.replace(
+            base, moe=dataclasses.replace(base.moe, ep_min_local_tokens=thr))
+        m = build_model(cfg)
+        _, axes = abstract_compressed_params(cfg)
+        sh = shardings_from_axes(axes, rules, cp)
+
+        def fwd(p, b, m=m):
+            with use_rules(rules):
+                return m.forward(p, b, apply_mode="fused")[0]
+
+        with mesh:
+            p = jax.device_put(cp, sh)
+            compiled = jax.jit(fwd).lower(p, batch).compile()
+            compiled(p, batch).block_until_ready()
+            us = timer(lambda: compiled(p, batch).block_until_ready(),
+                       repeats=5)
+        cost = analyze_hlo_text(compiled.as_text())
+        rows.append((f"T11/ep_compressed/{name}_us", round(us, 1),
+                     f"coll_total_model={cost['coll_total']:.3e}B"))
+
+        from repro.models.moe import moe_layer
+
+        def layer(p, xx, m=cfg):
+            with use_rules(rules):
+                return moe_layer(p, xx, m, apply_mode="fused")[0]
+
+        with mesh:
+            ltext = jax.jit(layer).lower(bank, x_layer).compile().as_text()
+        lcost = analyze_hlo_text(ltext)
+        rows.append((f"T11/ep_compressed/{name}_coll_B_per_moe_layer",
+                     round(lcost["coll_total"], 1),
+                     f"all_reduce={lcost['coll_all-reduce']:.3e} "
+                     f"all_gather={lcost['coll_all-gather']:.3e} "
+                     f"all_to_all={lcost['coll_all-to-all']:.3e}"))
     return rows
 
 

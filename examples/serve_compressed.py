@@ -13,6 +13,7 @@ import jax
 import numpy as np
 
 from repro.configs import reduced_config
+from repro.configs.base import ResMoEConfig
 from repro.launch.serve import Request, Server
 from repro.models import build_model, compress_model_params
 
@@ -25,8 +26,7 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--keep-ratio", type=float, default=0.5)
     ap.add_argument("--apply-mode", default="fused",
-                    choices=("restored", "fused", "fused_shared",
-                             "fused_kernel"),
+                    choices=ResMoEConfig.APPLY_MODES,
                     help="fused_kernel = grouped Pallas kernel hot path")
     args = ap.parse_args()
 

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Docs CI tier: fail on broken intra-repo references (scripts/ci.sh docs).
+
+Two checks, both purely static (no jax import):
+
+1. every relative markdown link ``[text](path)`` in every tracked ``*.md``
+   must resolve to an existing file (anchors stripped; http/mailto/#
+   links skipped). SNIPPETS.md is exempt — it quotes external repos.
+
+2. code blocks in the front-door READMEs (README.md, benchmarks/README.md)
+   must reference things that exist:
+     * path-like tokens (``scripts/ci.sh``, ``examples/*.py``) must exist;
+     * module tokens (``repro.launch.serve``, ``benchmarks.run``) must
+       resolve to a source file or package under src/ or the repo root;
+     * ``--flags`` on a line that invokes a resolvable script/module must
+       appear verbatim in that script's source (argparse strings).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```[\w-]*\n(.*?)```", re.S)
+PATH_RE = re.compile(r"(?<![\w./-])((?:[\w.-]+/)+[\w.-]+\.(?:py|sh|md|txt|toml))")
+MODULE_RE = re.compile(r"(?<![\w.])((?:repro|benchmarks)(?:\.\w+)+)")
+# standalone flags only: `--flag value`; assignments like FOO=--bar=8 are
+# environment plumbing, not argparse flags of the invoked script
+FLAG_RE = re.compile(r"(?<=\s)(--[a-z][\w-]*)(?=\s|$)")
+
+EXEMPT_LINKS = {"SNIPPETS.md"}
+CODE_CHECKED = ("README.md", "benchmarks/README.md")
+
+
+def md_files():
+    for p in sorted(ROOT.rglob("*.md")):
+        if any(part.startswith(".") for part in p.relative_to(ROOT).parts):
+            continue
+        yield p
+
+
+def check_links(errors):
+    for md in md_files():
+        if md.name in EXEMPT_LINKS:
+            continue
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists() and not (ROOT / path).exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+
+
+def resolve_module(mod: str):
+    rel = Path(*mod.split("."))
+    for base in (ROOT / "src", ROOT):
+        for cand in (base / rel.with_suffix(".py"), base / rel / "__init__.py"):
+            if cand.exists():
+                return cand
+    return None
+
+
+def resolve_invocation(line: str):
+    """Source file of the script/module a shell line runs, if any."""
+    m = re.search(r"-m\s+([\w.]+)", line)
+    if m:
+        return resolve_module(m.group(1))
+    m = re.search(r"((?:[\w.-]+/)+[\w.-]+\.(?:py|sh))", line)
+    if m and (ROOT / m.group(1)).exists():
+        return ROOT / m.group(1)
+    return None
+
+
+def check_code_blocks(errors):
+    for name in CODE_CHECKED:
+        md = ROOT / name
+        if not md.exists():
+            errors.append(f"{name}: missing (docs tier expects it)")
+            continue
+        for block in FENCE_RE.findall(md.read_text()):
+            # join shell line continuations so flags meet their command
+            block = block.replace("\\\n", " ")
+            for path in PATH_RE.findall(block):
+                if not (ROOT / path).exists():
+                    errors.append(f"{name}: code block references missing "
+                                  f"path {path}")
+            for mod in MODULE_RE.findall(block):
+                if resolve_module(mod) is None:
+                    errors.append(f"{name}: code block references missing "
+                                  f"module {mod}")
+            for line in block.splitlines():
+                flags = FLAG_RE.findall(line)
+                if not flags:
+                    continue
+                src = resolve_invocation(line)
+                if src is None:
+                    continue
+                text = src.read_text()
+                for flag in flags:
+                    if flag not in text:
+                        errors.append(f"{name}: {src.relative_to(ROOT)} has "
+                                      f"no flag {flag}")
+
+
+def main() -> int:
+    errors: list = []
+    check_links(errors)
+    check_code_blocks(errors)
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        return 1
+    print("docs OK: links + README code references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,7 +3,8 @@
 #
 #   scripts/ci.sh            # tier-1: the full test suite (fail-fast)
 #   scripts/ci.sh kernels    # fast kernel-parity subset only (~1 min)
-#   scripts/ci.sh all        # tier-1, then the kernel subset verbosely
+#   scripts/ci.sh docs       # broken md links / stale README references
+#   scripts/ci.sh all        # tier-1, then kernels, then docs
 #
 # Tier-1 is the gate every PR must keep green (ROADMAP.md).
 set -euo pipefail
@@ -24,9 +25,16 @@ kernels() {
         "tests/test_moe.py::test_resmoe_fused_kernel_matches_fused"
 }
 
+# Docs tier: intra-repo markdown links must resolve and README code blocks
+# must reference real modules/paths/flags (no jax import — runs in ~1 s).
+docs() {
+    python scripts/check_docs.py
+}
+
 case "${1:-tier1}" in
     tier1)   tier1 ;;
     kernels) kernels ;;
-    all)     tier1; kernels ;;
-    *) echo "usage: $0 [tier1|kernels|all]" >&2; exit 2 ;;
+    docs)    docs ;;
+    all)     tier1; kernels; docs ;;
+    *) echo "usage: $0 [tier1|kernels|docs|all]" >&2; exit 2 ;;
 esac

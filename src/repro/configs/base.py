@@ -42,6 +42,11 @@ class MoEConfig:
     # single dense FFN — the uniform-weight structure the paper observes
     # makes its barycenter so effective on Mixtral (§5.4).
     upcycled_init: bool = False
+    # Minimum per-data-shard token count before the explicit shard_map
+    # expert-parallel layer engages (DESIGN.md §6). None = the measured
+    # default in models/moe_ep.py (_EP_MIN_LOCAL_TOKENS); tests and
+    # benchmarks lower it to force EP on reduced shapes.
+    ep_min_local_tokens: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

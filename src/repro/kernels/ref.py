@@ -36,10 +36,9 @@ def grouped_expert_bank_ref(xg, center, u, v, activation="silu"):
     Mirrors moe.py's fused math: h = act(x@Wc1 + corr1) [* (x@Wc3 + corr3)],
     y = h@Wc2 + corr2, with corr_s the per-expert low-rank correction.
     """
-    import jax
+    from ..models.layers import activation_fn
 
-    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
-           "relu": jax.nn.relu}[activation]
+    act = activation_fn(activation)
     ut = jnp.swapaxes(u, 1, 2)  # [E, r, f]
     h = act(grouped_lowrank_matmul_ref(
         xg, center["w1"], jnp.swapaxes(v["w1"], 1, 2), ut))

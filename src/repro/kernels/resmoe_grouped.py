@@ -22,6 +22,12 @@ refetch: the center tile streams HBM->VMEM once per (m, n) tile instead of
 E times — the property that keeps the restore-free bank at dense-expert
 arithmetic intensity.  R is padded to a lane multiple and kept whole in
 VMEM (ResMoE ranks are small: keep_ratio * K*N/(K+N)).
+
+Under expert parallelism the kernel is invoked PER SHARD on the local
+expert slice (E_loc = E/|model| experts) inside the shard_map region of
+models/moe_ep.py — ``W`` is the replicated center, ``A``/``B`` the local
+slices of the sharded factors, and nothing here changes: the grid simply
+runs E_loc expert steps instead of E (DESIGN.md §6).
 """
 from __future__ import annotations
 

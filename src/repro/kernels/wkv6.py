@@ -1,6 +1,6 @@
 """Pallas TPU kernel: chunked RWKV6 (wkv) recurrence.
 
-The roofline analysis (EXPERIMENTS.md §Roofline) shows rwkv6 train/prefill
+The roofline analysis (benchmarks/roofline, DESIGN.md §8) shows rwkv6 train/prefill
 memory terms dominated by per-timestep state traffic: the lax.scan lowering
 reads+writes the [H, hd, hd] state from HBM every token.  This kernel keeps
 the state resident in VMEM across a whole sequence chunk — state HBM

@@ -16,6 +16,15 @@ ResMoE integration: pass compressed params and ``apply_mode`` — "restored"
 path on the grouped Pallas kernel, kernels/resmoe_grouped.py — one
 pallas_call per expert-FFN segment over the whole dispatched bank; see
 DESIGN.md §4.2).
+
+Multi-device serving: pass ``rules`` (a ShardingRules over an active mesh)
+and ``param_axes`` (the logical-axes tree matching ``params`` — from
+``model.abstract_params()`` for dense weights or
+``models.model.abstract_compressed_params(cfg)`` for the ResMoE-SVD
+store). The server device_puts the params to their mesh shardings and
+traces prefill/decode under the rules context, so a compressed model
+whose token batch clears the EP gate routes through the shard_map
+expert-parallel layer (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -28,7 +37,12 @@ import numpy as np
 
 from ..models import transformer as tfm
 from ..models.model import Model
-from ..sharding import split_logical
+from ..sharding import (
+    ShardingRules,
+    shardings_from_axes,
+    split_logical,
+    use_rules,
+)
 
 PyTree = Any
 
@@ -52,8 +66,15 @@ class Server:
         apply_mode: Optional[str] = None,
         greedy: bool = True,
         seed: int = 0,
+        rules: Optional[ShardingRules] = None,
+        param_axes: Optional[PyTree] = None,
     ):
         self.model = model
+        self.rules = rules
+        if rules is not None and param_axes is not None:
+            params = jax.device_put(
+                params, shardings_from_axes(param_axes, rules, params)
+            )
         self.params = params
         self.num_slots = num_slots
         self.max_seq = max_seq
@@ -66,14 +87,26 @@ class Server:
         cache1_l = model.init_cache(1, max_seq)
         self._cache1_template, _ = split_logical(cache1_l)
 
-        self._decode = jax.jit(
+        def _under_rules(fn):
+            # trace/compile under the rules context so activation hints and
+            # the EP gate (moe_ep.ep_applicable) see the mesh
+            def wrapped(p, b, c, pos):
+                with use_rules(rules):
+                    return fn(p, b, c, pos)
+            return wrapped if rules is not None else fn
+
+        self._decode = jax.jit(_under_rules(
             lambda p, b, c, pos: model.decode_step(
                 p, b, c, pos, apply_mode=apply_mode
             )
-        )
-        self._prefill = jax.jit(
-            lambda p, b, c, pos: model.prefill(p, b, c, positions=pos)
-        )
+        ))
+        self._prefill = jax.jit(_under_rules(
+            # prefill must run the SAME compressed path as decode — it is
+            # also the only phase whose token count can clear the EP gate
+            lambda p, b, c, pos: model.prefill(
+                p, b, c, positions=pos, apply_mode=apply_mode
+            )
+        ))
         self.slot_free = [True] * num_slots
         self.slot_pos = np.zeros(num_slots, np.int64)  # next position to write
         self.slot_req: List[Optional[Request]] = [None] * num_slots
@@ -184,19 +217,41 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
         help="serve a ResMoE-compressed model under this forward path "
              "(default: uncompressed dense experts)",
     )
+    ap.add_argument(
+        "--mesh", default=None, metavar="DxM",
+        help="serve on a (data, model) mesh, e.g. 2x4 — needs that many "
+             "devices (CPU: XLA_FLAGS=--xla_force_host_platform_device_count=8); "
+             "compressed stores with a restore-free --apply-mode route "
+             "through the shard_map expert-parallel layer (DESIGN.md §6)",
+    )
     args = ap.parse_args()
     cfg = reduced_config(args.arch)
     model = build_model(cfg)
-    params, _ = model.init_split(jax.random.PRNGKey(0))
+    params, axes = model.init_split(jax.random.PRNGKey(0))
     if args.apply_mode is not None:
         from ..models import compress_model_params
+        from ..models.model import abstract_compressed_params
 
         cfg = dataclasses.replace(
             cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd"))
         model = build_model(cfg)
         params, _ = compress_model_params(params, cfg)
+        _, axes = abstract_compressed_params(cfg)
+    rules = None
+    if args.mesh is not None:
+        from ..sharding import make_rules
+        from .mesh import make_mesh
+
+        try:
+            shape = tuple(int(s) for s in args.mesh.lower().split("x"))
+        except ValueError:
+            shape = ()
+        if len(shape) != 2:
+            raise SystemExit("--mesh must be DxM, e.g. 2x4")
+        rules = make_rules(make_mesh(shape, ("data", "model")))
     server = Server(model, params, num_slots=4, max_seq=128,
-                    apply_mode=args.apply_mode)
+                    apply_mode=args.apply_mode, rules=rules,
+                    param_axes=axes if rules is not None else None)
     rng = np.random.default_rng(0)
     reqs = [
         Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,)),

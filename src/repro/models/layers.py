@@ -49,8 +49,8 @@ def ones_param(shape, axes, dtype=jnp.float32) -> LogicalParam:
 
 def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     # Full f32 elementwise chain. A bf16-rescale variant was tried and
-    # REFUTED (+24% HBM traffic on llama3 train: the extra converts defeat
-    # fusion) — see EXPERIMENTS.md §Perf iter2.
+    # REFUTED: +24% HBM traffic on llama3 train under the DESIGN.md §4.3
+    # cost model — the extra converts defeat fusion.
     dt = x.dtype
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)

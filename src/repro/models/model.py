@@ -53,10 +53,11 @@ class Model:
         logits, _, aux = tfm.forward(params, batch, self.cfg, apply_mode=apply_mode)
         return logits, aux
 
-    def prefill(self, params, batch, cache, positions=None, last_only: bool = True):
+    def prefill(self, params, batch, cache, positions=None, last_only: bool = True,
+                apply_mode: Optional[str] = None):
         logits, new_cache, _ = tfm.forward(
             params, batch, self.cfg, cache=cache, positions=positions,
-            last_only=last_only,
+            last_only=last_only, apply_mode=apply_mode,
         )
         return logits, new_cache
 
@@ -130,10 +131,7 @@ def abstract_compressed_params(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
 
     if cfg.resmoe.method != "svd":
         raise ValueError("abstract compressed store: method must be 'svd'")
-    values, axes = jax.eval_shape(
-        lambda: tfm.init_params(jax.random.PRNGKey(0), cfg)
-    ), None
-    from ..sharding import LogicalParam, split_logical
+    from ..sharding import split_logical
 
     tree = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
     values, axes = split_logical(tree)
@@ -157,12 +155,14 @@ def abstract_compressed_params(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
                 "w1": jax.ShapeDtypeStruct(lead + (d, f), f32),
                 "w2": jax.ShapeDtypeStruct(lead + (f, d), f32),
             }
-            # center: replicated on d (operand xg carries full d), TP-
-            # sharded on f — kills the per-layer psums the data-sharded
-            # center caused (EXPERIMENTS.md §Perf deepseek iter2).
+            # center: NEVER data-sharded on d (that caused per-layer psums
+            # on deepseek decode). The f dim carries its own logical axis —
+            # replicated under the default rules so the EP region's
+            # P(None, None) center in_spec inserts no gathers (DESIGN.md
+            # §6); override "center_mlp"->"model" to f-shard it instead.
             center_a = {
-                "w1": lax + (None, "mlp"),
-                "w2": lax + ("mlp", None),
+                "w1": lax + (None, "center_mlp"),
+                "w2": lax + ("center_mlp", None),
             }
             v_v = {
                 "w1": jax.ShapeDtypeStruct(lead + (e, r, d), f32),
@@ -174,7 +174,7 @@ def abstract_compressed_params(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
             }
             if cfg.glu:
                 center_v["w3"] = jax.ShapeDtypeStruct(lead + (d, f), f32)
-                center_a["w3"] = lax + (None, "mlp")
+                center_a["w3"] = lax + (None, "center_mlp")
                 v_v["w3"] = jax.ShapeDtypeStruct(lead + (e, r, d), f32)
                 v_a["w3"] = lax + ("experts", "rank", "embed")
             for k in ("w1", "w2", "w3"):

@@ -282,29 +282,32 @@ def moe_layer(
     ("restored" | "fused" | "fused_shared" | "fused_kernel").
 
     Under a sharding-rules context with a divisible 'model' axis, the dense
-    path switches to the explicit shard_map expert-parallel layer
-    (moe_ep.py) — one psum per layer instead of GSPMD's resharding chain.
+    path AND the ResMoE-SVD compressed store (restore-free modes ``fused``
+    and ``fused_kernel``) switch to the explicit shard_map expert-parallel
+    layer (moe_ep.py) — one psum per layer instead of GSPMD's resharding
+    chain, with the shared center replicated and the per-expert low-rank
+    factors sharded over 'model' (DESIGN.md §6).
     """
     m = cfg.moe
     b, s, d = x.shape
     t = b * s
     x2d = hint(x.reshape(t, d), ("batch", None))
 
+    compressed = "center" in params
+    mode = apply_mode or cfg.resmoe.apply_mode
+
     from ..sharding import current_rules
     from .moe_ep import ep_applicable, ep_moe_layer
 
     rules = current_rules()
-    if "center" not in params and ep_applicable(params, cfg, rules, num_tokens=t):
-        y2d, aux = ep_moe_layer(params, x2d, cfg, rules)
+    if ep_applicable(params, cfg, rules, num_tokens=t, apply_mode=mode):
+        y2d, aux = ep_moe_layer(params, x2d, cfg, rules, apply_mode=mode)
         return y2d.reshape(b, s, d).astype(x.dtype), aux
 
     expert_ids, gates, aux = route(params, x2d, m)
     capacity = expert_capacity(t, m)
     token_idx, dest, keep, sort_idx = make_dispatch(expert_ids, m.num_experts, capacity)
     gates_flat = gates.reshape(-1)
-
-    compressed = "center" in params
-    mode = apply_mode or cfg.resmoe.apply_mode
 
     if not compressed:
         xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)

@@ -1,8 +1,8 @@
 """Expert-parallel MoE layer via shard_map (explicit collectives).
 
-The §Perf audit showed the gather/scatter dispatch under GSPMD reshards
-token buffers ~10x more than the minimal EP exchange (EXPERIMENTS.md cell
-3). This layer makes every data movement explicit:
+A perf audit of the GSPMD lowering (numbers now inlined in DESIGN.md §6)
+showed the gather/scatter dispatch reshards token buffers ~10x more than
+the minimal EP exchange. This layer makes every data movement explicit:
 
   * activations x2d [T, d]: sharded over the batch axes, REPLICATED over
     'model' — each model shard sees its data shard's tokens with full d;
@@ -12,6 +12,18 @@ token buffers ~10x more than the minimal EP exchange (EXPERIMENTS.md cell
   * combine = one psum over 'model' of the [T_loc, d] partial outputs
     (shared experts / arctic's dense-residual branch are computed f-sharded
     inside the same region and folded into the SAME psum).
+
+Two expert-weight layouts are supported (DESIGN.md §6):
+
+  * dense bank {w1, (w3), w2}: each [E, ...] tensor sharded over 'model';
+  * ResMoE-SVD compressed store {center, u, v}: the (small, shared)
+    ``center`` segments are REPLICATED over 'model' while the per-expert
+    low-rank factors ``u``/``v`` are sharded over 'model', and each shard
+    runs the restore-free math (the ``fused`` einsums or the
+    ``fused_kernel`` grouped Pallas path) on its local E_loc expert slice.
+    ``restored``/``fused_shared`` and the dense-delta (up/block) stores
+    keep the GSPMD path — they materialize global-bank or pre-dispatch
+    quantities that defeat the local-slice schedule.
 
 Per-layer communication: exactly one [T_loc, d] all-reduce (+ the ZeRO-3
 weight gather inserted by pjit when expert weights are also data-sharded
@@ -30,25 +42,39 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
-from ..sharding import ShardingRules, shard_map_unchecked, use_rules
+from ..sharding import ShardingRules, axis_size, shard_map_unchecked, use_rules
 from .layers import activation_fn
 
 
 _EP_MIN_LOCAL_TOKENS = 2048  # below this, weight gathers dominate — GSPMD
                              # with the weight-stationary hints wins (decode)
 
+# Compressed apply modes whose math runs unchanged on a local expert slice.
+_EP_COMPRESSED_MODES = ("fused", "fused_kernel")
+
+
+def _is_svd_store(params: Dict) -> bool:
+    return "center" in params and "u" in params and "v" in params
+
 
 def ep_applicable(params: Dict, cfg: ModelConfig, rules: Optional[ShardingRules],
-                  num_tokens: Optional[int] = None) -> bool:
+                  num_tokens: Optional[int] = None,
+                  apply_mode: Optional[str] = None) -> bool:
     if rules is None or cfg.moe is None:
         return False
-    if "w1" not in params:  # compressed stores keep the GSPMD path
+    if _is_svd_store(params):
+        # restore-free modes only: 'restored' materializes the global bank
+        # and 'fused_shared' computes center products pre-dispatch — both
+        # defeat the local-slice schedule (DESIGN.md §6).
+        mode = apply_mode or cfg.resmoe.apply_mode
+        if mode not in _EP_COMPRESSED_MODES:
+            return False
+    elif "w1" not in params:  # dense-delta (up/block) stores: GSPMD path
         return False
     mesh = rules.mesh
     if "model" not in mesh.axis_names:
         return False
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    msize = sizes["model"]
+    msize = axis_size(mesh, "model")
     m = cfg.moe
     if m.num_experts % msize or msize <= 1:
         return False
@@ -61,12 +87,17 @@ def ep_applicable(params: Dict, cfg: ModelConfig, rules: Optional[ShardingRules]
     if num_tokens is not None:
         dp = 1
         for a in rules.batch_axes:
-            dp *= sizes[a]
-        if num_tokens // dp < _EP_MIN_LOCAL_TOKENS:
+            dp *= axis_size(mesh, a)
+        if num_tokens % dp:
+            return False  # the region's P(batch, None) in_spec needs an
+            # even token split (e.g. odd-length B=1 prefill) — GSPMD copes
+        thr = (m.ep_min_local_tokens if m.ep_min_local_tokens is not None
+               else _EP_MIN_LOCAL_TOKENS)
+        if num_tokens // dp < thr:
             return False  # decode/small-batch: EP's per-layer weight
             # all-gather (ZeRO-3 over 'data') exceeds the activation
             # resharding of the GSPMD path (measured: deepseek decode
-            # 0.10 -> 3.35 s collective) — see EXPERIMENTS.md §Perf.
+            # 0.10 -> 3.35 s collective) — see DESIGN.md §6.
     return True
 
 
@@ -78,6 +109,13 @@ def _param_specs(params: Dict, cfg: ModelConfig) -> Dict:
             specs[k] = P("model", None, None)
         elif k == "w2":
             specs[k] = P("model", None, None)
+        elif k == "center":
+            # the shared barycenter segments are small — replicate them
+            specs[k] = {name: P(None, None) for name in params[k]}
+        elif k == "u":
+            specs[k] = P("model", None, None)
+        elif k == "v":
+            specs[k] = {name: P("model", None, None) for name in params[k]}
         elif k == "router":
             specs[k] = P(None, None)
         elif k == "router_bias":
@@ -95,8 +133,11 @@ def ep_moe_layer(
     x2d: jnp.ndarray,  # [T, d] (global)
     cfg: ModelConfig,
     rules: ShardingRules,
+    apply_mode: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     from .moe import (
+        _fused_expert_ffn,
+        _fused_kernel_expert_ffn,
         combine_tokens,
         dispatch_tokens,
         expert_capacity,
@@ -106,16 +147,17 @@ def ep_moe_layer(
 
     m = cfg.moe
     mesh = rules.mesh
-    msize = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    msize = axis_size(mesh, "model")
     e_loc = m.num_experts // msize
+    compressed = _is_svd_store(params)
+    mode = apply_mode or cfg.resmoe.apply_mode
     batch_axes = tuple(rules.batch_axes)
     bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
     t_global = x2d.shape[0]
     dp = 1
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     for a in batch_axes:
-        dp *= sizes[a]
-    t_loc = t_global // dp if t_global % dp == 0 else t_global
+        dp *= axis_size(mesh, a)
+    t_loc = t_global // dp  # divisibility guaranteed by ep_applicable
     # per-LOCAL-expert capacity for the local token slice (already a
     # per-expert quantity — do NOT divide by the model-axis size)
     cap = expert_capacity(t_loc, m)
@@ -138,11 +180,21 @@ def ep_moe_layer(
             xg = xg[:e_loc]  # drop the dummy group
 
             act = activation_fn(cfg.activation)
-            h = jnp.einsum("ecd,edf->ecf", xg, params["w1"])
-            h = act(h)
-            if "w3" in params:
-                h = h * jnp.einsum("ecd,edf->ecf", xg, params["w3"])
-            yg = jnp.einsum("ecf,efd->ecd", h, params["w2"])
+            if compressed:
+                # local slice of the store: u/v are [E_loc, ...] here,
+                # center arrived replicated (full [d, f] / [f, d])
+                store = {"center": params["center"], "u": params["u"],
+                         "v": params["v"]}
+                if mode == "fused_kernel":
+                    yg = _fused_kernel_expert_ffn(store, xg, cfg.activation)
+                else:
+                    yg = _fused_expert_ffn(store, xg, cfg.activation)
+            else:
+                h = jnp.einsum("ecd,edf->ecf", xg, params["w1"])
+                h = act(h)
+                if "w3" in params:
+                    h = h * jnp.einsum("ecd,edf->ecf", xg, params["w3"])
+                yg = jnp.einsum("ecf,efd->ecd", h, params["w2"])
             yg = jnp.concatenate(
                 [yg, jnp.zeros((1,) + yg.shape[1:], yg.dtype)], axis=0
             )  # restore dummy slot for combine indexing
@@ -166,7 +218,6 @@ def ep_moe_layer(
             )
             return y, aux
 
-    other_axes = tuple(a for a in mesh.axis_names if a not in batch_axes)
     in_specs = (_param_specs(params, cfg), P(bspec, None))
     out_specs = (P(bspec, None), P())
     y, aux = shard_map_unchecked(

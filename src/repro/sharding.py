@@ -40,6 +40,12 @@ DEFAULT_RULES: Dict[str, Optional[str]] = {
     "mlp": "model",
     "experts": "model",
     "expert_mlp": None,   # expert inner dim: EP already uses 'model'
+    # ResMoE barycenter segments: replicated by default so the EP region's
+    # P(None, None) in_spec is a no-op (DESIGN.md §6 — the center is ~1/E
+    # of the restored bank). Large-scale GSPMD decode cells may override
+    # to "model" to f-shard the center and save HBM at the cost of
+    # per-layer gathers.
+    "center_mlp": None,
     "expert_cap": "data",
     # flattened (expert-major) dispatch buffers [E*C, d]
     "expert_tok": ("data",),
@@ -118,6 +124,12 @@ class ShardingRules:
         self, axes: Tuple[Optional[str], ...], shape: Optional[Tuple[int, ...]] = None
     ) -> NamedSharding:
         return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    """Size of one named mesh axis (1 if the axis is absent)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name, 1)
 
 
 def current_rules() -> Optional[ShardingRules]:

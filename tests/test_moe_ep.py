@@ -65,3 +65,200 @@ def test_ep_gating():
 
     cfg = reduced_config("deepseek-v3-671b")
     assert not ep_applicable({"w1": None}, cfg, None)  # no rules context
+    # compressed stores are gated the same way without a rules context
+    svd_store = {"center": {}, "u": None, "v": {}}
+    assert not ep_applicable(svd_store, cfg, None, apply_mode="fused")
+
+
+def test_ep_compressed_matches_gspmd_fused():
+    """ResMoE-SVD store under EP == the GSPMD fused path (GLU config), for
+    both the einsum `fused` and the grouped-Pallas `fused_kernel` modes,
+    with exactly ONE [T_loc, d] psum per MoE layer in the lowered HLO."""
+    code = textwrap.dedent("""
+        import dataclasses, re
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import reduced_config
+        from repro.models import build_model, compress_model_params
+        from repro.models.model import abstract_compressed_params
+        from repro.models.moe import moe_layer
+        from repro.models.moe_ep import ep_applicable
+        from repro.launch.mesh import make_mesh
+        from repro.sharding import make_rules, use_rules, shardings_from_axes
+
+        cfg = reduced_config("mixtral-8x7b")
+        cfg = dataclasses.replace(
+            cfg,
+            moe=dataclasses.replace(cfg.moe, ep_min_local_tokens=1),
+            resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                       keep_ratio=0.5))
+        model = build_model(cfg)
+        params, _ = model.init_split(jax.random.PRNGKey(0))
+        cp, _ = compress_model_params(params, cfg)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)}
+        ref, _ = jax.jit(
+            lambda p, b: model.forward(p, b, apply_mode="fused"))(cp, batch)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh)
+
+        # gating: restore-free modes only; delta stores stay GSPMD
+        store_keys = {"center": {}, "u": None, "v": {}}
+        assert ep_applicable(store_keys, cfg, rules, num_tokens=10_000,
+                             apply_mode="fused")
+        assert ep_applicable(store_keys, cfg, rules, num_tokens=10_000,
+                             apply_mode="fused_kernel")
+        assert not ep_applicable(store_keys, cfg, rules, num_tokens=10_000,
+                                 apply_mode="restored")
+        assert not ep_applicable(store_keys, cfg, rules, num_tokens=10_000,
+                                 apply_mode="fused_shared")
+        assert not ep_applicable({"center": {}, "delta": {}}, cfg, rules,
+                                 num_tokens=10_000, apply_mode="fused")
+        # tokens not divisible by |data| (odd B=1 prefill) must decline EP
+        # instead of crashing shard_map's P(batch, None) in_spec
+        assert not ep_applicable(store_keys, cfg, rules, num_tokens=4097,
+                                 apply_mode="fused")
+
+        abs_v, axes = abstract_compressed_params(cfg)
+        sh = shardings_from_axes(axes, rules, abs_v)
+        for mode in ("fused", "fused_kernel"):
+            def fwd(p, b, m=mode):
+                with use_rules(rules):
+                    return model.forward(p, b, apply_mode=m)[0]
+            with mesh:
+                p = jax.device_put(cp, sh)
+                got = jax.jit(fwd)(p, batch)
+            err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                        - ref.astype(jnp.float32))))
+            assert err < 1e-3, (mode, err)
+
+        # one [T_loc, d] psum per layer: lower ONE MoE layer and count
+        # >=2-d all-reduces (aux pmeans are scalar)
+        ffn = cp["segments"][0]["slots"][0]["ffn"]
+        bank = jax.tree_util.tree_map(lambda a: jnp.asarray(a[0]), ffn)
+        x = jnp.asarray(rng.normal(size=(2, 32, cfg.d_model)), jnp.float32)
+        def layer(p, xx):
+            with use_rules(rules):
+                return moe_layer(p, xx, cfg, apply_mode="fused")[0]
+        with mesh:
+            text = jax.jit(layer).lower(bank, x).compile().as_text()
+        # anchor on the instruction (`= f32[..] all-reduce(`): bitcasts OF
+        # the all-reduce result would otherwise double-count
+        big_ars = re.findall(
+            r"= *f32\\[(\\d+),(\\d+)\\]\\S* all-reduce\\(", text)
+        assert len(big_ars) == 1, big_ars
+        t_loc = 2 * 32 // 2  # T / |data|
+        assert big_ars[0] == (str(t_loc), str(cfg.d_model)), big_ars
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+def test_ep_compressed_nonglu():
+    """Non-GLU (relu, top-1) compressed store under EP == GSPMD fused."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import reduced_config
+        from repro.models import build_model, compress_model_params
+        from repro.models.model import abstract_compressed_params
+        from repro.launch.mesh import make_mesh
+        from repro.sharding import make_rules, use_rules, shardings_from_axes
+
+        cfg = reduced_config("switch-base-8")
+        assert not cfg.glu
+        # capacity_factor high enough that the per-shard LOCAL capacity
+        # (computed from t_loc) never drops pairs the global path keeps
+        cfg = dataclasses.replace(
+            cfg,
+            moe=dataclasses.replace(cfg.moe, ep_min_local_tokens=1,
+                                    capacity_factor=8.0),
+            resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                       keep_ratio=0.5, apply_mode="fused"))
+        model = build_model(cfg)
+        params, _ = model.init_split(jax.random.PRNGKey(0))
+        cp, _ = compress_model_params(params, cfg)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)}
+        ref, _ = jax.jit(
+            lambda p, b: model.forward(p, b, apply_mode="fused"))(cp, batch)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh)
+        abs_v, axes = abstract_compressed_params(cfg)
+        sh = shardings_from_axes(axes, rules, abs_v)
+        for mode in ("fused", "fused_kernel"):
+            def fwd(p, b, m=mode):
+                with use_rules(rules):
+                    return model.forward(p, b, apply_mode=m)[0]
+            with mesh:
+                p = jax.device_put(cp, sh)
+                got = jax.jit(fwd)(p, batch)
+            err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                        - ref.astype(jnp.float32))))
+            assert err < 1e-3, (mode, err)
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+def test_server_compressed_on_mesh():
+    """Server(rules=...) serves a compressed model on a multi-device mesh
+    and reproduces the single-device compressed generation."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs import reduced_config
+        from repro.launch.mesh import make_mesh
+        from repro.launch.serve import Request, Server
+        from repro.models import build_model, compress_model_params
+        from repro.models.model import abstract_compressed_params
+        from repro.sharding import make_rules
+
+        cfg = reduced_config("mixtral-8x7b")
+        cfg = dataclasses.replace(
+            cfg,
+            moe=dataclasses.replace(cfg.moe, ep_min_local_tokens=1),
+            resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                       keep_ratio=0.5))
+        model = build_model(cfg)
+        params, _ = model.init_split(jax.random.PRNGKey(0))
+        cp, _ = compress_model_params(params, cfg)
+        _, axes = abstract_compressed_params(cfg)
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+
+        single = Server(model, cp, num_slots=2, max_seq=64,
+                        apply_mode="fused")
+        r1 = Request(prompt=prompt, max_new_tokens=5)
+        single.serve([r1])
+
+        rules = make_rules(make_mesh((2, 4), ("data", "model")))
+        sharded = Server(model, cp, num_slots=2, max_seq=64,
+                         apply_mode="fused", rules=rules, param_axes=axes)
+        r2 = Request(prompt=prompt, max_new_tokens=5)
+        sharded.serve([r2])
+        assert r1.output == r2.output, (r1.output, r2.output)
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
