@@ -8,21 +8,34 @@ Tables map 1:1 to the paper (see DESIGN.md §8):
   flops_table      -> Table 12     roofline        -> §4.3 cost model sweep
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only t1,t4,...] [--fast]
+             [--json BENCH.json]
+
+Exit code is the CI contract (scripts/ci.sh bench): any suite that raises
+makes the run exit nonzero, so the bench tier can gate a PR instead of
+silently printing partial rows. ``--json`` additionally writes a
+machine-readable ``{row_name: {value, derived}}`` map of every emitted CSV row — the
+per-PR perf-trajectory artifact the workflow uploads.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: t1,t3,t4,f4,t10,t11,t12,roofline")
+                    help="comma list: t1,t3,t4,f4,t10,t11,t12,roofline,xl")
     ap.add_argument("--fast", action="store_true",
                     help="skip the training-backed downstream eval")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a {row_name: {value, derived}} JSON map of "
+                         "the emitted rows (the bench-trajectory artifact; "
+                         "several suites carry their metric in the derived "
+                         "column)")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -45,8 +58,19 @@ def main() -> None:
         suites.insert(1, ("t3", downstream_eval.run))
         suites.append(("xl", cross_layer.run))
 
+    # validate against the suites THIS invocation can run: under --fast,
+    # t3/xl are absent, and silently matching nothing would exit 0 with an
+    # empty run — exactly the false green the exit-code contract forbids
+    known = {key for key, _ in suites}
+    if want and want - known:
+        print(f"unknown suite keys for this invocation: "
+              f"{sorted(want - known)}; available: {sorted(known)}",
+              file=sys.stderr)
+        return 2
+
     print("name,us_per_call,derived")
-    failures = 0
+    values = {}
+    failed = []
     for key, fn in suites:
         if want and key not in want:
             continue
@@ -54,14 +78,29 @@ def main() -> None:
         try:
             for row in fn():
                 print(",".join(str(x) for x in row))
+                # keep BOTH columns: memory/flops/rate/roofline rows carry
+                # their real metric in `derived` with a 0 value column
+                values[str(row[0])] = {
+                    "value": row[1],
+                    "derived": str(row[2]) if len(row) > 2 else "",
+                }
             print(f"# suite {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:  # noqa: BLE001
-            failures += 1
+            failed.append(key)
             print(f"# suite {key} FAILED", file=sys.stderr)
             traceback.print_exc()
-    if failures:
-        raise SystemExit(1)
+    if args.json:
+        # write even on partial failure: the trajectory keeps whatever rows
+        # DID emit, while the exit code still fails the tier
+        with open(args.json, "w") as fh:
+            json.dump(values, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {len(values)} rows -> {args.json}", file=sys.stderr)
+    if failed:
+        print(f"# FAILED suites: {','.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,10 +1,16 @@
 #!/usr/bin/env bash
-# Single CI entry point.
+# Single CI entry point (mirrored by .github/workflows/ci.yml as a matrix).
 #
 #   scripts/ci.sh            # tier-1: the full test suite (fail-fast)
 #   scripts/ci.sh kernels    # fast kernel-parity subset only (~1 min)
+#   scripts/ci.sh multidev   # expert-parallel / sharding tests on 8 forced
+#                            # host devices (the EP path, exercised, not
+#                            # just importable)
+#   scripts/ci.sh bench      # benchmark smoke: `benchmarks.run --fast`
+#                            # must exit 0 and write BENCH_<n>.json (the
+#                            # per-PR perf-trajectory artifact)
 #   scripts/ci.sh docs       # broken md links / stale README references
-#   scripts/ci.sh all        # tier-1, then kernels, then docs
+#   scripts/ci.sh all        # every tier above, tier-1 first
 #
 # Tier-1 is the gate every PR must keep green (ROADMAP.md).
 set -euo pipefail
@@ -17,12 +23,32 @@ tier1() {
 }
 
 # Fast parity subset: every Pallas kernel against its ref.py oracle
-# (interpret mode on CPU) + the fused_kernel == fused model-level check.
+# (interpret mode on CPU) + the kernel == einsum model-level checks.
 kernels() {
     python -m pytest -q \
         tests/test_kernels.py \
         tests/test_wkv6_kernel.py \
+        tests/test_moe_token.py \
         "tests/test_moe.py::test_resmoe_fused_kernel_matches_fused"
+}
+
+# Expert-parallel tier: the tests fork their own 8-device subprocesses,
+# but we ALSO force 8 host devices in the parent so any in-process mesh
+# helper sees a real multi-device topology on a bare CPU runner.
+multidev() {
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        python -m pytest -q tests/test_moe_ep.py tests/test_sharding.py
+}
+
+# Bench smoke tier: the fast benchmark pass must complete (nonzero exit on
+# any suite failure — benchmarks/run.py propagates) and leave a
+# machine-readable BENCH_<n>.json (n = commit count) so the perf
+# trajectory accumulates per PR; the workflow uploads it as an artifact.
+bench() {
+    local n
+    n="$(git rev-list --count HEAD 2>/dev/null || echo 0)"
+    python -m benchmarks.run --fast --json "BENCH_${n}.json"
+    test -s "BENCH_${n}.json"
 }
 
 # Docs tier: intra-repo markdown links must resolve and README code blocks
@@ -32,9 +58,11 @@ docs() {
 }
 
 case "${1:-tier1}" in
-    tier1)   tier1 ;;
-    kernels) kernels ;;
-    docs)    docs ;;
-    all)     tier1; kernels; docs ;;
-    *) echo "usage: $0 [tier1|kernels|docs|all]" >&2; exit 2 ;;
+    tier1)    tier1 ;;
+    kernels)  kernels ;;
+    multidev) multidev ;;
+    bench)    bench ;;
+    docs)     docs ;;
+    all)      tier1; kernels; multidev; bench; docs ;;
+    *) echo "usage: $0 [tier1|kernels|multidev|bench|docs|all]" >&2; exit 2 ;;
 esac

@@ -47,6 +47,13 @@ class MoEConfig:
     # default in models/moe_ep.py (_EP_MIN_LOCAL_TOKENS); tests and
     # benchmarks lower it to force EP on reduced shapes.
     ep_min_local_tokens: Optional[int] = None
+    # Maximum token count at which restore-free apply modes on an SVD
+    # store take the ragged capacity-free per-token decode path
+    # (kernels/resmoe_token.py, DESIGN.md §4.4) instead of the
+    # capacity-padded dispatch. None = the analytic default in
+    # models/moe.py (_TOKEN_PATH_MAX_TOKENS); 0 disables the automatic
+    # switch (apply_mode="fused_token" still forces it).
+    token_path_max_tokens: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,16 +77,21 @@ class ResMoEConfig:
     # Forward path: "restored" (paper Algorithm 2: materialize W_c + delta),
     # "fused" (beyond-paper: never materialize; shared-base + low-rank
     # einsums), "fused_shared" (fused + center products computed once per
-    # token before dispatch), or "fused_kernel" (fused on the grouped Pallas
+    # token before dispatch), "fused_kernel" (fused on the grouped Pallas
     # kernel — one pallas_call per segment over the whole dispatched expert
-    # bank; the serving hot path, DESIGN.md §4.2).
+    # bank; the prefill serving hot path, DESIGN.md §4.2), or "fused_token"
+    # (ragged capacity-free per-token path — no dispatch buffer; the decode
+    # hot path, DESIGN.md §4.4). The restore-free modes switch to
+    # fused_token automatically for small token batches — see
+    # MoEConfig.token_path_max_tokens.
     apply_mode: str = "restored"
     # Beyond-paper: treat per-layer dense FFNs as the expert population.
     scope: str = "experts"  # "experts" | "cross_layer"
     # Block shape for method="block" (TPU tile-aligned).
     block_shape: Tuple[int, int] = (8, 128)
 
-    APPLY_MODES = ("restored", "fused", "fused_shared", "fused_kernel")
+    APPLY_MODES = ("restored", "fused", "fused_shared", "fused_kernel",
+                   "fused_token")
 
     def __post_init__(self):
         if self.apply_mode not in self.APPLY_MODES:

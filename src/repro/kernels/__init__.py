@@ -2,7 +2,9 @@
 
   * resmoe_lowrank — fused restore-free ResMoE-SVD matmul (single expert)
   * resmoe_grouped — grouped restore-free matmul over the whole dispatched
-                     expert bank (serving hot path, DESIGN.md §4.2)
+                     expert bank (prefill serving hot path, DESIGN.md §4.2)
+  * resmoe_token   — ragged capacity-free per-token MoE for decode-sized
+                     batches (no dispatch buffer, DESIGN.md §4.4)
   * block_sparse   — BCSR residual matmul (TPU adaptation of UP)
   * wkv6           — chunked RWKV6 recurrence (state VMEM-resident)
 """
@@ -15,6 +17,7 @@ from .ops import (
 )
 from .resmoe_grouped import grouped_lowrank_matmul
 from .resmoe_lowrank import lowrank_restore_matmul
+from .resmoe_token import token_lowrank_moe
 from .wkv6 import wkv6_chunk, wkv6_ref
 
 __all__ = [
@@ -26,6 +29,7 @@ __all__ = [
     "resmoe_grouped_svd_apply",
     "lowrank_restore_matmul",
     "grouped_lowrank_matmul",
+    "token_lowrank_moe",
     "wkv6_chunk",
     "wkv6_ref",
 ]

@@ -48,6 +48,38 @@ def grouped_expert_bank_ref(xg, center, u, v, activation="silu"):
     return grouped_lowrank_matmul_ref(h, center["w2"], u, v["w2"])
 
 
+def token_lowrank_moe_ref(x, expert_ids, gates, center, u, v,
+                          activation="silu"):
+    """Capacity-free per-token MoE on an SVD store (GLU-aware oracle).
+
+    Mirrors moe.py's fused math pair-by-pair with NO dispatch buffer:
+    for every (token t, slot k) pair with expert e = expert_ids[t, k],
+    h = act(x_t@Wc1 + (x_t@V1_e^T)@U_e^T) [* (x_t@Wc3 + ...)], and
+    y_t = sum_k g_tk * (h@Wc2 + (h@U_e)@V2_e). Duplicate expert ids within
+    a token's top-k are legal — each pair contributes independently.
+    """
+    from ..models.layers import activation_fn
+
+    act = activation_fn(activation)
+    xf = x.astype(jnp.float32)
+    gf = gates.astype(jnp.float32)
+    uf = u.astype(jnp.float32)[expert_ids]  # [T, k, f, r]
+    base1 = xf @ center["w1"].astype(jnp.float32)  # [T, f]
+    v1 = v["w1"].astype(jnp.float32)[expert_ids]  # [T, k, r, d]
+    t1 = jnp.einsum("td,tkrd->tkr", xf, v1)
+    h = act(base1[:, None] + jnp.einsum("tkr,tkfr->tkf", t1, uf))
+    if "w3" in center:
+        base3 = xf @ center["w3"].astype(jnp.float32)
+        v3 = v["w3"].astype(jnp.float32)[expert_ids]
+        t3 = jnp.einsum("td,tkrd->tkr", xf, v3)
+        h = h * (base3[:, None] + jnp.einsum("tkr,tkfr->tkf", t3, uf))
+    hbar = jnp.einsum("tkf,tk->tf", h, gf)
+    t2 = jnp.einsum("tkf,tkfr->tkr", h, uf)
+    v2 = v["w2"].astype(jnp.float32)[expert_ids]  # [T, k, r, d]
+    ylr = jnp.einsum("tkr,tkrd,tk->td", t2, v2, gf)
+    return hbar @ center["w2"].astype(jnp.float32) + ylr
+
+
 def block_sparse_matmul_ref(
     x: jnp.ndarray,  # [M, K]
     values: jnp.ndarray,  # [nnzb, bk, bn]

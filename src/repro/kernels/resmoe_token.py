@@ -1,0 +1,264 @@
+"""Pallas TPU kernel: ragged per-token restore-free ResMoE-SVD MoE decode.
+
+The dispatched paths (moe.py ``fused``/``fused_kernel``) route every batch
+through a capacity-padded ``[E, C, d]`` buffer — built for prefill, where
+thousands of tokens amortize the E-wide buffer construction. A decode step
+of the continuous-batching server carries only ``num_slots`` live tokens,
+so the same machinery pays for ``E * C`` padded rows (C >= 8) and
+capacity-drop semantics to process a handful of real tokens, and the
+grouped kernel re-streams the shared center once per *expert* instead of
+once per *token tile* (DESIGN.md §4.4).
+
+``token_lowrank_moe`` is the capacity-free alternative for a small token
+batch ``[T, d]`` with per-token top-k expert ids and gates:
+
+    y_t = sum_k g_tk * f_{e_tk}(x_t)
+    f_e(x) = act(x W1c + (x A1_e) B1_e) [* (x W3c + (x A3_e) B1_e)]
+             @ W2c  +  (h u_e) v2_e             (restore-free, per pair)
+
+structured so every shared-center product is computed ONCE per token:
+
+  * segments 1/3: ``base = x @ Wc`` is expert-independent — one dense
+    ``[T, d] @ [d, f]`` matmul outside the kernel, gathered per pair by a
+    block index map (the grouped path recomputes it per dispatched copy);
+  * segment 2: the gate sum distributes over the center,
+    ``sum_k g (h_k @ W2c) = (sum_k g h_k) @ W2c``, so the center product
+    runs once per token on the gate-weighted ``hbar`` and only the
+    low-rank correction ``(h u_e) v2_e`` stays per pair.
+
+The ``pallas_call`` handles exactly the ragged per-pair piece. Grid
+``(P, F/bf)`` over the ``P = T*k`` (token, k) pairs sorted by expert id,
+f-tile innermost. Scalar-prefetched expert/token ids drive the block index
+maps, so each grid step gathers ONLY its pair's low-rank factors — no
+``[E, C, d]`` buffer, no capacity drops, no scatter. Because pairs are
+sorted, consecutive steps with the same expert map the factor blocks to
+the same HBM region and Pallas elides the refetch: the factor traffic is
+``min(P, E)`` sets, not ``P``. Per (p, j) step the kernel follows the
+two-matmul structure of resmoe_lowrank.py: the rank-space projections
+``t1 = x A1_e`` (and ``t3``) are computed on the first f step into VMEM
+scratch, each f tile applies ``base + t B1_e`` + activation (+ GLU gate),
+and a third scratch accumulates ``t2 += h u_e`` across f tiles, flushed
+through ``v2_e`` on the last step.
+
+Duplicate expert ids inside a token's top-k are legal (each pair is
+independent); T=1 degenerates to a k-step grid.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Per-step VMEM working-set budget for the default f-tile picker — one
+# source of truth with the grouped kernel (~16MB/core minus Pallas
+# double-buffering headroom).
+from .resmoe_grouped import _VMEM_BUDGET
+
+
+# contract the LAST dim of both operands: (1, c) x (n, c) -> (1, n).
+# Lets the kernel consume the store's native layouts (v [E, r, d],
+# u [E, f, r]) with no per-call transpose of the factor bank.
+_CONTRACT_LAST = (((1,), (1,)), ((), ()))
+
+
+def _kernel(eids_ref, tids_ref, xp_ref, base1_ref, *rest, n_f: int,
+            glu: bool, activation: str):
+    import jax
+
+    from ..models.layers import activation_fn
+
+    if glu:
+        (base3_ref, v1_ref, v3_ref, u_ref, v2_ref,
+         oh_ref, oy_ref, t1_ref, t3_ref, t2_ref) = rest
+    else:
+        (v1_ref, u_ref, v2_ref,
+         oh_ref, oy_ref, t1_ref, t2_ref) = rest
+        base3_ref = v3_ref = t3_ref = None
+
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _project():
+        # rank-space projections of this pair's token: computed once per
+        # pair, reused across every f tile
+        xrow = xp_ref[...]
+        t1_ref[...] = jax.lax.dot_general(
+            xrow, v1_ref[0], _CONTRACT_LAST,
+            preferred_element_type=jnp.float32)
+        if glu:
+            t3_ref[...] = jax.lax.dot_general(
+                xrow, v3_ref[0], _CONTRACT_LAST,
+                preferred_element_type=jnp.float32)
+        t2_ref[...] = jnp.zeros_like(t2_ref)
+
+    act = activation_fn(activation)
+    u_blk = u_ref[0]  # [bf, rp] — shared by the w1/w3 corrections AND t2
+    h = base1_ref[...] + jax.lax.dot_general(
+        t1_ref[...].astype(u_blk.dtype), u_blk, _CONTRACT_LAST,
+        preferred_element_type=jnp.float32)
+    h = act(h)
+    if glu:
+        h = h * (base3_ref[...] + jax.lax.dot_general(
+            t3_ref[...].astype(u_blk.dtype), u_blk, _CONTRACT_LAST,
+            preferred_element_type=jnp.float32))
+    oh_ref[...] = h.astype(oh_ref.dtype)
+    t2_ref[...] += jnp.dot(h.astype(u_blk.dtype), u_blk,
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_f - 1)
+    def _flush():
+        oy_ref[...] = jnp.dot(
+            t2_ref[...].astype(v2_ref.dtype), v2_ref[0],
+            preferred_element_type=jnp.float32,
+        ).astype(oy_ref.dtype)
+
+
+def _pick_bf(f: int, dp: int, rp: int, itemsize: int) -> int:
+    """Largest lane-aligned f tile whose per-step working set fits VMEM."""
+
+    def footprint(bf: int) -> int:
+        # xp, base1/3, v1/v3, u, v2, oh, oy blocks (double-buffered)
+        blocks = dp + 2 * bf + 2 * rp * dp + bf * rp + rp * dp + bf + dp
+        return 2 * itemsize * blocks + 4 * 3 * rp
+
+    bf = min(512, f + ((-f) % 128))
+    while bf > 128 and footprint(bf) > _VMEM_BUDGET:
+        bf //= 2
+    return bf
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bf", "interpret", "out_dtype")
+)
+def token_lowrank_moe(
+    x: jnp.ndarray,  # [T, d] live tokens (decode batch)
+    expert_ids: jnp.ndarray,  # [T, k] int top-k expert ids per token
+    gates: jnp.ndarray,  # [T, k] per-pair combine weights
+    center: Dict[str, jnp.ndarray],  # {"w1": [d, f], "w2": [f, d], ("w3")}
+    u: jnp.ndarray,  # [E, f, r] per-expert residual row factor
+    v: Dict[str, jnp.ndarray],  # {"w1"/"w2"/("w3"): [E, r, d]} col factors
+    *,
+    activation: str = "silu",
+    bf: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Capacity-free per-token MoE expert compute on an SVD store.
+
+    Returns the gate-combined expert output ``[T, d]`` — the exact math of
+    moe.py's ``fused`` path (kernels/ref.py::token_lowrank_moe_ref is the
+    allclose oracle), with no dispatch buffer in between.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    t, d = x.shape
+    k = expert_ids.shape[1]
+    p = t * k
+    e, f, r = u.shape
+    out_dtype = out_dtype or x.dtype
+    glu = "w3" in center
+
+    # sort pairs by expert id: consecutive same-expert grid steps map the
+    # factor blocks identically and Pallas elides the refetch
+    flat_e = expert_ids.reshape(-1).astype(jnp.int32)
+    order = jnp.argsort(flat_e, stable=True)
+    eids = flat_e[order]
+    tids = (order // k).astype(jnp.int32)
+    g = gates.reshape(-1)[order].astype(jnp.float32)
+
+    # shared-center products: once per TOKEN, plain dense matmuls
+    xf = x.astype(jnp.float32)
+    base1 = xf @ center["w1"].astype(jnp.float32)  # [T, f]
+    base3 = xf @ center["w3"].astype(jnp.float32) if glu else None
+
+    # NATIVE store layouts throughout — the kernel contracts the trailing
+    # dims in place, so the per-expert factor bank is never transposed (a
+    # per-step whole-bank copy the roofline would otherwise have to charge)
+    v1 = v["w1"]  # [E, r, d]
+    v3 = v["w3"] if glu else None
+    v2 = v["w2"]  # [E, r, d]
+
+    itemsize = jnp.dtype(x.dtype).itemsize
+    pd, pr = (-d) % 128, (-r) % 128
+    dp, rp = d + pd, r + pr
+    if bf is None:
+        bf = _pick_bf(f, dp, rp, itemsize)
+    pf = (-f) % bf
+    fp = f + pf
+
+    xq = jnp.pad(x, ((0, 0), (0, pd))) if pd else x
+    if pf:
+        base1 = jnp.pad(base1, ((0, 0), (0, pf)))
+        if glu:
+            base3 = jnp.pad(base3, ((0, 0), (0, pf)))
+    if pr or pd:
+        v1 = jnp.pad(v1, ((0, 0), (0, pr), (0, pd)))
+        v2 = jnp.pad(v2, ((0, 0), (0, pr), (0, pd)))
+        if glu:
+            v3 = jnp.pad(v3, ((0, 0), (0, pr), (0, pd)))
+    if pf or pr:
+        u = jnp.pad(u, ((0, 0), (0, pf), (0, pr)))
+    n_f = fp // bf
+
+    def _e(idx3):
+        # factor blocks: gathered by the pair's (scalar-prefetched) expert
+        return lambda i, j, eids, tids: idx3(eids[i], j)
+
+    in_specs = [
+        # token rows read straight from x by the pair's token id — no
+        # pair-gathered [P, d] copy
+        pl.BlockSpec((1, dp), lambda i, j, eids, tids: (tids[i], 0)),
+        pl.BlockSpec((1, bf), lambda i, j, eids, tids: (tids[i], j)),  # base1
+    ]
+    operands = [xq, base1.astype(jnp.float32)]
+    if glu:
+        in_specs.append(
+            pl.BlockSpec((1, bf), lambda i, j, eids, tids: (tids[i], j)))
+        operands.append(base3.astype(jnp.float32))
+    in_specs.append(pl.BlockSpec((1, rp, dp), _e(lambda ei, j: (ei, 0, 0))))
+    operands.append(v1)
+    if glu:
+        in_specs.append(pl.BlockSpec((1, rp, dp), _e(lambda ei, j: (ei, 0, 0))))
+        operands.append(v3)
+    in_specs += [
+        pl.BlockSpec((1, bf, rp), _e(lambda ei, j: (ei, j, 0))),  # u
+        pl.BlockSpec((1, rp, dp), _e(lambda ei, j: (ei, 0, 0))),  # v2
+    ]
+    operands += [u, v2]
+
+    scratch = [pltpu.VMEM((1, rp), jnp.float32)]  # t1
+    if glu:
+        scratch.append(pltpu.VMEM((1, rp), jnp.float32))  # t3
+    scratch.append(pltpu.VMEM((1, rp), jnp.float32))  # t2
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(p, n_f),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, bf), lambda i, j, eids, tids: (i, j)),
+            pl.BlockSpec((1, dp), lambda i, j, eids, tids: (i, 0)),
+        ],
+        scratch_shapes=scratch,
+    )
+    oh, oy = pl.pallas_call(
+        functools.partial(_kernel, n_f=n_f, glu=glu, activation=activation),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((p, fp), jnp.float32),  # per-pair h
+            jax.ShapeDtypeStruct((p, dp), jnp.float32),  # per-pair lowrank y
+        ],
+        interpret=interpret,
+    )(eids, tids, *operands)
+
+    # gate-weighted combine: scatter-add over the (tiny) token axis, then
+    # the single per-token center product for segment 2
+    gh = oh[:, :f] * g[:, None]
+    hbar = jnp.zeros((t, f), jnp.float32).at[tids].add(gh)
+    ylr = jnp.zeros((t, d), jnp.float32).at[tids].add(oy[:, :d] * g[:, None])
+    y = hbar @ center["w2"].astype(jnp.float32) + ylr
+    return y.astype(out_dtype)

@@ -12,10 +12,14 @@ Design (vLLM-style, slot-granular):
 
 ResMoE integration: pass compressed params and ``apply_mode`` — "restored"
 (paper Algorithm 2: restore-on-the-fly), "fused"/"fused_shared"
-(beyond-paper restore-free einsum path), or "fused_kernel" (restore-free
+(beyond-paper restore-free einsum path), "fused_kernel" (restore-free
 path on the grouped Pallas kernel, kernels/resmoe_grouped.py — one
 pallas_call per expert-FFN segment over the whole dispatched bank; see
-DESIGN.md §4.2).
+DESIGN.md §4.2), or "fused_token" (ragged capacity-free per-token path,
+kernels/resmoe_token.py — DESIGN.md §4.4). Decode steps carry only
+``num_slots`` tokens, so the restore-free modes take the per-token path
+automatically there (``MoEConfig.token_path_max_tokens``) while prefill
+keeps the dispatched kernels — one Server, both hot paths.
 
 Multi-device serving: pass ``rules`` (a ShardingRules over an active mesh)
 and ``param_axes`` (the logical-axes tree matching ``params`` — from
@@ -218,6 +222,13 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
              "(default: uncompressed dense experts)",
     )
     ap.add_argument(
+        "--token-path-max-tokens", type=int, default=None, metavar="T",
+        help="override MoEConfig.token_path_max_tokens: largest token "
+             "batch the restore-free modes hand to the ragged per-token "
+             "decode path (kernels/resmoe_token.py); 0 keeps every batch "
+             "on the dispatched paths",
+    )
+    ap.add_argument(
         "--mesh", default=None, metavar="DxM",
         help="serve on a (data, model) mesh, e.g. 2x4 — needs that many "
              "devices (CPU: XLA_FLAGS=--xla_force_host_platform_device_count=8); "
@@ -226,6 +237,10 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
     )
     args = ap.parse_args()
     cfg = reduced_config(args.arch)
+    if args.token_path_max_tokens is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, token_path_max_tokens=args.token_path_max_tokens))
     model = build_model(cfg)
     params, axes = model.init_split(jax.random.PRNGKey(0))
     if args.apply_mode is not None:

@@ -62,6 +62,14 @@ class Model:
         return logits, new_cache
 
     def decode_step(self, params, batch, cache, positions, apply_mode=None):
+        """One decode step over the live batch.
+
+        With a ResMoE-SVD store and a restore-free ``apply_mode``, the
+        decode token count (B live slots) sits under
+        ``MoEConfig.token_path_max_tokens``, so every MoE layer takes the
+        ragged capacity-free per-token path (kernels/resmoe_token.py,
+        DESIGN.md §4.4) while prefill keeps the dispatched paths.
+        """
         logits, new_cache, _ = tfm.forward(
             params, batch, self.cfg, cache=cache, positions=positions,
             apply_mode=apply_mode,

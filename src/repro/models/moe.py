@@ -17,7 +17,15 @@ Three interchangeable expert-compute paths share one router/dispatch:
                        dispatch buffer, the shared center tile streamed
                        HBM->VMEM once per output tile and the per-expert
                        low-rank factors accumulated in VMEM scratch
-                       (DESIGN.md §4.2) — the serving hot path.
+                       (DESIGN.md §4.2) — the prefill serving hot path.
+                       ``fused_token`` skips dispatch entirely: a ragged
+                       capacity-free per-token kernel
+                       (kernels/resmoe_token.py) gathers only each token's
+                       top-k experts' low-rank factors and computes every
+                       shared-center product once per token — the decode
+                       hot path (DESIGN.md §4.4). Restore-free modes take
+                       it automatically when the token batch is at most
+                       ``MoEConfig.token_path_max_tokens``.
 
 Dispatch is sort/gather-based (MaxText-style "sparse matmul" path): tokens
 are sorted by expert id, padded to a static per-expert capacity, processed
@@ -75,6 +83,41 @@ def init_moe(key, cfg: ModelConfig, dtype) -> Dict[str, LogicalParam]:
 def expert_capacity(num_tokens: int, m: MoEConfig) -> int:
     cap = int(math.ceil(m.capacity_factor * num_tokens * m.top_k / m.num_experts))
     return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+# Decode-shape crossover for the ragged per-token path: below this token
+# count the capacity-padded dispatch pays for >= E*8 padded rows and E
+# center re-reads to process a handful of real tokens, while the token
+# path reads the center once per segment (DESIGN.md §4.4;
+# benchmarks/runtime.py::token_decode_roofline_mixtral states the bytes).
+_TOKEN_PATH_MAX_TOKENS = 8
+
+# Restore-free modes whose math the per-token kernel reproduces exactly.
+_TOKEN_PATH_AUTO_MODES = ("fused", "fused_shared", "fused_kernel")
+
+
+def token_path_applicable(params: Dict, m: MoEConfig, mode: str,
+                          num_tokens: int, rules=None) -> bool:
+    """True when this layer call should take the ragged per-token path."""
+    if not ("center" in params and "u" in params and "v" in params):
+        return False  # dense banks and dense-delta (up/block) stores
+    if mode == "fused_token":
+        return True
+    if mode not in _TOKEN_PATH_AUTO_MODES:
+        return False  # "restored" keeps the paper's Algorithm 2 semantics
+    if rules is not None:
+        from ..sharding import axis_size
+
+        mesh = rules.mesh
+        if "model" in mesh.axis_names and axis_size(mesh, "model") > 1:
+            # the low-rank factors are 'model'-sharded on a mesh; the
+            # unpartitioned pallas_call would all-gather the whole factor
+            # bank every step — keep the GSPMD dispatch, which shards.
+            # (apply_mode="fused_token" above still honors an explicit ask.)
+            return False
+    thr = (m.token_path_max_tokens if m.token_path_max_tokens is not None
+           else _TOKEN_PATH_MAX_TOKENS)
+    return num_tokens <= thr
 
 
 # ---------------------------------------------------------------------------
@@ -279,7 +322,13 @@ def moe_layer(
     """Run one MoE layer. ``params`` holds either a dense bank or a ResMoE
     compressed store (decided by key presence); ``apply_mode`` overrides
     cfg.resmoe.apply_mode
-    ("restored" | "fused" | "fused_shared" | "fused_kernel").
+    ("restored" | "fused" | "fused_shared" | "fused_kernel" |
+    "fused_token").
+
+    SVD stores with a restore-free mode and a decode-sized token batch
+    (``token_path_applicable``) skip the capacity-padded dispatch and run
+    the ragged per-token kernel instead (DESIGN.md §4.4);
+    ``apply_mode="fused_token"`` forces that path at any batch size.
 
     Under a sharding-rules context with a divisible 'model' axis, the dense
     path AND the ResMoE-SVD compressed store (restore-free modes ``fused``
@@ -304,7 +353,30 @@ def moe_layer(
         y2d, aux = ep_moe_layer(params, x2d, cfg, rules, apply_mode=mode)
         return y2d.reshape(b, s, d).astype(x.dtype), aux
 
+    if compressed and mode == "fused_token" and "u" not in params:
+        raise ValueError(
+            "apply_mode='fused_token' needs an SVD store (center/u/v); "
+            "dense-delta (up/block) stores only support 'restored'"
+        )
+
     expert_ids, gates, aux = route(params, x2d, m)
+
+    if compressed and token_path_applicable(params, m, mode, t, rules=rules):
+        # ragged capacity-free decode path: no [E, C, d] buffer, no
+        # capacity drops, per-token gather of the low-rank factors
+        from ..kernels import token_lowrank_moe
+
+        y2d = token_lowrank_moe(
+            x2d, expert_ids, gates, params["center"], params["u"],
+            params["v"], activation=cfg.activation, out_dtype=x2d.dtype,
+        )
+        y2d = hint(y2d, ("batch", None))
+        if "shared" in params:
+            y2d = y2d + ffn(params["shared"], x2d, cfg.activation)
+        if "dense" in params:
+            y2d = y2d + ffn(params["dense"], x2d, cfg.activation)
+        return y2d.reshape(b, s, d).astype(x.dtype), aux
+
     capacity = expert_capacity(t, m)
     token_idx, dest, keep, sort_idx = make_dispatch(expert_ids, m.num_experts, capacity)
     gates_flat = gates.reshape(-1)

@@ -50,6 +50,8 @@ _EP_MIN_LOCAL_TOKENS = 2048  # below this, weight gathers dominate — GSPMD
                              # with the weight-stationary hints wins (decode)
 
 # Compressed apply modes whose math runs unchanged on a local expert slice.
+# "fused_token" is deliberately absent: it exists for decode-sized batches,
+# which sit far below _EP_MIN_LOCAL_TOKENS anyway (DESIGN.md §4.4).
 _EP_COMPRESSED_MODES = ("fused", "fused_kernel")
 
 

@@ -1,0 +1,202 @@
+"""Ragged per-token decode path: kernel parity, gate behaviour, edge cases.
+
+Covers the decode-path edge cases of DESIGN.md §4.4: T=1, duplicate expert
+ids inside a token's top-k, token-path/dispatch-path parity at the
+``token_path_max_tokens`` boundary, and the analytic bytes claim.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.kernels import token_lowrank_moe
+from repro.kernels.ref import token_lowrank_moe_ref
+from repro.models import build_model, compress_model_params
+from repro.models.moe import moe_layer, token_path_applicable
+
+
+def _random_store(rng, e, d, f, r, glu):
+    center = {"w1": jnp.asarray(rng.normal(size=(d, f)), jnp.float32),
+              "w2": jnp.asarray(rng.normal(size=(f, d)), jnp.float32)}
+    v = {"w1": jnp.asarray(rng.normal(size=(e, r, d)), jnp.float32),
+         "w2": jnp.asarray(rng.normal(size=(e, r, d)), jnp.float32)}
+    if glu:
+        center["w3"] = jnp.asarray(rng.normal(size=(d, f)), jnp.float32)
+        v["w3"] = jnp.asarray(rng.normal(size=(e, r, d)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(e, f, r)), jnp.float32)
+    return center, u, v
+
+
+def _compressed_cfg(arch="mixtral-8x7b", **moe_kw):
+    cfg = reduced_config(arch)
+    moe = dataclasses.replace(cfg.moe, capacity_factor=8.0, **moe_kw)
+    return dataclasses.replace(
+        cfg, moe=moe,
+        resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=0.5))
+
+
+def _layer0_store(cfg, seed=1):
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(seed))
+    cp, _ = compress_model_params(params, cfg)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.asarray(a[0]), cp["segments"][0]["slots"][0]["ffn"])
+
+
+@pytest.mark.parametrize("glu,act", [(True, "silu"), (False, "relu")])
+def test_token_kernel_matches_ref(rng, glu, act):
+    """fused_token kernel == jnp oracle to fp32 tolerance, GLU and non-GLU."""
+    t, k, e, d, f, r = 6, 2, 8, 48, 80, 10
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    gates = jnp.asarray(rng.random((t, k)), jnp.float32)
+    center, u, v = _random_store(rng, e, d, f, r, glu)
+    got = token_lowrank_moe(x, ids, gates, center, u, v, activation=act)
+    ref = token_lowrank_moe_ref(x, ids, gates, center, u, v, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_token_kernel_t1(rng):
+    """T=1 (single live slot) degenerates to a k-step grid and stays exact."""
+    e, d, f, r = 4, 32, 64, 6
+    x = jnp.asarray(rng.normal(size=(1, d)), jnp.float32)
+    ids = jnp.asarray([[2, 0]], jnp.int32)
+    gates = jnp.asarray([[0.7, 0.3]], jnp.float32)
+    center, u, v = _random_store(rng, e, d, f, r, glu=True)
+    got = token_lowrank_moe(x, ids, gates, center, u, v)
+    ref = token_lowrank_moe_ref(x, ids, gates, center, u, v)
+    assert got.shape == (1, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_token_kernel_duplicate_expert_ids(rng):
+    """Duplicate experts within a token's top-k contribute independently:
+    gates (g1, g2) on the SAME expert must equal one gate g1+g2."""
+    e, d, f, r = 4, 32, 64, 6
+    x = jnp.asarray(rng.normal(size=(3, d)), jnp.float32)
+    center, u, v = _random_store(rng, e, d, f, r, glu=True)
+    ids = jnp.asarray([[1, 1], [0, 3], [2, 2]], jnp.int32)
+    gates = jnp.asarray(rng.random((3, 2)), jnp.float32)
+    got = token_lowrank_moe(x, ids, gates, center, u, v)
+    ref = token_lowrank_moe_ref(x, ids, gates, center, u, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # collapse each duplicated pair onto one slot with the summed gate
+    merged_gates = jnp.asarray(
+        [[float(gates[0].sum()), 0.0], gates[1], [float(gates[2].sum()), 0.0]],
+        jnp.float32)
+    merged = token_lowrank_moe(x, ids, merged_gates, center, u, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(merged),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_token_matches_fused_model(rng):
+    """apply_mode='fused_token' == the dispatched fused path through the
+    full model (GLU Mixtral config), fp32 tolerance."""
+    cfg = _compressed_cfg(token_path_max_tokens=0)  # keep 'fused' dispatched
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(1))
+    cp, _ = compress_model_params(params, cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)),
+                                   jnp.int32)}
+    outs = {}
+    for mode in ("fused", "fused_token"):
+        logits, _ = jax.jit(
+            lambda p, b, m=mode: model.forward(p, b, apply_mode=m))(cp, batch)
+        outs[mode] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["fused"], outs["fused_token"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_token_matches_fused_nonglu(rng):
+    """Same parity on a non-GLU store (switch-base-8: relu, top-1)."""
+    cfg = _compressed_cfg("switch-base-8", token_path_max_tokens=0)
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(2))
+    cp, _ = compress_model_params(params, cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)),
+                                   jnp.int32)}
+    outs = {}
+    for mode in ("fused", "fused_token"):
+        logits, _ = jax.jit(
+            lambda p, b, m=mode: model.forward(p, b, apply_mode=m))(cp, batch)
+        outs[mode] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["fused"], outs["fused_token"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_token_gate_boundary(rng, monkeypatch):
+    """The automatic gate switches EXACTLY at token_path_max_tokens, and the
+    two paths agree at the boundary."""
+    import repro.kernels as kernels_pkg
+
+    thr = 4
+    cfg = _compressed_cfg(token_path_max_tokens=thr)
+    bank = _layer0_store(cfg)
+    m = cfg.moe
+
+    # static gate logic
+    assert token_path_applicable(bank, m, "fused", thr)
+    assert not token_path_applicable(bank, m, "fused", thr + 1)
+    assert token_path_applicable(bank, m, "fused_token", 10_000)  # forced
+    assert not token_path_applicable(bank, m, "restored", 1)
+    assert not token_path_applicable({"w1": None}, m, "fused", 1)  # dense
+
+    # dynamic: count kernel entries through moe_layer
+    calls = []
+    orig = kernels_pkg.token_lowrank_moe
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(kernels_pkg, "token_lowrank_moe", spy)
+    x_at = jnp.asarray(rng.normal(size=(thr, 1, cfg.d_model)), jnp.float32)
+    x_over = jnp.asarray(rng.normal(size=(thr + 1, 1, cfg.d_model)),
+                         jnp.float32)
+    out_tok, _ = moe_layer(bank, x_at, cfg, apply_mode="fused")
+    assert len(calls) == 1  # at the boundary: token path
+    out_disp_over, _ = moe_layer(bank, x_over, cfg, apply_mode="fused")
+    assert len(calls) == 1  # one past the boundary: dispatched path
+
+    # parity at the boundary: same inputs through the gate-disabled config
+    cfg_disp = dataclasses.replace(
+        cfg, moe=dataclasses.replace(m, token_path_max_tokens=0))
+    out_disp, _ = moe_layer(bank, x_at, cfg_disp, apply_mode="fused")
+    assert len(calls) == 1
+    np.testing.assert_allclose(np.asarray(out_tok, np.float32),
+                               np.asarray(out_disp, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_token_rejects_delta_store(rng):
+    """up/block (dense-delta) stores have no low-rank factors to gather."""
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="up",
+                                        keep_ratio=1.0))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    bank = jax.tree_util.tree_map(
+        lambda a: jnp.asarray(a[0]), cp["segments"][0]["slots"][0]["ffn"])
+    x = jnp.asarray(rng.normal(size=(2, 1, cfg.d_model)), jnp.float32)
+    with pytest.raises(ValueError, match="fused_token"):
+        moe_layer(bank, x, cfg, apply_mode="fused_token")
+
+
+def test_token_path_fewer_bytes_at_decode_shapes():
+    """Analytic Mixtral-shape accounting: the token path must move strictly
+    fewer HBM bytes than the dispatched grouped kernel at T <= 8."""
+    runtime = pytest.importorskip("benchmarks.runtime")
+    rows = {r[0]: r[1] for r in runtime.token_decode_roofline_mixtral()}
+    for t in (1, 4, 8):
+        tok = rows[f"T11/token_decode_roofline/T{t}_token_GB"]
+        disp = rows[f"T11/token_decode_roofline/T{t}_dispatched_GB"]
+        assert tok < disp, (t, tok, disp)
+        assert rows[f"T11/token_decode_roofline/T{t}_bytes_x"] > 1.0

@@ -85,6 +85,33 @@ def test_server_honors_eos(rng):
     assert req2.output == [free[0]]
 
 
+def test_server_fused_token_generation_parity(rng):
+    """Serving an SVD store with apply_mode='fused_token' (ragged per-token
+    decode path, no dispatch buffer) reproduces the dispatched fused
+    generation token-for-token."""
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                token_path_max_tokens=0),
+        resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(3)]
+
+    dispatched = Server(model, cp, num_slots=2, max_seq=64, apply_mode="fused")
+    token = Server(model, cp, num_slots=2, max_seq=64,
+                   apply_mode="fused_token")
+    reqs_a = [Request(prompt=p, max_new_tokens=5) for p in prompts]
+    reqs_b = [Request(prompt=p, max_new_tokens=5) for p in prompts]
+    dispatched.serve(reqs_a)
+    token.serve(reqs_b)
+    for a, b in zip(reqs_a, reqs_b):
+        assert a.output == b.output, (a.output, b.output)
+
+
 def test_server_with_compressed_params(rng):
     """Serving with ResMoE-compressed params: runs; near-lossless store
     reproduces the dense generation."""
