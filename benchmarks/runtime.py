@@ -12,7 +12,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import reduced_config
-from repro.models import build_model, compress_model_params
+from repro.models import (
+    build_model,
+    compress_model_params,
+    quantize_compressed_params,
+)
 
 from .common import timer
 
@@ -40,6 +44,10 @@ def run(seed: int = 0):
     bench("ResMoE(fused)", cp, "fused")
     bench("ResMoE(fused_shared)", cp, "fused_shared")
     bench("ResMoE(fused_kernel)", cp, "fused_kernel")
+    # int8 store through the dequant-fused grouped kernel (DESIGN.md §9)
+    qp = quantize_compressed_params(cp)
+    bench("ResMoE(fused_kernel,int8)", qp, "fused_kernel")
+    bench("ResMoE(fused,int8)", qp, "fused")
 
     # kernel microbench (interpret mode)
     from repro.kernels import lowrank_restore_matmul
@@ -59,25 +67,30 @@ def run(seed: int = 0):
 
     rows.extend(grouped_comparison(rng))
     rows.extend(grouped_roofline_mixtral())
-    rows.extend(token_decode_comparison(rng, cfg=cfg, cp=cp))
+    rows.extend(quant_kernel_comparison(rng))
+    rows.extend(quant_roofline_mixtral())
+    rows.extend(token_decode_comparison(rng, cfg=cfg, cp=cp, qp=qp))
     rows.extend(token_decode_roofline_mixtral())
     rows.extend(ep_vs_gspmd_compressed())
     return rows
 
 
-def token_decode_comparison(rng, ts=(1, 4, 8, 32), cfg=None, cp=None):
+def token_decode_comparison(rng, ts=(1, 4, 8, 32), cfg=None, cp=None,
+                            qp=None):
     """Decode-shape MoE layer: ragged token path vs dispatched vs restored.
 
     Times ONE compressed MoE layer (the reduced-Mixtral layer-0 store) at
     decode token counts T ∈ {1, 4, 8, 32} under (a) the ragged per-token
     path (apply_mode="fused_token", kernels/resmoe_token.py), (b) the
     dispatched grouped kernel with the token gate disabled
-    (token_path_max_tokens=0), and (c) the in-graph restored path.
+    (token_path_max_tokens=0), (c) the in-graph restored path, and (d) the
+    int8 store through the dequant-fused token kernel (token_int8).
     Interpret-mode wall-clock is a correctness proxy, NOT a TPU
-    projection — token_decode_roofline_mixtral states the hardware claim.
+    projection — token_decode_roofline_mixtral / quant_roofline_mixtral
+    state the hardware claims.
 
-    ``cfg``/``cp`` let run() share its already-compressed store; built
-    here only when invoked standalone.
+    ``cfg``/``cp``/``qp`` let run() share its already-compressed stores;
+    built here only when invoked standalone.
     """
     if cfg is None or cp is None:
         cfg = reduced_config("mixtral-8x7b")
@@ -87,26 +100,32 @@ def token_decode_comparison(rng, ts=(1, 4, 8, 32), cfg=None, cp=None):
         model = build_model(cfg)
         params, _ = model.init_split(jax.random.PRNGKey(0))
         cp, _ = compress_model_params(params, cfg)
+    if qp is None:
+        qp = quantize_compressed_params(cp)
     from repro.models.moe import moe_layer
 
     bank = jax.tree_util.tree_map(
         lambda a: jnp.asarray(a[0]), cp["segments"][0]["slots"][0]["ffn"])
+    qbank = jax.tree_util.tree_map(
+        lambda a: jnp.asarray(a[0]), qp["segments"][0]["slots"][0]["ffn"])
     rows = []
     variants = (
-        ("token", "fused_token", None),
-        ("dispatched_kernel", "fused_kernel", 0),
-        ("restored", "restored", 0),
+        ("token", "fused_token", None, bank),
+        ("token_int8", "fused_token", None, qbank),
+        ("dispatched_kernel", "fused_kernel", 0, bank),
+        ("dispatched_kernel_int8", "fused_kernel", 0, qbank),
+        ("restored", "restored", 0, bank),
     )
     for t in ts:
         x = jnp.asarray(rng.normal(size=(t, 1, cfg.d_model)), jnp.float32)
-        for name, mode, thr in variants:
+        for name, mode, thr, bk in variants:
             c2 = dataclasses.replace(
                 cfg, moe=dataclasses.replace(cfg.moe,
                                              token_path_max_tokens=thr))
             fn = jax.jit(lambda b, xx, c=c2, m=mode:
                          moe_layer(b, xx, c, apply_mode=m)[0])
-            fn(bank, x).block_until_ready()
-            us = timer(lambda: fn(bank, x).block_until_ready(), repeats=5)
+            fn(bk, x).block_until_ready()
+            us = timer(lambda: fn(bk, x).block_until_ready(), repeats=5)
             rows.append((f"T11/token_decode/T{t}_{name}_us", round(us, 1), ""))
     return rows
 
@@ -295,6 +314,71 @@ def grouped_comparison(rng, e=8, c=64, d=256, f=448, r=64):
     us = timer(lambda: restored().block_until_ready(), repeats=5)
     rows.append(("T11/grouped/restored_xla", round(us, 1), ""))
     return rows
+
+
+def quant_kernel_comparison(rng, e=8, c=64, d=256, f=448, r=64):
+    """Dequant-fused int8 grouped kernel vs its fp32 twin (interpret mode).
+
+    Same bank shapes as grouped_comparison; the int8 variant streams the
+    center/factor tiles as int8 and folds the per-channel scales into the
+    f32 accumulators (kernels/resmoe_grouped.py::grouped_lowrank_matmul_q8).
+    Interpret-mode wall-clock is a correctness proxy; the HBM-bytes claim
+    is quant_roofline_mixtral.
+    """
+    from repro.core.quant import quantize_int8
+    from repro.kernels import grouped_lowrank_matmul, grouped_lowrank_matmul_q8
+
+    xg = jnp.asarray(rng.normal(size=(e, c, d)), jnp.float32)
+    wf = rng.normal(size=(d, f)).astype(np.float32)
+    af = rng.normal(size=(e, d, r)).astype(np.float32)
+    bf = rng.normal(size=(e, r, f)).astype(np.float32)
+    wq, sw = quantize_int8(wf, -2)   # per output channel f
+    aq, sa = quantize_int8(af, -2)   # per rank channel r
+    bq, sb = quantize_int8(bf, -1)   # per rank channel r
+    rows = []
+
+    us = timer(lambda: grouped_lowrank_matmul(
+        jnp.asarray(xg), jnp.asarray(wf), jnp.asarray(af), jnp.asarray(bf),
+        interpret=True).block_until_ready(), repeats=3)
+    rows.append(("T11/quant/grouped_fp32_interpret", round(us, 1), ""))
+    sab = jnp.asarray(sa * sb)
+    us = timer(lambda: grouped_lowrank_matmul_q8(
+        jnp.asarray(xg), jnp.asarray(wq), jnp.asarray(sw), jnp.asarray(aq),
+        jnp.asarray(bq), sab, interpret=True).block_until_ready(), repeats=3)
+    rows.append(("T11/quant/grouped_int8_interpret", round(us, 1), ""))
+    return rows
+
+
+def quant_roofline_mixtral(e=8, d=4096, f=14336, keep=0.25):
+    """Factor HBM bytes of the serving store per MoE layer, fp32 vs int8.
+
+    The factors — center segments (w1, w3, w2), ``u``, and the three ``v``
+    segments — are everything the restore-free kernels stream per layer
+    besides activations. int8 stores 1 byte/elem plus fp32 per-channel
+    scale vectors (center: one scale per output channel; u/v: [E, r] rank
+    scales), so the ratio sits just under 4x; the scales are O(channels),
+    ~1e-4 of the factor payload at Mixtral-8x7B shapes. Asserted here
+    (>= 3.5x, the acceptance floor) so the bench tier gates regressions
+    that grow the scale payload.
+    """
+    r = int(keep * d * f / (d + f))  # svd_rank_for_ratio's budget rule
+    factor_elems = 3 * d * f + e * f * r + 3 * e * r * d  # center + u + v
+    scale_elems = (2 * f + d) + e * r + 3 * e * r  # center + u + v scales
+    fp32_bytes = factor_elems * 4
+    int8_bytes = factor_elems * 1 + scale_elems * 4
+    ratio = fp32_bytes / int8_bytes
+    assert ratio >= 3.5, (
+        f"int8 store factor-byte advantage {ratio:.2f}x fell below the "
+        "3.5x acceptance floor — scale payload grew?")
+    return [
+        ("T11/quant_roofline_mixtral/fp32_factor_GB",
+         round(fp32_bytes / 1e9, 3), f"elems={factor_elems:.3e}"),
+        ("T11/quant_roofline_mixtral/int8_factor_GB",
+         round(int8_bytes / 1e9, 3),
+         f"scale_elems={scale_elems:.3e} (fp32)"),
+        ("T11/quant_roofline_mixtral/factor_bytes_x", round(ratio, 2),
+         "int8 store advantage (>=3.5 asserted)"),
+    ]
 
 
 def grouped_roofline_mixtral(e=8, c=128, d=4096, f=14336, keep=0.25,

@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""CI guard: every (apply_mode, store_dtype) combination has a parity test.
+
+Purely static (no jax import — runs in ~10 ms like check_docs.py):
+
+  * the required matrix is read from the source of truth — the
+    ``APPLY_MODES`` and ``STORE_DTYPES`` tuples of ``ResMoEConfig``
+    (``configs/base.py``) — so ADDING a new apply mode or store dtype
+    fails CI until a parity test covers it;
+  * coverage is declared in test docstrings/comments with the marker
+
+        # PARITY: <apply_mode>/<store_dtype>
+
+    placed on the test that asserts that combination's output parity
+    (e.g. tests/test_quant.py covers the int8 column, tests/test_moe.py
+    and tests/test_moe_token.py the fp32 one).
+
+Run directly or via ``scripts/ci.sh docs`` / ``scripts/ci.sh all``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+MARKER_RE = re.compile(r"#\s*PARITY:\s*([\w-]+)\s*/\s*([\w-]+)")
+
+
+def _tuple_of_strings(source: str, name: str, path: Path):
+    """First `<name> = ("a", "b", ...)` assignment in a module, via ast."""
+    tree = ast.parse(source)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if name in targets and isinstance(node.value, ast.Tuple):
+                return tuple(ast.literal_eval(node.value))
+    raise SystemExit(f"FAIL could not find tuple {name} in {path}")
+
+
+def main() -> int:
+    base = ROOT / "src/repro/configs/base.py"
+    source = base.read_text()
+    modes = _tuple_of_strings(source, "APPLY_MODES", base)
+    dtypes = _tuple_of_strings(source, "STORE_DTYPES", base)
+    required = {(m, d) for m in modes for d in dtypes}
+
+    covered = {}
+    for test in sorted((ROOT / "tests").glob("test_*.py")):
+        for m, d in MARKER_RE.findall(test.read_text()):
+            covered.setdefault((m, d), []).append(test.name)
+
+    unknown = sorted(set(covered) - required)
+    missing = sorted(required - set(covered))
+    for m, d in unknown:
+        print(f"FAIL marker for unknown combination {m}/{d} in "
+              f"{', '.join(covered[(m, d)])} (typo, or a removed mode?)")
+    for m, d in missing:
+        print(f"FAIL no parity test declared for apply_mode={m} "
+              f"store_dtype={d} — add one and mark it '# PARITY: {m}/{d}'")
+    if unknown or missing:
+        return 1
+    print(f"parity matrix OK: {len(modes)} apply modes x {len(dtypes)} "
+          "store dtypes all covered")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,8 @@
 #   scripts/ci.sh bench      # benchmark smoke: `benchmarks.run --fast`
 #                            # must exit 0 and write BENCH_<n>.json (the
 #                            # per-PR perf-trajectory artifact)
-#   scripts/ci.sh docs       # broken md links / stale README references
+#   scripts/ci.sh docs       # broken md links / stale README references /
+#                            # apply-mode x store-dtype parity-test matrix
 #   scripts/ci.sh all        # every tier above, tier-1 first
 #
 # Tier-1 is the gate every PR must keep green (ROADMAP.md).
@@ -29,6 +30,8 @@ kernels() {
         tests/test_kernels.py \
         tests/test_wkv6_kernel.py \
         tests/test_moe_token.py \
+        "tests/test_quant.py::test_grouped_q8_kernel_matches_dequant_ref" \
+        "tests/test_quant.py::test_token_q8_kernel_matches_dequant_ref" \
         "tests/test_moe.py::test_resmoe_fused_kernel_matches_fused"
 }
 
@@ -37,7 +40,8 @@ kernels() {
 # helper sees a real multi-device topology on a bare CPU runner.
 multidev() {
     XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-        python -m pytest -q tests/test_moe_ep.py tests/test_sharding.py
+        python -m pytest -q tests/test_moe_ep.py tests/test_sharding.py \
+        "tests/test_quant.py::test_ep_int8_parity_forced_mesh"
 }
 
 # Bench smoke tier: the fast benchmark pass must complete (nonzero exit on
@@ -49,12 +53,27 @@ bench() {
     n="$(git rev-list --count HEAD 2>/dev/null || echo 0)"
     python -m benchmarks.run --fast --json "BENCH_${n}.json"
     test -s "BENCH_${n}.json"
+    # the quantized-store rows (grouped/token int8 comparisons + the
+    # factor-bytes roofline) must land in the trajectory artifact
+    python - "BENCH_${n}.json" <<'PY'
+import json, sys
+rows = json.load(open(sys.argv[1]))
+quant = [k for k in rows if "int8" in k or "/quant" in k]
+assert any("quant_roofline" in k for k in quant), \
+    f"no quant roofline rows in bench artifact ({len(rows)} rows)"
+assert any("int8" in k for k in quant), \
+    f"no int8 comparison rows in bench artifact ({len(rows)} rows)"
+print(f"bench artifact OK: {len(quant)} quantized rows of {len(rows)}")
+PY
 }
 
-# Docs tier: intra-repo markdown links must resolve and README code blocks
-# must reference real modules/paths/flags (no jax import — runs in ~1 s).
+# Docs tier: intra-repo markdown links must resolve, README code blocks
+# must reference real modules/paths/flags, and every
+# (apply_mode, store_dtype) combination must declare a parity test
+# (no jax import — runs in ~1 s).
 docs() {
     python scripts/check_docs.py
+    python scripts/check_parity_matrix.py
 }
 
 case "${1:-tier1}" in

@@ -1,3 +1,17 @@
-from .checkpointer import Checkpointer, latest_step, reshard
+from .checkpointer import (
+    Checkpointer,
+    has_compressed_store,
+    latest_step,
+    load_compressed_store,
+    reshard,
+    save_compressed_store,
+)
 
-__all__ = ["Checkpointer", "latest_step", "reshard"]
+__all__ = [
+    "Checkpointer",
+    "has_compressed_store",
+    "latest_step",
+    "load_compressed_store",
+    "reshard",
+    "save_compressed_store",
+]

@@ -212,3 +212,129 @@ def reshard(tree: PyTree, shardings: PyTree) -> PyTree:
     return jax.tree_util.tree_map(
         lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s), tree, shardings
     )
+
+
+# ---------------------------------------------------------------------------
+# Compressed-store persistence (compress-once / serve-many)
+# ---------------------------------------------------------------------------
+#
+# The ResMoE pipeline's offline artifact: the FULL serving params tree
+# after compress_model_params (and optionally quantize_compressed_params) —
+# every LayerCompression's factored form (FusedLayerParams: center/u/v,
+# plus the int8 scales) alongside the untouched dense weights. serve.py
+# boots from this directory (--store-dir) instead of re-running the
+# barycenter + SVD at every server start.
+#
+# Layout (same atomic-rename visibility contract as step checkpoints):
+#
+#     <dir>.tmp/store.npz + store_manifest.json   written first
+#     <dir>/                                      atomic rename on completion
+
+_STORE_MANIFEST = "store_manifest.json"
+_STORE_FORMAT = "resmoe-store-v1"
+
+
+def has_compressed_store(directory: str) -> bool:
+    return os.path.exists(os.path.join(directory, _STORE_MANIFEST))
+
+
+def save_compressed_store(directory: str, params: PyTree,
+                          meta: Optional[Dict] = None) -> str:
+    """Persist a (compressed, optionally int8) serving params tree.
+
+    ``meta`` records boot-relevant facts (arch name, store_dtype, method,
+    keep_ratio) so a loader can validate before serving. Overwrites an
+    existing STORE atomically; a pre-existing directory that is not a
+    store is refused (a mistyped path must never wipe unrelated data).
+    """
+    directory = directory.rstrip("/")
+    if (os.path.isdir(directory) and os.listdir(directory)
+            and not has_compressed_store(directory)):
+        raise ValueError(
+            f"refusing to overwrite {directory!r}: it is a non-empty "
+            f"directory without a {_STORE_MANIFEST} — not a compressed "
+            "store. Pick an empty or fresh path.")
+    flat, _ = _flatten_with_paths(params)
+    arrays = {}
+    manifest = {"format": _STORE_FORMAT, "meta": meta or {}, "leaves": {}}
+    for key, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        enc, dtype_name = _encode(arr)
+        arrays[key] = enc
+        manifest["leaves"][key] = {"shape": list(arr.shape),
+                                   "dtype": dtype_name}
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "store.npz"), **arrays)
+    with open(os.path.join(tmp, _STORE_MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    # overwrite via rename-aside so a crash between steps never leaves a
+    # window with NO store (rmtree-before-rename would): the old store
+    # stays visible until the new one is renamed in.
+    old = directory + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(directory):
+        os.rename(directory, old)
+    os.rename(tmp, directory)  # atomic visibility
+    shutil.rmtree(old, ignore_errors=True)
+    return directory
+
+
+def _unflatten_keys(items: Dict[str, np.ndarray]) -> PyTree:
+    """Rebuild the nested params tree from '/'-joined leaf paths.
+
+    Dict nodes whose keys are a dense 0..n-1 integer range become lists
+    (the treedef convention of _flatten_with_paths for list nodes —
+    ``segments`` / ``slots`` in the params tree).
+    """
+    root: Dict = {}
+    for key, arr in items.items():
+        node = root
+        parts = key.split(_SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        out = {k: fix(v) for k, v in node.items()}
+        if out and all(k.isdigit() for k in out):
+            idx = sorted(int(k) for k in out)
+            if idx == list(range(len(idx))):
+                return [out[str(i)] for i in idx]
+        return out
+
+    return fix(root)
+
+
+def load_compressed_store(directory: str) -> Tuple[PyTree, Dict]:
+    """Load a persisted store: (host-numpy params tree, meta dict).
+
+    Leaves stay numpy — the caller device_puts them (Server does this via
+    its rules/param_axes path, or jax promotes them lazily on first use).
+    """
+    manifest_path = os.path.join(directory, _STORE_MANIFEST)
+    if not os.path.exists(manifest_path):
+        raise FileNotFoundError(
+            f"no compressed store at {directory!r} (missing "
+            f"{_STORE_MANIFEST}; was the save interrupted? a crash "
+            "mid-write leaves only a .tmp dir)")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != _STORE_FORMAT:
+        raise ValueError(f"unknown store format {manifest.get('format')!r} "
+                         f"at {directory!r} (expected {_STORE_FORMAT!r})")
+    data = np.load(os.path.join(directory, "store.npz"))
+    leaves = {}
+    for key, spec in manifest["leaves"].items():
+        arr = _decode(data[key], spec["dtype"])
+        if list(arr.shape) != spec["shape"]:
+            raise ValueError(
+                f"store leaf {key}: shape {arr.shape} does not match "
+                f"manifest {spec['shape']} — corrupted store")
+        leaves[key] = arr
+    return _unflatten_keys(leaves), manifest["meta"]

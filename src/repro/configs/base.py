@@ -89,15 +89,26 @@ class ResMoEConfig:
     scope: str = "experts"  # "experts" | "cross_layer"
     # Block shape for method="block" (TPU tile-aligned).
     block_shape: Tuple[int, int] = (8, 128)
+    # Serving-store dtype: "int8" quantizes center/u/v symmetrically per
+    # channel with fp32 scale vectors (core/quant.py, DESIGN.md §9) —
+    # ~4x fewer factor HBM bytes, served by the dequant-fused kernels.
+    # method="svd" only (dense-delta stores have no factored form).
+    store_dtype: str = "fp32"
 
     APPLY_MODES = ("restored", "fused", "fused_shared", "fused_kernel",
                    "fused_token")
+    STORE_DTYPES = ("fp32", "int8")
 
     def __post_init__(self):
         if self.apply_mode not in self.APPLY_MODES:
             raise ValueError(
                 f"unknown resmoe apply_mode {self.apply_mode!r}; "
                 f"expected one of {self.APPLY_MODES}"
+            )
+        if self.store_dtype not in self.STORE_DTYPES:
+            raise ValueError(
+                f"unknown resmoe store_dtype {self.store_dtype!r}; "
+                f"expected one of {self.STORE_DTYPES}"
             )
 
 

@@ -15,6 +15,15 @@ from .compress import (
     split_design,
 )
 from .ot import exact_assignment, ot_permutation, sinkhorn
+from .quant import (
+    STORE_DTYPES,
+    dequantize_int8,
+    dequantize_store,
+    int8_error_bound,
+    is_quantized_store,
+    quantize_int8,
+    quantize_store,
+)
 from .residual import (
     CompressedResidual,
     compress_residual,
@@ -41,6 +50,13 @@ __all__ = [
     "exact_assignment",
     "ot_permutation",
     "sinkhorn",
+    "STORE_DTYPES",
+    "dequantize_int8",
+    "dequantize_store",
+    "int8_error_bound",
+    "is_quantized_store",
+    "quantize_int8",
+    "quantize_store",
     "CompressedResidual",
     "compress_residual",
     "compress_svd",

@@ -107,9 +107,30 @@ class LayerCompression:
         return len(self.residuals)
 
     def restored_design(self, k: int) -> Array:
-        """\\hat W_k = W_omega + Delta_k  (approximates T_k W_k)."""
-        dd = self.residuals[k].to_dense()
-        return self.center + dd[: self.center.shape[0], : self.center.shape[1]]
+        """\\hat W_k = W_omega + Delta_k  (approximates T_k W_k).
+
+        The residual must agree with the center's shape — a silent slice
+        here used to mask malformed stores (e.g. a residual compressed
+        against a different layer's design). The single legitimate
+        mismatch is the block store, whose BCSR layout zero-pads to tile
+        multiples; only that exact padding is stripped.
+        """
+        r = self.residuals[k]
+        dd = r.to_dense()
+        p, q = self.center.shape
+        if dd.shape != (p, q):
+            bm, bn = r.block_shape
+            if r.method == "block" and dd.shape == (p + (-p) % bm,
+                                                    q + (-q) % bn):
+                dd = dd[:p, :q]  # strip the BCSR tile padding
+            else:
+                raise ValueError(
+                    f"residual {k} shape {dd.shape} does not match center "
+                    f"shape {(p, q)} (method={r.method!r}); the store is "
+                    "malformed — was it compressed against a different "
+                    "expert bank?"
+                )
+        return self.center + dd
 
     def approximation_error(self, design: Array) -> float:
         """Paper §5.2 metric: mean_k ||T_k W_k - \\hat W_k||_F^2 / p_I."""

@@ -1,0 +1,140 @@
+"""Int8 symmetric per-channel quantization of the ResMoE-SVD store.
+
+The paper notes (§5.4) that the barycenter + residual store is orthogonal
+to weight quantization; this module is that composition for the serving
+store. Every factor of the compressed store — the barycenter ``center``
+segments and the per-expert low-rank ``u``/``v`` factors — is quantized
+symmetrically to int8 with one fp32 scale per *channel*:
+
+    q = clip(round(x / s), -127, 127),   s = amax_channel(|x|) / 127
+
+Channel choice is what lets the serving kernels fuse dequantization into
+the matmuls they already run (DESIGN.md §9):
+
+  * center ``w1``/``w3`` ([d, f]) and ``w2`` ([f, d]): per OUTPUT channel
+    (the last axis) — ``y = (x @ q) * s`` applies the scale to the
+    accumulator tile, never to the weight;
+  * ``u`` ([E, f, r]) and ``v`` segments ([E, r, d]): per RANK channel
+    ([E, r] scales) — every contraction either *produces* the rank axis
+    (scale the tiny rank-space vector after the dot) or *consumes* it
+    (fold the scale into the rank-space vector before the dot), so the
+    int8 factor tiles are only ever cast, never re-scaled elementwise.
+
+Symmetric round-to-nearest gives the analytic elementwise error bound
+
+    |x - s * q| <= s / 2        (per channel; no clipping occurs because
+                                 |x| <= 127 s by construction)
+
+checked as a hypothesis property in tests/test_quant.py.
+
+Quantization runs offline on host (numpy); dequantization helpers are jnp
+so the non-kernel apply modes can dequantize in-graph.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ResMoEConfig
+
+# Serving-store dtypes the pipeline supports end to end (launch/serve.py
+# --store-dtype; scripts/check_parity_matrix.py requires a parity test per
+# (apply_mode, store_dtype) combination). Source of truth:
+# ResMoEConfig.STORE_DTYPES.
+STORE_DTYPES = ResMoEConfig.STORE_DTYPES
+
+# Guards all-zero channels: scale stays positive so q = 0 / dequant = 0.
+_MIN_AMAX = 1e-30
+
+# Reduction axis per store tensor (the axis amax runs over; the scale
+# keeps every OTHER axis). Negative so stacked [L, ...] layouts broadcast.
+_STORE_REDUCE_AXES = {"center": -2, "u": -2, "v": -1}
+
+
+def quantize_int8(x, reduce_axis: int):
+    """Symmetric per-channel int8 quantization.
+
+    ``reduce_axis`` is the axis the channel amax reduces over (the axis a
+    matmul will contract); the returned fp32 ``scale`` has ``x``'s shape
+    with that axis removed.
+    """
+    x = np.asarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=reduce_axis, keepdims=True)
+    scale = np.maximum(amax, _MIN_AMAX) / 127.0
+    q = np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
+    return q, np.squeeze(scale, axis=reduce_axis).astype(np.float32)
+
+
+def dequantize_int8(q, scale, reduce_axis: int):
+    """Inverse of :func:`quantize_int8` (jnp; usable in-graph)."""
+    s = jnp.expand_dims(jnp.asarray(scale), reduce_axis)
+    return jnp.asarray(q).astype(jnp.float32) * s
+
+
+def int8_error_bound(scale):
+    """Elementwise bound on |x - dequant(quant(x))| per channel.
+
+    Round-to-nearest on |x/s| <= 127 never clips, so the error is at most
+    half a quantization step.
+    """
+    return 0.5 * np.asarray(scale, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Whole-store helpers (the ffn param dict of one compressed MoE layer)
+# ---------------------------------------------------------------------------
+
+
+def is_quantized_store(params: Dict) -> bool:
+    """True for an int8 store (key presence — static under jit)."""
+    return "u_scale" in params
+
+
+def quantize_store(ffn: Dict) -> Dict:
+    """Quantize a compressed SVD store's center/u/v to int8 + fp32 scales.
+
+    Input: the ffn param dict holding ``center``/``u``/``v`` (fp32,
+    stacked [L, ...] or per-layer). Router / shared / dense branches are
+    left untouched. Returns a NEW dict with int8 ``center``/``u``/``v``
+    and added ``center_scale``/``u_scale``/``v_scale`` leaves.
+    """
+    if "u" not in ffn or "center" not in ffn:
+        raise ValueError("quantize_store needs an SVD store (center/u/v); "
+                         f"got keys {sorted(ffn)}")
+    out = dict(ffn)
+    cq, cs = {}, {}
+    for name, w in ffn["center"].items():
+        cq[name], cs[name] = quantize_int8(w, _STORE_REDUCE_AXES["center"])
+    out["center"], out["center_scale"] = cq, cs
+    out["u"], out["u_scale"] = quantize_int8(ffn["u"], _STORE_REDUCE_AXES["u"])
+    vq, vs = {}, {}
+    for name, w in ffn["v"].items():
+        vq[name], vs[name] = quantize_int8(w, _STORE_REDUCE_AXES["v"])
+    out["v"], out["v_scale"] = vq, vs
+    return out
+
+
+def dequantize_store(params: Dict) -> Dict:
+    """fp32 ``{center, u, v}`` view of an int8 store (jnp; in-graph).
+
+    Used by the non-kernel apply modes (``restored``/``fused``/
+    ``fused_shared``); the grouped/token kernels fuse dequantization
+    instead (kernels/resmoe_grouped.py, kernels/resmoe_token.py).
+    """
+    if not is_quantized_store(params):
+        raise ValueError("dequantize_store: not a quantized store")
+    center = {
+        name: dequantize_int8(q, params["center_scale"][name],
+                              _STORE_REDUCE_AXES["center"])
+        for name, q in params["center"].items()
+    }
+    u = dequantize_int8(params["u"], params["u_scale"],
+                        _STORE_REDUCE_AXES["u"])
+    v = {
+        name: dequantize_int8(q, params["v_scale"][name],
+                              _STORE_REDUCE_AXES["v"])
+        for name, q in params["v"].items()
+    }
+    return {"center": center, "u": u, "v": v}

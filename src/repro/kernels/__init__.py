@@ -5,6 +5,10 @@
                      expert bank (prefill serving hot path, DESIGN.md §4.2)
   * resmoe_token   — ragged capacity-free per-token MoE for decode-sized
                      batches (no dispatch buffer, DESIGN.md §4.4)
+  * *_q8 variants  — dequant-fused twins of the grouped/token kernels for
+                     the int8 store: int8 factor tiles cast in registers,
+                     per-channel scales folded into the f32 accumulators
+                     (DESIGN.md §9)
   * block_sparse   — BCSR residual matmul (TPU adaptation of UP)
   * wkv6           — chunked RWKV6 recurrence (state VMEM-resident)
 """
@@ -15,9 +19,9 @@ from .ops import (
     resmoe_grouped_svd_apply,
     resmoe_svd_apply,
 )
-from .resmoe_grouped import grouped_lowrank_matmul
+from .resmoe_grouped import grouped_lowrank_matmul, grouped_lowrank_matmul_q8
 from .resmoe_lowrank import lowrank_restore_matmul
-from .resmoe_token import token_lowrank_moe
+from .resmoe_token import token_lowrank_moe, token_lowrank_moe_q8
 from .wkv6 import wkv6_chunk, wkv6_ref
 
 __all__ = [
@@ -29,7 +33,9 @@ __all__ = [
     "resmoe_grouped_svd_apply",
     "lowrank_restore_matmul",
     "grouped_lowrank_matmul",
+    "grouped_lowrank_matmul_q8",
     "token_lowrank_moe",
+    "token_lowrank_moe_q8",
     "wkv6_chunk",
     "wkv6_ref",
 ]

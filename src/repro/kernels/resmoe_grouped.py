@@ -66,16 +66,22 @@ def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, t_ref, *, n_k: int):
         o_ref[0] = (acc_ref[...] + lowrank).astype(o_ref.dtype)
 
 
-def _pick_bk(kp: int, bm: int, bn: int, rp: int, itemsize: int) -> int:
+def _pick_bk(kp: int, bm: int, bn: int, rp: int, itemsize: int,
+             w_itemsize: Optional[int] = None) -> int:
     """Largest MXU-aligned k block whose working set fits the VMEM budget.
 
     Prefers bk == kp (single k step): that is what lets Pallas reuse the
-    shared center tile across the expert grid axis.
+    shared center tile across the expert grid axis. ``w_itemsize``
+    overrides the weight-operand itemsize (1 for the int8 store — the
+    smaller tiles make a single k block fit at shapes where fp32 cannot).
     """
+    wi = itemsize if w_itemsize is None else w_itemsize
 
     def footprint(bk: int) -> int:
-        blocks = bm * bk + bk * bn + bk * rp + rp * bn  # x, w, a, b
-        return 2 * itemsize * blocks + 4 * (bm * bn + bm * rp) + itemsize * bm * bn
+        x_blk = bm * bk
+        w_blks = bk * bn + bk * rp + rp * bn  # w, a, b
+        return (2 * (itemsize * x_blk + wi * w_blks)
+                + 4 * (bm * bn + bm * rp) + itemsize * bm * bn)
 
     if footprint(kp) <= _VMEM_BUDGET:
         return kp
@@ -153,4 +159,128 @@ def grouped_lowrank_matmul(
         ],
         interpret=interpret,
     )(xg, w, a, b)
+    return out[:, :c, :n]
+
+
+# ---------------------------------------------------------------------------
+# Dequant-fused variant for the int8 store (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def _kernel_q8(x_ref, w_ref, a_ref, b_ref, sw_ref, sab_ref, o_ref,
+               acc_ref, t_ref, *, n_k: int):
+    """Same grid/BlockSpec structure as :func:`_kernel`, but ``w``/``a``/
+    ``b`` stream from HBM as int8 and are dequantized in registers: tiles
+    are cast to f32 for the MXU, and the per-channel scales touch only the
+    f32 accumulators — ``acc * sw`` (w's output-channel scale) and
+    ``t * sab`` (the combined rank-channel scale of a and b) at flush.
+    """
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    x = x_ref[0]
+    acc_ref[...] += jnp.dot(x, w_ref[...].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+    t_ref[...] += jnp.dot(x, a_ref[0].astype(x.dtype),
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _flush():
+        t_scaled = t_ref[...] * sab_ref[0]
+        lowrank = jnp.dot(
+            t_scaled.astype(jnp.float32), b_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[0] = (acc_ref[...] * sw_ref[...] + lowrank).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def grouped_lowrank_matmul_q8(
+    xg: jnp.ndarray,  # [E, C, K] dispatched tokens (fp32/bf16)
+    w: jnp.ndarray,  # [K, N]    int8 shared barycenter segment
+    sw: jnp.ndarray,  # [N]      fp32 per-output-channel scale of w
+    a: jnp.ndarray,  # [E, K, R] int8 per-expert residual row factor
+    b: jnp.ndarray,  # [E, R, N] int8 per-expert residual col factor
+    sab: jnp.ndarray,  # [E, R]  fp32 combined rank scale (s_a * s_b)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """y[e] = xg[e] @ (deq(w) + deq(a[e]) @ deq(b[e])), dequant fused.
+
+    The identity the scale placement relies on (core/quant.py): with w
+    quantized per output channel n and a/b per rank channel r,
+
+        x @ deq(w)            = (x @ w_q) * sw[n]
+        (x @ deq(a)) @ deq(b) = ((x @ a_q) * sa * sb) @ b_q
+
+    so the int8 tiles move 4x fewer HBM bytes and are only ever CAST in
+    registers — no elementwise rescale of a weight tile anywhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    e, c, k = xg.shape
+    kk, n = w.shape
+    ee, ka, r = a.shape
+    assert kk == k and ee == e and ka == k and b.shape == (e, r, n), (
+        xg.shape, w.shape, a.shape, b.shape)
+    assert sw.shape == (n,) and sab.shape == (e, r), (sw.shape, sab.shape)
+    out_dtype = out_dtype or xg.dtype
+
+    sub = 16 if jnp.dtype(xg.dtype).itemsize == 2 else 8
+    bm = min(bm, max(sub, -(-c // sub) * sub))
+    pr = (-r) % 128
+    rp = r + pr
+    if bk is None:
+        kp0 = k + ((-k) % 128)
+        bk = _pick_bk(kp0, bm, bn, rp, jnp.dtype(xg.dtype).itemsize,
+                      w_itemsize=1)
+
+    pm, pn, pk = (-c) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        xg = jnp.pad(xg, ((0, 0), (0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    if pk or pr:
+        a = jnp.pad(a, ((0, 0), (0, pk), (0, pr)))
+    if pr or pn:
+        b = jnp.pad(b, ((0, 0), (0, pr), (0, pn)))
+    # padded w columns / t columns are exact zeros, so zero-padded scales
+    # contribute nothing
+    sw2 = jnp.pad(sw, (0, pn)).astype(jnp.float32)[None, :]  # [1, N_p]
+    sab3 = jnp.pad(sab, ((0, 0), (0, pr))).astype(jnp.float32)[:, None, :]
+    cp, kp = xg.shape[1:]
+    np_ = w.shape[1]
+    rp = a.shape[2]
+    n_k = kp // bk
+
+    grid = (cp // bm, np_ // bn, e, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel_q8, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda i, j, g, s: (g, i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, g, s: (s, j)),
+            pl.BlockSpec((1, bk, rp), lambda i, j, g, s: (g, s, 0)),
+            pl.BlockSpec((1, rp, bn), lambda i, j, g, s: (g, 0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, g, s: (0, j)),
+            pl.BlockSpec((1, 1, rp), lambda i, j, g, s: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda i, j, g, s: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, np_), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, rp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xg, w, a, b, sw2, sab3)
     return out[:, :c, :n]

@@ -262,3 +262,214 @@ def token_lowrank_moe(
     ylr = jnp.zeros((t, d), jnp.float32).at[tids].add(oy[:, :d] * g[:, None])
     y = hbar @ center["w2"].astype(jnp.float32) + ylr
     return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dequant-fused variant for the int8 store (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def _kernel_q8(eids_ref, tids_ref, xp_ref, base1_ref, *rest, n_f: int,
+               glu: bool, activation: str):
+    """Same grid/BlockSpec structure as :func:`_kernel`; the per-pair
+    low-rank factors stream as int8 and are dequantized in registers —
+    tiles are cast to f32 for the MXU and the per-channel scales touch
+    only the rank-space vectors: ``t1 = (x · v1_q) * (s_v1 s_u)`` at
+    projection time and ``(t2 * (s_u s_v2)) · v2_q`` at flush
+    (core/quant.py states the identities).
+    """
+    import jax
+
+    from ..models.layers import activation_fn
+
+    if glu:
+        (base3_ref, v1_ref, v3_ref, u_ref, v2_ref, s1_ref, s3_ref, s2_ref,
+         oh_ref, oy_ref, t1_ref, t3_ref, t2_ref) = rest
+    else:
+        (v1_ref, u_ref, v2_ref, s1_ref, s2_ref,
+         oh_ref, oy_ref, t1_ref, t2_ref) = rest
+        base3_ref = v3_ref = t3_ref = s3_ref = None
+
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _project():
+        xrow = xp_ref[...]
+        t1_ref[...] = jax.lax.dot_general(
+            xrow, v1_ref[0].astype(jnp.float32), _CONTRACT_LAST,
+            preferred_element_type=jnp.float32) * s1_ref[0]
+        if glu:
+            t3_ref[...] = jax.lax.dot_general(
+                xrow, v3_ref[0].astype(jnp.float32), _CONTRACT_LAST,
+                preferred_element_type=jnp.float32) * s3_ref[0]
+        t2_ref[...] = jnp.zeros_like(t2_ref)
+
+    act = activation_fn(activation)
+    u_blk = u_ref[0].astype(jnp.float32)  # [bf, rp] int8 -> registers
+    h = base1_ref[...] + jax.lax.dot_general(
+        t1_ref[...], u_blk, _CONTRACT_LAST,
+        preferred_element_type=jnp.float32)
+    h = act(h)
+    if glu:
+        h = h * (base3_ref[...] + jax.lax.dot_general(
+            t3_ref[...], u_blk, _CONTRACT_LAST,
+            preferred_element_type=jnp.float32))
+    oh_ref[...] = h.astype(oh_ref.dtype)
+    t2_ref[...] += jnp.dot(h, u_blk, preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_f - 1)
+    def _flush():
+        oy_ref[...] = jnp.dot(
+            t2_ref[...] * s2_ref[0], v2_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).astype(oy_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bf", "interpret", "out_dtype")
+)
+def token_lowrank_moe_q8(
+    x: jnp.ndarray,  # [T, d] live tokens (decode batch)
+    expert_ids: jnp.ndarray,  # [T, k] int top-k expert ids per token
+    gates: jnp.ndarray,  # [T, k] per-pair combine weights
+    center: Dict[str, jnp.ndarray],  # int8 {"w1": [d, f], "w2": [f, d], ..}
+    center_scale: Dict[str, jnp.ndarray],  # fp32 per-output-channel scales
+    u: jnp.ndarray,  # [E, f, r] int8 residual row factor
+    u_scale: jnp.ndarray,  # [E, r] fp32 rank-channel scale
+    v: Dict[str, jnp.ndarray],  # int8 {"w1"/"w2"/("w3"): [E, r, d]}
+    v_scale: Dict[str, jnp.ndarray],  # fp32 {..: [E, r]} rank-channel scales
+    *,
+    activation: str = "silu",
+    bf: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Capacity-free per-token MoE on the int8 store, dequant fused.
+
+    Identical structure to :func:`token_lowrank_moe`; the shared-center
+    products stay plain dense matmuls with the dequantization folded in as
+    a post-matmul column scale (``(x @ w_q) * s_w``), and the ragged
+    kernel consumes the int8 factor bank directly — 4x fewer factor HBM
+    bytes per gathered expert set.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    t, d = x.shape
+    k = expert_ids.shape[1]
+    p = t * k
+    e, f, r = u.shape
+    out_dtype = out_dtype or x.dtype
+    glu = "w3" in center
+
+    flat_e = expert_ids.reshape(-1).astype(jnp.int32)
+    order = jnp.argsort(flat_e, stable=True)
+    eids = flat_e[order]
+    tids = (order // k).astype(jnp.int32)
+    g = gates.reshape(-1)[order].astype(jnp.float32)
+
+    # shared-center products: dequant fused as a post-matmul column scale
+    xf = x.astype(jnp.float32)
+    base1 = (xf @ center["w1"].astype(jnp.float32)) \
+        * center_scale["w1"].astype(jnp.float32)[None, :]
+    base3 = ((xf @ center["w3"].astype(jnp.float32))
+             * center_scale["w3"].astype(jnp.float32)[None, :]) if glu else None
+
+    v1, v2 = v["w1"], v["w2"]
+    v3 = v["w3"] if glu else None
+    su = u_scale.astype(jnp.float32)
+    s1 = v_scale["w1"].astype(jnp.float32) * su  # [E, r]
+    s3 = v_scale["w3"].astype(jnp.float32) * su if glu else None
+    s2 = su * v_scale["w2"].astype(jnp.float32)
+
+    itemsize = jnp.dtype(x.dtype).itemsize
+    pd, pr = (-d) % 128, (-r) % 128
+    dp, rp = d + pd, r + pr
+    if bf is None:
+        bf = _pick_bf(f, dp, rp, itemsize)
+    pf = (-f) % bf
+    fp = f + pf
+
+    xq = jnp.pad(x, ((0, 0), (0, pd))) if pd else x
+    if pf:
+        base1 = jnp.pad(base1, ((0, 0), (0, pf)))
+        if glu:
+            base3 = jnp.pad(base3, ((0, 0), (0, pf)))
+    if pr or pd:
+        v1 = jnp.pad(v1, ((0, 0), (0, pr), (0, pd)))
+        v2 = jnp.pad(v2, ((0, 0), (0, pr), (0, pd)))
+        if glu:
+            v3 = jnp.pad(v3, ((0, 0), (0, pr), (0, pd)))
+    if pf or pr:
+        u = jnp.pad(u, ((0, 0), (0, pf), (0, pr)))
+    # zero-padded rank scales: the padded t columns are exact zeros anyway
+    if pr:
+        s1 = jnp.pad(s1, ((0, 0), (0, pr)))
+        s2 = jnp.pad(s2, ((0, 0), (0, pr)))
+        if glu:
+            s3 = jnp.pad(s3, ((0, 0), (0, pr)))
+    s1 = s1[:, None, :]  # [E, 1, rp]
+    s2 = s2[:, None, :]
+    if glu:
+        s3 = s3[:, None, :]
+    n_f = fp // bf
+
+    def _e(idx3):
+        return lambda i, j, eids, tids: idx3(eids[i], j)
+
+    in_specs = [
+        pl.BlockSpec((1, dp), lambda i, j, eids, tids: (tids[i], 0)),
+        pl.BlockSpec((1, bf), lambda i, j, eids, tids: (tids[i], j)),  # base1
+    ]
+    operands = [xq, base1.astype(jnp.float32)]
+    if glu:
+        in_specs.append(
+            pl.BlockSpec((1, bf), lambda i, j, eids, tids: (tids[i], j)))
+        operands.append(base3.astype(jnp.float32))
+    in_specs.append(pl.BlockSpec((1, rp, dp), _e(lambda ei, j: (ei, 0, 0))))
+    operands.append(v1)
+    if glu:
+        in_specs.append(pl.BlockSpec((1, rp, dp), _e(lambda ei, j: (ei, 0, 0))))
+        operands.append(v3)
+    in_specs += [
+        pl.BlockSpec((1, bf, rp), _e(lambda ei, j: (ei, j, 0))),  # u
+        pl.BlockSpec((1, rp, dp), _e(lambda ei, j: (ei, 0, 0))),  # v2
+        pl.BlockSpec((1, 1, rp), _e(lambda ei, j: (ei, 0, 0))),   # s1
+    ]
+    operands += [u, v2, s1]
+    if glu:
+        in_specs.append(pl.BlockSpec((1, 1, rp), _e(lambda ei, j: (ei, 0, 0))))
+        operands.append(s3)
+    in_specs.append(pl.BlockSpec((1, 1, rp), _e(lambda ei, j: (ei, 0, 0))))
+    operands.append(s2)
+
+    scratch = [pltpu.VMEM((1, rp), jnp.float32)]  # t1
+    if glu:
+        scratch.append(pltpu.VMEM((1, rp), jnp.float32))  # t3
+    scratch.append(pltpu.VMEM((1, rp), jnp.float32))  # t2
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(p, n_f),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, bf), lambda i, j, eids, tids: (i, j)),
+            pl.BlockSpec((1, dp), lambda i, j, eids, tids: (i, 0)),
+        ],
+        scratch_shapes=scratch,
+    )
+    oh, oy = pl.pallas_call(
+        functools.partial(_kernel_q8, n_f=n_f, glu=glu, activation=activation),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((p, fp), jnp.float32),
+            jax.ShapeDtypeStruct((p, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(eids, tids, *operands)
+
+    gh = oh[:, :f] * g[:, None]
+    hbar = jnp.zeros((t, f), jnp.float32).at[tids].add(gh)
+    ylr = jnp.zeros((t, d), jnp.float32).at[tids].add(oy[:, :d] * g[:, None])
+    y = (hbar @ center["w2"].astype(jnp.float32)) \
+        * center_scale["w2"].astype(jnp.float32)[None, :] + ylr
+    return y.astype(out_dtype)

@@ -21,6 +21,12 @@ kernels/resmoe_token.py — DESIGN.md §4.4). Decode steps carry only
 automatically there (``MoEConfig.token_path_max_tokens``) while prefill
 keeps the dispatched kernels — one Server, both hot paths.
 
+Compress-once/serve-many: the CLI's ``--store-dir`` boots from a persisted
+compressed store (checkpoint/checkpointer.py::load_compressed_store) when
+one exists — the barycenter/SVD pipeline never reruns at boot — and
+``--store-dtype int8`` serves the int8-quantized store through the
+dequant-fused kernels (DESIGN.md §9).
+
 Multi-device serving: pass ``rules`` (a ShardingRules over an active mesh)
 and ``param_axes`` (the logical-axes tree matching ``params`` — from
 ``model.abstract_params()`` for dense weights or
@@ -72,6 +78,7 @@ class Server:
         seed: int = 0,
         rules: Optional[ShardingRules] = None,
         param_axes: Optional[PyTree] = None,
+        truncate_prompts: bool = False,
     ):
         self.model = model
         self.rules = rules
@@ -83,6 +90,7 @@ class Server:
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.apply_mode = apply_mode
+        self.truncate_prompts = truncate_prompts
         self.greedy = greedy
         self.rng = jax.random.PRNGKey(seed)
 
@@ -138,11 +146,29 @@ class Server:
 
     # -- request lifecycle ------------------------------------------------------
 
+    def _validate_prompt(self, req: Request) -> np.ndarray:
+        """Prompt tokens as admitted: the B=1 prefill row holds max_seq
+        positions and an admitted request must keep at least one writable
+        decode position — an oversized prompt used to be accepted and
+        silently overrun (clamped writes corrupt the row). Left-truncates
+        (keeps the most recent context) under ``truncate_prompts``."""
+        toks = np.asarray(req.prompt, np.int32)
+        limit = self.max_seq - 1
+        if len(toks) > limit:
+            if not self.truncate_prompts:
+                raise ValueError(
+                    f"prompt length {len(toks)} exceeds the cache row: "
+                    f"max_seq={self.max_seq} admits at most {limit} prompt "
+                    "tokens (pass truncate_prompts=True to left-truncate "
+                    "instead)")
+            toks = toks[-limit:]
+        return toks
+
     def _admit(self, req: Request, slot: int):
         if req.max_new_tokens <= 0:
             req.output = []
             return
-        toks = np.asarray(req.prompt, np.int32)
+        toks = self._validate_prompt(req)
         s = len(toks)
         pos = jnp.arange(s, dtype=jnp.int32)[None, :]
         row = self._fresh_row()
@@ -181,9 +207,13 @@ class Server:
             self.slot_pos[slot] += 1
             tok = int(nxt[slot])
             req.output.append(tok)
+            # slot_pos is the NEXT position to write (already incremented
+            # above), so the cache is exhausted only at == max_seq; the
+            # old `>= max_seq - 1` left the last writable position unused
+            # and truncated sequences one token early.
             done = len(req.output) >= req.max_new_tokens or (
                 req.eos_id is not None and tok == req.eos_id
-            ) or self.slot_pos[slot] >= self.max_seq - 1
+            ) or self.slot_pos[slot] >= self.max_seq
             if done:
                 self.slot_free[slot] = True
                 self.slot_req[slot] = None
@@ -192,6 +222,10 @@ class Server:
 
     def serve(self, requests: Sequence[Request]) -> List[Request]:
         """Run the continuous-batching loop until all requests finish."""
+        # reject oversized prompts up front — raising from a mid-loop
+        # _admit would abandon already-admitted requests in their slots
+        for req in requests:
+            self._validate_prompt(req)
         queue = list(requests)
         while queue or not all(self.slot_free):
             for slot in range(self.num_slots):
@@ -235,6 +269,28 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
              "compressed stores with a restore-free --apply-mode route "
              "through the shard_map expert-parallel layer (DESIGN.md §6)",
     )
+    from ..core.quant import STORE_DTYPES
+
+    ap.add_argument(
+        "--store-dir", default=None, metavar="DIR",
+        help="compress-once/serve-many: boot from the persisted compressed "
+             "store in DIR when one exists (no recompression — the "
+             "barycenter/SVD pipeline never runs); otherwise compress now "
+             "and persist the store there for the next boot. Requires "
+             "--apply-mode.",
+    )
+    ap.add_argument(
+        "--store-dtype", default=None, choices=STORE_DTYPES,
+        help="serving-store dtype: 'int8' quantizes center/u/v to int8 "
+             "with fp32 per-channel scales (~4x fewer factor HBM bytes; "
+             "served by the dequant-fused kernels, DESIGN.md §9). "
+             "Default: the config's ResMoEConfig.store_dtype (fp32)",
+    )
+    ap.add_argument(
+        "--truncate-prompts", action="store_true",
+        help="left-truncate prompts longer than max_seq-1 instead of "
+             "rejecting them at admit",
+    )
     args = ap.parse_args()
     cfg = reduced_config(args.arch)
     if args.token_path_max_tokens is not None and cfg.moe is not None:
@@ -242,16 +298,54 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
             cfg, moe=dataclasses.replace(
                 cfg.moe, token_path_max_tokens=args.token_path_max_tokens))
     model = build_model(cfg)
-    params, axes = model.init_split(jax.random.PRNGKey(0))
-    if args.apply_mode is not None:
-        from ..models import compress_model_params
+    if args.apply_mode is None and (args.store_dir is not None
+                                    or args.store_dtype is not None):
+        raise SystemExit("--store-dir/--store-dtype require --apply-mode "
+                         "(they describe the compressed store)")
+    if args.apply_mode is None:
+        params, axes = model.init_split(jax.random.PRNGKey(0))
+    else:
+        from ..checkpoint import (
+            has_compressed_store,
+            load_compressed_store,
+            save_compressed_store,
+        )
+        from ..models import compress_model_params, quantize_compressed_params
         from ..models.model import abstract_compressed_params
 
+        store_dtype = args.store_dtype or cfg.resmoe.store_dtype
         cfg = dataclasses.replace(
-            cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd"))
+            cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                            store_dtype=store_dtype))
         model = build_model(cfg)
-        params, _ = compress_model_params(params, cfg)
-        _, axes = abstract_compressed_params(cfg)
+        if args.store_dir is not None and has_compressed_store(args.store_dir):
+            # store boot: the persisted tree already holds every serving
+            # weight — no dense init, no recompression
+            params, meta = load_compressed_store(args.store_dir)
+            for key, want in (("arch", args.arch),
+                              ("store_dtype", store_dtype),
+                              ("method", cfg.resmoe.method),
+                              ("keep_ratio", cfg.resmoe.keep_ratio)):
+                if meta.get(key) != want:
+                    raise SystemExit(
+                        f"store at {args.store_dir} has {key}="
+                        f"{meta.get(key)!r}, requested {want!r} — pick a "
+                        "different --store-dir or matching flags")
+            print(f"booted from persisted store {args.store_dir} "
+                  f"(dtype={store_dtype}; no recompression)")
+        else:
+            params, _ = model.init_split(jax.random.PRNGKey(0))
+            params, _ = compress_model_params(params, cfg)
+            if store_dtype == "int8":
+                params = quantize_compressed_params(params)
+            if args.store_dir is not None:
+                save_compressed_store(
+                    args.store_dir, params,
+                    meta={"arch": args.arch, "store_dtype": store_dtype,
+                          "method": cfg.resmoe.method,
+                          "keep_ratio": cfg.resmoe.keep_ratio})
+                print(f"compressed and persisted store -> {args.store_dir}")
+        _, axes = abstract_compressed_params(cfg, store_dtype=store_dtype)
     rules = None
     if args.mesh is not None:
         from ..sharding import make_rules
@@ -266,7 +360,8 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
         rules = make_rules(make_mesh(shape, ("data", "model")))
     server = Server(model, params, num_slots=4, max_seq=128,
                     apply_mode=args.apply_mode, rules=rules,
-                    param_axes=axes if rules is not None else None)
+                    param_axes=axes if rules is not None else None,
+                    truncate_prompts=args.truncate_prompts)
     rng = np.random.default_rng(0)
     reqs = [
         Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,)),

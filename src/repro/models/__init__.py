@@ -1,12 +1,21 @@
 """Model substrate: attention/recurrent mixers, FFN/MoE, transformer assembly."""
-from .model import Model, build_model, compress_model_params, iter_moe_banks
+from .model import (
+    Model,
+    build_model,
+    compress_model_params,
+    iter_compressed_stores,
+    iter_moe_banks,
+    quantize_compressed_params,
+)
 from .transformer import build_plan, forward, init_cache, init_params, layer_specs, loss_fn
 
 __all__ = [
     "Model",
     "build_model",
     "compress_model_params",
+    "iter_compressed_stores",
     "iter_moe_banks",
+    "quantize_compressed_params",
     "build_plan",
     "forward",
     "init_cache",

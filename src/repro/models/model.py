@@ -125,20 +125,29 @@ def build_model(cfg: ModelConfig) -> Model:
     return Model(cfg)
 
 
-def abstract_compressed_params(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
+def abstract_compressed_params(
+    cfg: ModelConfig, store_dtype: str = "fp32"
+) -> Tuple[PyTree, PyTree]:
     """ShapeDtypeStruct tree of the ResMoE-SVD compressed store (+ axes).
 
     Mirrors what compress_model_params produces, without running the
     barycenter — used by the dry-run to lower compressed serving at full
     scale. Only method='svd' stores are supported abstractly (up/block keep
     dense deltas and change no shapes worth dry-running).
+
+    ``store_dtype="int8"`` mirrors :func:`quantize_compressed_params`
+    instead: int8 center/u/v plus fp32 per-channel scale leaves
+    (center scales on the output-channel axis, rank scales [E, r]).
     """
     import jax
 
+    from ..core.quant import STORE_DTYPES
     from ..core.residual import svd_rank_for_ratio
 
     if cfg.resmoe.method != "svd":
         raise ValueError("abstract compressed store: method must be 'svd'")
+    if store_dtype not in STORE_DTYPES:
+        raise ValueError(f"store_dtype {store_dtype!r} not in {STORE_DTYPES}")
     from ..sharding import split_logical
 
     tree = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
@@ -147,7 +156,8 @@ def abstract_compressed_params(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
     d, f = cfg.d_model, m.expert_d_ff
     dd = (3 * d) if cfg.glu else (2 * d)
     r = svd_rank_for_ratio(f, dd, cfg.resmoe.keep_ratio)
-    f32 = jnp.bfloat16  # serving store dtype
+    quant = store_dtype == "int8"
+    f32 = jnp.int8 if quant else jnp.bfloat16  # serving store dtype
 
     for seg_v, seg_a in zip(values["segments"], axes["segments"]):
         for slot_v, slot_a in zip(seg_v["slots"], seg_a["slots"]):
@@ -194,6 +204,36 @@ def abstract_compressed_params(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
             slot_a["ffn"]["u"] = lax + ("experts", "expert_mlp", "rank")
             slot_v["ffn"]["v"] = v_v
             slot_a["ffn"]["v"] = v_a
+            if quant:
+                sf = jnp.float32
+                slot_v["ffn"]["center_scale"] = {
+                    "w1": jax.ShapeDtypeStruct(lead + (f,), sf),
+                    "w2": jax.ShapeDtypeStruct(lead + (d,), sf),
+                }
+                slot_a["ffn"]["center_scale"] = {
+                    "w1": lax + ("center_mlp",),
+                    "w2": lax + (None,),
+                }
+                slot_v["ffn"]["u_scale"] = jax.ShapeDtypeStruct(
+                    lead + (e, r), sf)
+                slot_a["ffn"]["u_scale"] = lax + ("experts", "rank")
+                slot_v["ffn"]["v_scale"] = {
+                    "w1": jax.ShapeDtypeStruct(lead + (e, r), sf),
+                    "w2": jax.ShapeDtypeStruct(lead + (e, r), sf),
+                }
+                slot_a["ffn"]["v_scale"] = {
+                    "w1": lax + ("experts", "rank"),
+                    "w2": lax + ("experts", "rank"),
+                }
+                if cfg.glu:
+                    slot_v["ffn"]["center_scale"]["w3"] = \
+                        jax.ShapeDtypeStruct(lead + (f,), sf)
+                    slot_a["ffn"]["center_scale"]["w3"] = \
+                        lax + ("center_mlp",)
+                    slot_v["ffn"]["v_scale"]["w3"] = jax.ShapeDtypeStruct(
+                        lead + (e, r), sf)
+                    slot_a["ffn"]["v_scale"]["w3"] = \
+                        lax + ("experts", "rank")
     return values, axes
 
 
@@ -212,6 +252,42 @@ def iter_moe_banks(params: PyTree):
             if isinstance(f, dict) and "router" in f and "w1" in f:
                 stacked = np.ndim(f["w1"]) == 4  # [R, E, d, ff]
                 yield si, li, f, stacked
+
+
+def iter_compressed_stores(params: PyTree):
+    """Yield (segment_idx, slot_idx, ffn_dict) for compressed MoE slots."""
+    for si, seg in enumerate(params["segments"]):
+        for li, slot in enumerate(seg["slots"]):
+            f = slot.get("ffn")
+            if isinstance(f, dict) and "router" in f and "center" in f:
+                yield si, li, f
+
+
+def quantize_compressed_params(params: PyTree) -> PyTree:
+    """int8-quantize every compressed SVD store in a params tree.
+
+    Offline (host numpy) step of the compress-once/serve-many pipeline:
+    ``compress_model_params`` -> this -> ``checkpoint.save_compressed_store``.
+    Dense-delta (up/block) stores are rejected — they have no factored
+    form for the dequant-fused kernels.
+    """
+    from ..core.quant import quantize_store
+
+    params = jax.tree_util.tree_map(lambda x: np.asarray(x), params)
+    n = 0
+    for si, li, f in iter_compressed_stores(params):
+        if "delta" in f:
+            raise ValueError(
+                "int8 store requires method='svd' (dense-delta up/block "
+                f"stores cannot be dequant-fused); segment {si} slot {li}")
+        new = quantize_store(f)
+        f.clear()
+        f.update(new)
+        n += 1
+    if n == 0:
+        raise ValueError("quantize_compressed_params: no compressed stores "
+                         "found — run compress_model_params first")
+    return params
 
 
 def compress_model_params(params: PyTree, cfg: ModelConfig, center: str = "wb"):

@@ -31,6 +31,11 @@ Dispatch is sort/gather-based (MaxText-style "sparse matmul" path): tokens
 are sorted by expert id, padded to a static per-expert capacity, processed
 with grouped einsums, and combined with a scatter-add. This keeps HLO FLOPs
 proportional to *active* parameters (critical for the roofline analysis).
+
+Store dtype: every path also serves the int8-quantized store (DESIGN.md
+§9, detected structurally via core/quant.py::is_quantized_store) —
+fused_kernel and the token path run the dequant-fused kernel twins, the
+einsum/restored paths dequantize in-graph first.
 """
 from __future__ import annotations
 
@@ -41,6 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, MoEConfig
+from ..core.quant import dequantize_store, is_quantized_store
 from ..sharding import LogicalParam, hint
 from .ffn import ffn, init_ffn
 from .layers import activation_fn, dense_param
@@ -292,12 +298,32 @@ def _fused_kernel_expert_ffn(params, xg: jnp.ndarray, activation: str) -> jnp.nd
     base + low-rank matmul pair runs as ONE ``pallas_call`` over the whole
     dispatched bank instead of separate einsums — the center segment is
     never re-read per expert and the restored bank is never materialized.
-    """
-    from ..kernels import grouped_lowrank_matmul
 
+    On an int8 store the dequant-fused kernel variant streams the factors
+    as int8 and folds the per-channel scales into the f32 accumulators
+    (DESIGN.md §9) — the store is never dequantized in HBM.
+    """
     act = activation_fn(activation)
     c, u, v = params["center"], params["u"], params["v"]
     ut = jnp.swapaxes(u, 1, 2)  # [E, r, f] — shared by the w1/w3 segments
+    if is_quantized_store(params):
+        from ..kernels import grouped_lowrank_matmul_q8
+
+        cs, us, vs = (params["center_scale"], params["u_scale"],
+                      params["v_scale"])
+        h = act(grouped_lowrank_matmul_q8(
+            xg, c["w1"], cs["w1"], jnp.swapaxes(v["w1"], 1, 2), ut,
+            vs["w1"] * us))
+        if "w3" in c:
+            h = h * grouped_lowrank_matmul_q8(
+                xg, c["w3"], cs["w3"], jnp.swapaxes(v["w3"], 1, 2), ut,
+                vs["w3"] * us)
+        h = hint(h, ("experts", "expert_cap", "expert_mlp"))
+        y = grouped_lowrank_matmul_q8(h, c["w2"], cs["w2"], u, v["w2"],
+                                      us * vs["w2"])
+        return hint(y, ("experts", "expert_cap", "embed"))
+    from ..kernels import grouped_lowrank_matmul
+
     h = act(grouped_lowrank_matmul(xg, c["w1"], jnp.swapaxes(v["w1"], 1, 2), ut))
     if "w3" in c:
         h = h * grouped_lowrank_matmul(
@@ -306,6 +332,23 @@ def _fused_kernel_expert_ffn(params, xg: jnp.ndarray, activation: str) -> jnp.nd
     h = hint(h, ("experts", "expert_cap", "expert_mlp"))
     y = grouped_lowrank_matmul(h, c["w2"], u, v["w2"])
     return hint(y, ("experts", "expert_cap", "embed"))
+
+
+def svd_store_expert_ffn(store, xg: jnp.ndarray, activation: str,
+                         mode: str) -> jnp.ndarray:
+    """Run the restore-free expert math on an (optionally int8) SVD store.
+
+    One dispatch point for the GSPMD layer and the EP shard_map region:
+    ``fused_kernel`` goes to the grouped Pallas kernel (dequant-fused on
+    int8 stores); ``fused`` runs the einsum path, dequantizing an int8
+    store in-graph first (the einsums have no register-level dequant to
+    fuse into).
+    """
+    if mode == "fused_kernel":
+        return _fused_kernel_expert_ffn(store, xg, activation)
+    if is_quantized_store(store):
+        store = {**store, **dequantize_store(store)}
+    return _fused_expert_ffn(store, xg, activation)
 
 
 # ---------------------------------------------------------------------------
@@ -364,18 +407,34 @@ def moe_layer(
     if compressed and token_path_applicable(params, m, mode, t, rules=rules):
         # ragged capacity-free decode path: no [E, C, d] buffer, no
         # capacity drops, per-token gather of the low-rank factors
-        from ..kernels import token_lowrank_moe
+        if is_quantized_store(params):
+            from ..kernels import token_lowrank_moe_q8
 
-        y2d = token_lowrank_moe(
-            x2d, expert_ids, gates, params["center"], params["u"],
-            params["v"], activation=cfg.activation, out_dtype=x2d.dtype,
-        )
+            y2d = token_lowrank_moe_q8(
+                x2d, expert_ids, gates, params["center"],
+                params["center_scale"], params["u"], params["u_scale"],
+                params["v"], params["v_scale"],
+                activation=cfg.activation, out_dtype=x2d.dtype,
+            )
+        else:
+            from ..kernels import token_lowrank_moe
+
+            y2d = token_lowrank_moe(
+                x2d, expert_ids, gates, params["center"], params["u"],
+                params["v"], activation=cfg.activation, out_dtype=x2d.dtype,
+            )
         y2d = hint(y2d, ("batch", None))
         if "shared" in params:
             y2d = y2d + ffn(params["shared"], x2d, cfg.activation)
         if "dense" in params:
             y2d = y2d + ffn(params["dense"], x2d, cfg.activation)
         return y2d.reshape(b, s, d).astype(x.dtype), aux
+
+    if compressed and is_quantized_store(params) and mode != "fused_kernel":
+        # non-kernel modes dequantize the int8 store in-graph (restored/
+        # fused/fused_shared have no register-level dequant to fuse into);
+        # fused_kernel consumes the int8 factors directly (DESIGN.md §9)
+        params = {**params, **dequantize_store(params)}
 
     capacity = expert_capacity(t, m)
     token_idx, dest, keep, sort_idx = make_dispatch(expert_ids, m.num_experts, capacity)

@@ -23,7 +23,11 @@ Two expert-weight layouts are supported (DESIGN.md §6):
     ``fused_kernel`` grouped Pallas path) on its local E_loc expert slice.
     ``restored``/``fused_shared`` and the dense-delta (up/block) stores
     keep the GSPMD path — they materialize global-bank or pre-dispatch
-    quantities that defeat the local-slice schedule.
+    quantities that defeat the local-slice schedule. The int8-quantized
+    store (DESIGN.md §9) serves identically: the fp32 per-channel scales
+    travel with their factors (center scales replicated, rank scales
+    'model'-sharded) and each shard runs the dequant-fused kernel (or
+    dequantizes its local slice in-graph under ``fused``).
 
 Per-layer communication: exactly one [T_loc, d] all-reduce (+ the ZeRO-3
 weight gather inserted by pjit when expert weights are also data-sharded
@@ -118,6 +122,12 @@ def _param_specs(params: Dict, cfg: ModelConfig) -> Dict:
             specs[k] = P("model", None, None)
         elif k == "v":
             specs[k] = {name: P("model", None, None) for name in params[k]}
+        elif k == "center_scale":  # int8 store: fp32 per-channel scales
+            specs[k] = {name: P(None) for name in params[k]}
+        elif k == "u_scale":  # [E, r] — sharded with its factor
+            specs[k] = P("model", None)
+        elif k == "v_scale":
+            specs[k] = {name: P("model", None) for name in params[k]}
         elif k == "router":
             specs[k] = P(None, None)
         elif k == "router_bias":
@@ -138,13 +148,12 @@ def ep_moe_layer(
     apply_mode: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     from .moe import (
-        _fused_expert_ffn,
-        _fused_kernel_expert_ffn,
         combine_tokens,
         dispatch_tokens,
         expert_capacity,
         make_dispatch,
         route,
+        svd_store_expert_ffn,
     )
 
     m = cfg.moe
@@ -183,14 +192,14 @@ def ep_moe_layer(
 
             act = activation_fn(cfg.activation)
             if compressed:
-                # local slice of the store: u/v are [E_loc, ...] here,
-                # center arrived replicated (full [d, f] / [f, d])
-                store = {"center": params["center"], "u": params["u"],
-                         "v": params["v"]}
-                if mode == "fused_kernel":
-                    yg = _fused_kernel_expert_ffn(store, xg, cfg.activation)
-                else:
-                    yg = _fused_expert_ffn(store, xg, cfg.activation)
+                # local slice of the store: u/v (and their rank scales on
+                # an int8 store) are [E_loc, ...] here, center arrived
+                # replicated (full [d, f] / [f, d])
+                store = {k: params[k] for k in
+                         ("center", "u", "v",
+                          "center_scale", "u_scale", "v_scale")
+                         if k in params}
+                yg = svd_store_expert_ffn(store, xg, cfg.activation, mode)
             else:
                 h = jnp.einsum("ecd,edf->ecf", xg, params["w1"])
                 h = act(h)

@@ -83,6 +83,32 @@ def test_all_baselines_run(rng):
         assert np.isfinite(err) and err >= 0
 
 
+def test_restored_design_rejects_malformed_residual(rng):
+    """A residual whose dense shape disagrees with the center must raise a
+    descriptive error instead of being silently sliced (the old slice
+    masked stores compressed against a different bank)."""
+    from repro.core.residual import compress_svd
+
+    bank = make_bank(rng, n=3, d=8, f=12)
+    comp = compress_bank(bank, method="svd", keep_ratio=0.5)
+    # swap in a residual of the wrong shape (an extra design column)
+    p, q = comp.center.shape
+    bad = rng.normal(size=(p, q + 4)).astype(np.float32)
+    comp.residuals[1] = compress_svd(bad, keep_ratio=0.5)
+    comp.restored_design(0)  # intact experts still restore
+    with pytest.raises(ValueError, match="does not match center"):
+        comp.restored_design(1)
+
+
+def test_restored_design_block_padding_still_restores(rng):
+    """The ONE legitimate shape mismatch — the block store's BCSR tile
+    padding — keeps restoring (padding stripped, not rejected)."""
+    bank = make_bank(rng, n=3, d=8, f=12)  # f=12, dd=28: both tile-padded
+    comp = compress_bank(bank, method="block", keep_ratio=0.5)
+    for k in range(3):
+        assert comp.restored_design(k).shape == comp.center.shape
+
+
 def test_storage_shrinks(rng):
     bank = make_bank(rng, n=8, d=32, f=64)
     comp = compress_bank(bank, method="svd", keep_ratio=0.25)

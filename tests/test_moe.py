@@ -104,7 +104,12 @@ def test_moe_layer_expert_permutation_invariance(rng):
 
 
 def test_resmoe_paths_agree(rng):
-    """restored / fused / fused_shared must agree exactly (same math)."""
+    """restored / fused / fused_shared must agree exactly (same math).
+
+    # PARITY: restored/fp32
+    # PARITY: fused/fp32
+    # PARITY: fused_shared/fp32
+    """
     cfg = _moe_cfg()
     cfg = dataclasses.replace(
         cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=0.5))
@@ -179,7 +184,10 @@ def test_combine_correct_with_unnormalized_gates(rng):
 
 def test_resmoe_fused_kernel_matches_fused(rng):
     """apply_mode='fused_kernel' (grouped Pallas kernel) must match the
-    einsum fused path through the full model, GLU included."""
+    einsum fused path through the full model, GLU included.
+
+    # PARITY: fused_kernel/fp32
+    """
     cfg = _moe_cfg()
     cfg = dataclasses.replace(
         cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=0.5))

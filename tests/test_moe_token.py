@@ -97,7 +97,10 @@ def test_token_kernel_duplicate_expert_ids(rng):
 
 def test_fused_token_matches_fused_model(rng):
     """apply_mode='fused_token' == the dispatched fused path through the
-    full model (GLU Mixtral config), fp32 tolerance."""
+    full model (GLU Mixtral config), fp32 tolerance.
+
+    # PARITY: fused_token/fp32
+    """
     cfg = _compressed_cfg(token_path_max_tokens=0)  # keep 'fused' dispatched
     model = build_model(cfg)
     params, _ = model.init_split(jax.random.PRNGKey(1))

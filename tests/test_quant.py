@@ -1,0 +1,433 @@
+"""Int8-quantized compressed store: error bound, kernel parity, serving.
+
+Parity coverage declared for scripts/check_parity_matrix.py:
+# PARITY: restored/int8
+# PARITY: fused/int8
+# PARITY: fused_shared/int8
+# PARITY: fused_kernel/int8
+# PARITY: fused_token/int8
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.quant import (
+    dequantize_int8,
+    dequantize_store,
+    int8_error_bound,
+    is_quantized_store,
+    quantize_int8,
+    quantize_store,
+)
+from repro.launch.serve import Request, Server
+from repro.models import (
+    build_model,
+    compress_model_params,
+    quantize_compressed_params,
+)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _compressed_pair(arch="mixtral-8x7b", keep=0.5, seed=0, **moe_kw):
+    """(cfg, model, fp32 store params, int8 store params)."""
+    cfg = reduced_config(arch)
+    moe = dataclasses.replace(cfg.moe, **moe_kw) if moe_kw else cfg.moe
+    cfg = dataclasses.replace(
+        cfg, moe=moe,
+        resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=keep))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(seed))
+    cp, _ = compress_model_params(params, cfg)
+    return cfg, model, cp, quantize_compressed_params(cp)
+
+
+# ---------------------------------------------------------------------------
+# Quantize/dequantize primitives
+# ---------------------------------------------------------------------------
+
+
+def test_quant_roundtrip_error_bound_hypothesis():
+    """Property: |x - dequant(quant(x))| <= scale/2 per channel, any shape,
+    any reduction axis — the analytic bound of symmetric round-to-nearest."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        m=st.integers(1, 24),
+        n=st.integers(1, 24),
+        axis=st.integers(0, 1),
+        scale_pow=st.integers(-12, 12),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=50, deadline=None)
+    def check(m, n, axis, scale_pow, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(m, n)).astype(np.float32) * (2.0 ** scale_pow)
+        q, s = quantize_int8(x, axis)
+        assert q.dtype == np.int8
+        back = np.asarray(dequantize_int8(q, s, axis))
+        bound = np.expand_dims(int8_error_bound(s), axis)
+        # tiny fp32 slack: the bound itself is computed in float
+        assert np.all(np.abs(x - back) <= bound * (1 + 1e-5) + 1e-30)
+
+    check()
+
+
+def test_quant_roundtrip_error_bound_sweep(rng):
+    """Deterministic bound check (runs even where hypothesis is absent):
+    shapes, axes and magnitude scales swept explicitly."""
+    for m, n, axis, pw in [(1, 1, 0, 0), (7, 13, 1, -8), (24, 3, 0, 10),
+                           (5, 5, 1, 3), (2, 17, 0, -3), (16, 16, 1, 12)]:
+        x = rng.normal(size=(m, n)).astype(np.float32) * (2.0 ** pw)
+        q, s = quantize_int8(x, axis)
+        back = np.asarray(dequantize_int8(q, s, axis))
+        bound = np.expand_dims(int8_error_bound(s), axis)
+        assert np.all(np.abs(x - back) <= bound * (1 + 1e-5) + 1e-30), (
+            m, n, axis, pw)
+
+
+def test_quant_zero_channel():
+    """All-zero channels quantize to zeros with a finite positive scale."""
+    x = np.zeros((4, 3), np.float32)
+    x[:, 1] = 7.0
+    q, s = quantize_int8(x, 0)
+    assert np.all(np.isfinite(s)) and np.all(s > 0)
+    back = np.asarray(dequantize_int8(q, s, 0))
+    np.testing.assert_allclose(back[:, 0], 0.0)
+    np.testing.assert_allclose(back[:, 1], 7.0, rtol=1e-2)
+
+
+def test_quantize_store_roundtrip_shapes(rng):
+    """Store quantization: int8 leaves + per-channel fp32 scales with the
+    layout the kernels expect, and dequantize_store stays within bound."""
+    e, d, f, r = 4, 16, 24, 5
+    ffn = {
+        "router": rng.normal(size=(d, e)).astype(np.float32),
+        "center": {"w1": rng.normal(size=(d, f)).astype(np.float32),
+                   "w2": rng.normal(size=(f, d)).astype(np.float32)},
+        "u": rng.normal(size=(e, f, r)).astype(np.float32),
+        "v": {"w1": rng.normal(size=(e, r, d)).astype(np.float32),
+              "w2": rng.normal(size=(e, r, d)).astype(np.float32)},
+    }
+    q = quantize_store(ffn)
+    assert is_quantized_store(q) and not is_quantized_store(ffn)
+    assert q["center"]["w1"].dtype == np.int8
+    assert q["center_scale"]["w1"].shape == (f,)
+    assert q["center_scale"]["w2"].shape == (d,)
+    assert q["u_scale"].shape == (e, r)
+    assert q["v_scale"]["w1"].shape == (e, r)
+    assert q["router"] is ffn["router"]  # untouched
+    deq = dequantize_store(q)
+    for name, orig in (("w1", ffn["center"]["w1"]),):
+        err = np.max(np.abs(np.asarray(deq["center"][name]) - orig))
+        bound = float(np.max(int8_error_bound(q["center_scale"][name])))
+        assert err <= bound * (1 + 1e-5)
+    err_u = np.max(np.abs(np.asarray(deq["u"]) - ffn["u"]))
+    assert err_u <= float(np.max(int8_error_bound(q["u_scale"]))) * (1 + 1e-5)
+
+
+def test_quantize_rejects_delta_store():
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="up",
+                                        keep_ratio=1.0))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    with pytest.raises(ValueError, match="svd"):
+        quantize_compressed_params(cp)
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: dequant-fused int8 kernels vs fp32 oracles on the
+# dequantized factors
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_q8_kernel_matches_dequant_ref(rng):
+    from repro.kernels import grouped_lowrank_matmul_q8
+    from repro.kernels.ref import grouped_lowrank_matmul_ref
+
+    e, c, d, f, r = 4, 24, 48, 80, 10
+    xg = jnp.asarray(rng.normal(size=(e, c, d)), jnp.float32)
+    wf = rng.normal(size=(d, f)).astype(np.float32)
+    af = rng.normal(size=(e, d, r)).astype(np.float32)
+    bf = rng.normal(size=(e, r, f)).astype(np.float32)
+    wq, sw = quantize_int8(wf, -2)
+    aq, sa = quantize_int8(af, -2)
+    bq, sb = quantize_int8(bf, -1)
+    got = grouped_lowrank_matmul_q8(
+        xg, jnp.asarray(wq), jnp.asarray(sw), jnp.asarray(aq),
+        jnp.asarray(bq), jnp.asarray(sa * sb))
+    ref = grouped_lowrank_matmul_ref(
+        xg, np.asarray(dequantize_int8(wq, sw, -2)),
+        np.asarray(dequantize_int8(aq, sa, -2)),
+        np.asarray(dequantize_int8(bq, sb, -1)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("glu,act", [(True, "silu"), (False, "relu")])
+def test_token_q8_kernel_matches_dequant_ref(rng, glu, act):
+    from repro.kernels import token_lowrank_moe_q8
+    from repro.kernels.ref import token_lowrank_moe_ref
+
+    t, k, e, d, f, r = 6, 2, 8, 48, 80, 10
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    gates = jnp.asarray(rng.random((t, k)), jnp.float32)
+    names = ("w1", "w3") if glu else ("w1",)
+    center = {n: rng.normal(size=(d, f)).astype(np.float32) for n in names}
+    center["w2"] = rng.normal(size=(f, d)).astype(np.float32)
+    uf = rng.normal(size=(e, f, r)).astype(np.float32)
+    vf = {n: rng.normal(size=(e, r, d)).astype(np.float32)
+          for n in names + ("w2",)}
+    store = quantize_store({"center": center, "u": uf, "v": vf})
+    got = token_lowrank_moe_q8(
+        x, ids, gates,
+        {n: jnp.asarray(a) for n, a in store["center"].items()},
+        {n: jnp.asarray(a) for n, a in store["center_scale"].items()},
+        jnp.asarray(store["u"]), jnp.asarray(store["u_scale"]),
+        {n: jnp.asarray(a) for n, a in store["v"].items()},
+        {n: jnp.asarray(a) for n, a in store["v_scale"].items()},
+        activation=act)
+    deq = dequantize_store(store)
+    ref = token_lowrank_moe_ref(x, ids, gates, deq["center"], deq["u"],
+                                deq["v"], activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Model-level parity: every apply mode serves the int8 store
+# ---------------------------------------------------------------------------
+
+
+def test_int8_all_modes_agree_glu(rng):
+    """All five apply modes produce the same logits on the SAME int8 store
+    (GLU Mixtral config) — the dequant-fused kernels and the in-graph
+    dequant paths compute identical math."""
+    cfg, model, cp, qp = _compressed_pair(token_path_max_tokens=0,
+                                          capacity_factor=8.0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)),
+                                   jnp.int32)}
+    outs = {}
+    for mode in ("fused", "restored", "fused_shared", "fused_kernel",
+                 "fused_token"):
+        logits, _ = jax.jit(
+            lambda p, b, m=mode: model.forward(p, b, apply_mode=m))(qp, batch)
+        outs[mode] = np.asarray(logits, np.float32)
+    for mode, got in outs.items():
+        np.testing.assert_allclose(got, outs["fused"], rtol=1e-4, atol=1e-3,
+                                   err_msg=mode)
+
+
+def test_int8_all_modes_agree_nonglu(rng):
+    """Same cross-mode agreement on a non-GLU store (switch-base-8)."""
+    cfg, model, cp, qp = _compressed_pair("switch-base-8",
+                                          token_path_max_tokens=0,
+                                          capacity_factor=8.0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)),
+                                   jnp.int32)}
+    outs = {}
+    for mode in ("fused", "fused_kernel", "fused_token"):
+        logits, _ = jax.jit(
+            lambda p, b, m=mode: model.forward(p, b, apply_mode=m))(qp, batch)
+        outs[mode] = np.asarray(logits, np.float32)
+    for mode, got in outs.items():
+        np.testing.assert_allclose(got, outs["fused"], rtol=1e-4, atol=1e-3,
+                                   err_msg=mode)
+
+
+def test_int8_logits_close_to_fp32_store(rng):
+    """The quantization error itself stays bounded at the logit level: the
+    int8 store's fused logits track the fp32 store's."""
+    cfg, model, cp, qp = _compressed_pair()
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)),
+                                   jnp.int32)}
+    ref, _ = jax.jit(
+        lambda p, b: model.forward(p, b, apply_mode="fused"))(cp, batch)
+    got, _ = jax.jit(
+        lambda p, b: model.forward(p, b, apply_mode="fused"))(qp, batch)
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < 0.5, err
+
+
+def test_int8_generation_parity_acceptance(rng):
+    """Acceptance: the int8 store serves generation-parity output — greedy
+    tokens IDENTICAL to the fp32 store on the reduced Mixtral config —
+    through the fused, fused_kernel, and fused_token serving paths."""
+    cfg, model, cp, qp = _compressed_pair()
+    prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(3)]
+
+    def gen(p, mode):
+        srv = Server(model, p, num_slots=2, max_seq=64, apply_mode=mode)
+        reqs = [Request(prompt=pr, max_new_tokens=6) for pr in prompts]
+        srv.serve(reqs)
+        return [r.output for r in reqs]
+
+    ref = gen(cp, "fused")
+    for mode in ("fused", "fused_kernel", "fused_token"):
+        got = gen(qp, mode)
+        assert got == ref, (mode, got, ref)
+
+
+def test_ep_int8_parity_forced_mesh():
+    """Int8 store under expert parallelism on a forced 8-device mesh ==
+    the single-device int8 fused path, for fused and fused_kernel (the
+    fp32 scales shard with their factors) — and a Server on the mesh
+    generates greedy tokens identical to the single-device fp32 store."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import reduced_config
+        from repro.launch.serve import Request, Server
+        from repro.models import (build_model, compress_model_params,
+                                  quantize_compressed_params)
+        from repro.models.model import abstract_compressed_params
+        from repro.launch.mesh import make_mesh
+        from repro.sharding import make_rules, use_rules, shardings_from_axes
+
+        cfg = reduced_config("mixtral-8x7b")
+        cfg = dataclasses.replace(
+            cfg,
+            moe=dataclasses.replace(cfg.moe, ep_min_local_tokens=1,
+                                    capacity_factor=8.0),
+            resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                       keep_ratio=0.5))
+        model = build_model(cfg)
+        params, _ = model.init_split(jax.random.PRNGKey(0))
+        cp, _ = compress_model_params(params, cfg)
+        qp = quantize_compressed_params(cp)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)}
+        ref, _ = jax.jit(
+            lambda p, b: model.forward(p, b, apply_mode="fused"))(qp, batch)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh)
+        abs_v, axes = abstract_compressed_params(cfg, store_dtype="int8")
+        sh = shardings_from_axes(axes, rules, abs_v)
+        for mode in ("fused", "fused_kernel"):
+            def fwd(p, b, m=mode):
+                with use_rules(rules):
+                    return model.forward(p, b, apply_mode=m)[0]
+            with mesh:
+                p = jax.device_put(qp, sh)
+                got = jax.jit(fwd)(p, batch)
+            err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                        - ref.astype(jnp.float32))))
+            assert err < 1e-3, (mode, err)
+
+        # generation parity through the EP serving path: int8 store on
+        # the mesh == fp32 store on a single device, token for token
+        prompt = rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+        single = Server(model, cp, num_slots=2, max_seq=64,
+                        apply_mode="fused")
+        r1 = Request(prompt=prompt, max_new_tokens=5)
+        single.serve([r1])
+        sharded = Server(model, qp, num_slots=2, max_seq=64,
+                         apply_mode="fused", rules=rules, param_axes=axes)
+        r2 = Request(prompt=prompt, max_new_tokens=5)
+        sharded.serve([r2])
+        assert r1.output == r2.output, (r1.output, r2.output)
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Persistence: compress-once / serve-many
+# ---------------------------------------------------------------------------
+
+
+def test_store_checkpoint_roundtrip(rng, tmp_path):
+    """save/load of a compressed+quantized store is exact (int8 payloads
+    and fp32 scales bit-identical) and serves the same logits."""
+    from repro.checkpoint import (
+        has_compressed_store,
+        load_compressed_store,
+        save_compressed_store,
+    )
+
+    cfg, model, cp, qp = _compressed_pair()
+    path = str(tmp_path / "store")
+    assert not has_compressed_store(path)
+    meta = {"arch": "mixtral-8x7b", "store_dtype": "int8"}
+    save_compressed_store(path, qp, meta=meta)
+    assert has_compressed_store(path)
+    loaded, got_meta = load_compressed_store(path)
+    assert got_meta == meta
+
+    flat_a, td_a = jax.tree_util.tree_flatten(qp)
+    flat_b, td_b = jax.tree_util.tree_flatten(loaded)
+    assert td_a == td_b
+    for a, b in zip(flat_a, flat_b):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)),
+                                   jnp.int32)}
+    ref, _ = jax.jit(
+        lambda p, b: model.forward(p, b, apply_mode="fused_kernel"))(qp, batch)
+    got, _ = jax.jit(
+        lambda p, b: model.forward(p, b, apply_mode="fused_kernel"))(
+            loaded, batch)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_server_boot_from_store_never_compresses(rng, tmp_path,
+                                                 monkeypatch):
+    """Acceptance: a Server booted from a persisted store directory never
+    calls compress_bank — compression is poisoned after the save and the
+    loaded store still serves the original generations."""
+    import repro.core.api as core_api
+    import repro.core.compress as core_compress
+    from repro.checkpoint import load_compressed_store, save_compressed_store
+
+    cfg, model, cp, qp = _compressed_pair()
+    prompt = rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+    srv = Server(model, qp, num_slots=2, max_seq=64, apply_mode="fused_kernel")
+    r1 = Request(prompt=prompt, max_new_tokens=5)
+    srv.serve([r1])
+
+    path = str(tmp_path / "store")
+    save_compressed_store(path, qp, meta={"store_dtype": "int8"})
+
+    def boom(*a, **k):
+        raise AssertionError("compress_bank must not run on a store boot")
+
+    monkeypatch.setattr(core_compress, "compress_bank", boom)
+    monkeypatch.setattr(core_api.ResMoECompressor, "compress_bank", boom)
+    loaded, _ = load_compressed_store(path)
+    srv2 = Server(model, loaded, num_slots=2, max_seq=64,
+                  apply_mode="fused_kernel")
+    r2 = Request(prompt=prompt, max_new_tokens=5)
+    srv2.serve([r2])
+    assert r2.output == r1.output
+
+
+def test_quant_roofline_factor_bytes():
+    """Mixtral-shape accounting: the int8 store moves >= 3.5x fewer factor
+    HBM bytes than fp32 (the run itself asserts; re-check the rows)."""
+    runtime = pytest.importorskip("benchmarks.runtime")
+    rows = {r[0]: r[1] for r in runtime.quant_roofline_mixtral()}
+    assert rows["T11/quant_roofline_mixtral/factor_bytes_x"] >= 3.5

@@ -112,6 +112,69 @@ def test_server_fused_token_generation_parity(rng):
         assert a.output == b.output, (a.output, b.output)
 
 
+def test_server_rejects_oversized_prompt(rng):
+    """A prompt longer than the cache row is rejected with a clear error
+    (it used to be accepted and silently overrun the B=1 prefill row with
+    clamped writes) — BEFORE any request of the batch is admitted, so the
+    Server is left clean and serviceable."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    server = Server(model, params, num_slots=2, max_seq=16)
+    ok = rng.integers(0, cfg.vocab_size, size=(5,)).astype(np.int32)
+    long_prompt = rng.integers(0, cfg.vocab_size, size=(16,)).astype(np.int32)
+    with pytest.raises(ValueError, match="max_seq"):
+        server.serve([Request(prompt=ok, max_new_tokens=2),
+                      Request(prompt=long_prompt, max_new_tokens=2)])
+    assert all(server.slot_free)  # nothing half-admitted
+    req = Request(prompt=ok, max_new_tokens=2)
+    server.serve([req])  # the same Server still serves cleanly
+    assert len(req.output) == 2
+
+
+def test_server_truncate_prompts_flag(rng):
+    """With truncate_prompts=True an oversized prompt is LEFT-truncated to
+    the most recent max_seq-1 tokens and generates exactly like the
+    pre-truncated prompt."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    max_seq = 16
+    long_prompt = rng.integers(0, cfg.vocab_size, size=(20,)).astype(np.int32)
+    kept = long_prompt[-(max_seq - 1):]
+
+    trunc = Server(model, params, num_slots=2, max_seq=max_seq,
+                   truncate_prompts=True)
+    r1 = Request(prompt=long_prompt, max_new_tokens=2)
+    trunc.serve([r1])
+    ref = Server(model, params, num_slots=2, max_seq=max_seq)
+    r2 = Request(prompt=kept, max_new_tokens=2)
+    ref.serve([r2])
+    assert r1.output == r2.output
+
+
+def test_server_uses_last_cache_position(rng):
+    """Boundary at max_seq: the stop condition must fire only when the
+    NEXT write would overrun, so a sequence can fill every cache position.
+    The old `>= max_seq - 1` check left the last writable position unused
+    and truncated one token early."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    max_seq = 16
+    s = 12
+    prompt = rng.integers(0, cfg.vocab_size, size=(s,)).astype(np.int32)
+    server = Server(model, params, num_slots=2, max_seq=max_seq)
+    req = Request(prompt=prompt, max_new_tokens=100)  # cache-bound
+    server.serve([req])
+    # prefill emits 1 token; decode then writes positions s..max_seq-1 —
+    # exactly max_seq - s more tokens
+    assert len(req.output) == max_seq - s + 1, len(req.output)
+    # and the emitted tokens agree with an unconstrained reference
+    ref = _sequential_generate(model, params, prompt, max_seq - s + 1)
+    assert req.output == ref
+
+
 def test_server_with_compressed_params(rng):
     """Serving with ResMoE-compressed params: runs; near-lossless store
     reproduces the dense generation."""
