@@ -28,7 +28,8 @@ import traceback
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: t1,t3,t4,f4,t10,t11,t12,roofline,xl")
+                    help="comma list: t1,t3,t4,f4,t10,t11,t12,serve,"
+                         "roofline,xl")
     ap.add_argument("--fast", action="store_true",
                     help="skip the training-backed downstream eval")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -50,6 +51,7 @@ def main() -> int:
         ("t10", memory.run),
         ("t11", runtime.run),
         ("t12", flops_table.run),
+        ("serve", runtime.paged_vs_sync_serving),
         ("roofline", analyze.run),
     ]
     if not args.fast:

@@ -9,6 +9,10 @@
 #   scripts/ci.sh bench      # benchmark smoke: `benchmarks.run --fast`
 #                            # must exit 0 and write BENCH_<n>.json (the
 #                            # per-PR perf-trajectory artifact)
+#   scripts/ci.sh soak       # seeded long-run serving churn: hundreds of
+#                            # requests through a tiny page pool (forced
+#                            # preemption/reuse); excluded from tier-1 by
+#                            # the `-m "not soak"` addopts default
 #   scripts/ci.sh docs       # broken md links / stale README references /
 #                            # apply-mode x store-dtype parity-test matrix
 #   scripts/ci.sh all        # every tier above, tier-1 first
@@ -67,6 +71,16 @@ print(f"bench artifact OK: {len(quant)} quantized rows of {len(rows)}")
 PY
 }
 
+# Soak tier: the continuous-batching server under sustained churn — the
+# @pytest.mark.soak tests stream hundreds of small requests through a page
+# pool far below num_slots * max_seq, so every step exercises preemption,
+# re-admission-by-recompute, and page reuse, with the sync Server as the
+# token-level oracle on a deterministic subset. The CLI `-m soak`
+# overrides the pyproject addopts default that keeps tier-1 fast.
+soak() {
+    python -m pytest -q -m soak tests/test_serve.py
+}
+
 # Docs tier: intra-repo markdown links must resolve, README code blocks
 # must reference real modules/paths/flags, and every
 # (apply_mode, store_dtype) combination must declare a parity test
@@ -81,7 +95,8 @@ case "${1:-tier1}" in
     kernels)  kernels ;;
     multidev) multidev ;;
     bench)    bench ;;
+    soak)     soak ;;
     docs)     docs ;;
-    all)      tier1; kernels; multidev; bench; docs ;;
-    *) echo "usage: $0 [tier1|kernels|multidev|bench|docs|all]" >&2; exit 2 ;;
+    all)      tier1; kernels; multidev; bench; soak; docs ;;
+    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|docs|all]" >&2; exit 2 ;;
 esac

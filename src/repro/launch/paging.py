@@ -1,0 +1,132 @@
+"""Paged KV-cache bookkeeping: a fixed pool of pages + per-slot block tables.
+
+The device-side layout (models/attention.py) is vLLM-style: every attention
+layer owns a ``[num_pages, page_size, ...]`` pool shared by all decode
+slots, and one ``[num_slots, max_pages_per_slot]`` block table maps each
+slot's logical page index (``position // page_size``) to a physical page.
+This module is the HOST side of that design: a pure-numpy allocator whose
+free-list/owner/block-table state the serving loop mirrors into the device
+block tables after every change (ContinuousServer._sync_block_tables).
+
+Invariants (pinned by tests/test_paging.py under hypothesis):
+  * conservation — every page is either on the free list or owned by
+    exactly one slot; ``num_free + pages_in_use == num_pages`` always.
+  * no double assignment — ``alloc`` never hands out a page that is owned
+    or already on loan; ``owner`` and the block tables never disagree.
+  * table consistency — every ``block_tables[s, l] >= 0`` entry names a
+    page whose owner is ``s``; freed slots leave no dangling entries.
+
+Allocation is deliberately trivial (pop from an explicit LIFO free list):
+pages are unit-sized and interchangeable, so there is no fragmentation and
+no need for anything cleverer. Preemption is just ``free_slot`` — the
+scheduler re-queues the victim and restores it later by recompute
+(DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+class PagePool:
+    """Fixed pool of ``page_size``-token KV pages shared across slots."""
+
+    def __init__(self, num_pages: int, page_size: int, num_slots: int,
+                 max_seq: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError(
+                f"PagePool needs positive sizes, got num_pages={num_pages} "
+                f"page_size={page_size}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.num_slots = int(num_slots)
+        self.max_seq = int(max_seq)
+        self.max_pages_per_slot = -(-int(max_seq) // int(page_size))
+        self.block_tables = np.full(
+            (self.num_slots, self.max_pages_per_slot), -1, np.int32)
+        self.owner = np.full(self.num_pages, -1, np.int32)
+        # LIFO: freed pages are reused first (warm reuse under churn)
+        self._free: List[int] = list(range(self.num_pages - 1, -1, -1))
+
+    # -- queries ----------------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.pages_in_use / self.num_pages
+
+    def pages_needed(self, num_tokens: int) -> int:
+        """Pages required to hold ``num_tokens`` cache positions."""
+        return -(-int(num_tokens) // self.page_size)
+
+    def owned(self, slot: int) -> List[int]:
+        return [int(p) for p in np.flatnonzero(self.owner == slot)]
+
+    def has_page(self, slot: int, logical: int) -> bool:
+        return self.block_tables[slot, logical] >= 0
+
+    # -- mutation ---------------------------------------------------------------
+
+    def alloc(self, slot: int, logical: int) -> int:
+        """Map ``slot``'s logical page ``logical`` to a fresh physical page."""
+        if not (0 <= slot < self.num_slots):
+            raise ValueError(f"slot {slot} out of range [0, {self.num_slots})")
+        if not (0 <= logical < self.max_pages_per_slot):
+            raise ValueError(
+                f"logical page {logical} out of range "
+                f"[0, {self.max_pages_per_slot}) (max_seq={self.max_seq}, "
+                f"page_size={self.page_size})")
+        if self.block_tables[slot, logical] >= 0:
+            raise RuntimeError(
+                f"slot {slot} logical page {logical} already mapped to "
+                f"physical page {int(self.block_tables[slot, logical])}")
+        if not self._free:
+            raise RuntimeError(
+                f"page pool exhausted ({self.num_pages} pages all in use) — "
+                "caller must preempt before allocating")
+        page = self._free.pop()
+        assert self.owner[page] == -1, "free-list page had an owner"
+        self.owner[page] = slot
+        self.block_tables[slot, logical] = page
+        return page
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Release every page owned by ``slot`` (finish or preempt)."""
+        pages = self.owned(slot)
+        for p in pages:
+            self.owner[p] = -1
+            self._free.append(p)
+        self.block_tables[slot, :] = -1
+        return pages
+
+    # -- self-check (used by the property tests and the soak tier) --------------
+
+    def check(self) -> None:
+        """Assert the conservation + consistency invariants."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        assert len(free) + int((self.owner >= 0).sum()) == self.num_pages, (
+            "page leak: free + owned != total")
+        for p in free:
+            assert self.owner[p] == -1, f"page {p} free but owned"
+        for s in range(self.num_slots):
+            row = self.block_tables[s]
+            mapped = row[row >= 0]
+            assert len(set(mapped.tolist())) == len(mapped), (
+                f"slot {s} maps one physical page twice")
+            for p in mapped:
+                assert self.owner[p] == s, (
+                    f"slot {s} table points at page {int(p)} owned by "
+                    f"{int(self.owner[p])}")
+        for p in np.flatnonzero(self.owner >= 0):
+            s = int(self.owner[p])
+            assert p in self.block_tables[s], (
+                f"page {int(p)} owned by slot {s} but absent from its table")

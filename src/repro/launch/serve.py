@@ -1,14 +1,28 @@
-"""Batched serving driver: continuous batching over fixed decode slots.
+"""Batched serving drivers: slot-synchronous rows and paged continuous
+batching.
 
-Design (vLLM-style, slot-granular):
-  * ``Server`` owns a batched cache with ``num_slots`` rows and a jitted
-    decode step over all slots.
+Two servers share the model-facing machinery:
+
+``Server`` (slot-granular, the differential-test oracle):
+  * owns a batched cache with ``num_slots`` full ``max_seq`` rows and a
+    jitted decode step over all slots.
   * A new request is prefetched alone (B=1 prefill), then its cache row is
     inserted into the batched cache at a free slot (tree-wise
     dynamic_update along each leaf's batch axis — located via the logical
     axes recorded at cache init).
   * Every loop iteration decodes ALL active slots in one step; finished
     slots (max tokens or EOS) are freed and refilled from the queue.
+
+``ContinuousServer`` (page-granular, vLLM-style — DESIGN.md §10):
+  * KV memory is a shared pool of ``page_size``-token pages
+    (launch/paging.py) instead of per-slot rows, so a pool far below
+    ``num_slots * max_seq`` carries the same traffic;
+  * requests join/leave per step through an admission queue (optionally
+    replaying an ``arrival_steps`` trace), prefilling straight into freed
+    pages while live slots keep decoding;
+  * pool exhaustion preempts the most-recently-admitted slot and restores
+    it later by recompute — greedy outputs stay token-identical to
+    ``Server`` (tests/test_serve.py differential suite).
 
 ResMoE integration: pass compressed params and ``apply_mode`` — "restored"
 (paper Algorithm 2: restore-on-the-fly), "fused"/"fused_shared"
@@ -38,6 +52,7 @@ expert-parallel layer (DESIGN.md §6).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -64,6 +79,51 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the server
     output: Optional[List[int]] = None
+
+
+def sample_tokens(rng, logits: jnp.ndarray, greedy: bool):
+    """Next-token choice shared by both servers: ``(new_rng, tokens)``.
+
+    ``logits`` is ``[..., V]``; greedy argmax consumes no randomness, the
+    categorical path splits the rng once per call. One helper so a future
+    sampling change (temperature, top-p) lands in every call site — the
+    prefill-emitted token once drifted to unconditional argmax precisely
+    because this logic was copied inline.
+    """
+    if greedy:
+        return rng, jnp.argmax(logits, axis=-1)
+    rng, k = jax.random.split(rng)
+    return rng, jax.random.categorical(k, logits)
+
+
+def validate_prompt(prompt, max_seq: int, truncate: bool) -> np.ndarray:
+    """Prompt tokens as admitted, shared by both servers.
+
+    A cache row/slot holds ``max_seq`` positions and an admitted request
+    must keep at least one writable decode position, so at most
+    ``max_seq - 1`` prompt tokens are admitted — an oversized prompt used
+    to be accepted and silently overrun (clamped writes corrupt the row).
+    ``truncate`` LEFT-truncates (keeps the most recent context) instead of
+    rejecting. An empty prompt — as given, or after a truncation that
+    keeps zero tokens (max_seq == 1) — is rejected: there is nothing to
+    prefill and the B=1 prefill would trace a [1, 0] batch.
+    """
+    toks = np.asarray(prompt, np.int32)
+    limit = max_seq - 1
+    if len(toks) > limit:
+        if not truncate:
+            raise ValueError(
+                f"prompt length {len(toks)} exceeds the cache row: "
+                f"max_seq={max_seq} admits at most {limit} prompt "
+                "tokens (pass truncate_prompts=True to left-truncate "
+                "instead)")
+        toks = toks[-limit:] if limit > 0 else toks[:0]
+    if len(toks) == 0:
+        raise ValueError(
+            "empty prompt: nothing to prefill (a truncation that keeps "
+            "zero tokens lands here too — raise max_seq or send at least "
+            "one token)")
+    return toks
 
 
 class Server:
@@ -147,22 +207,7 @@ class Server:
     # -- request lifecycle ------------------------------------------------------
 
     def _validate_prompt(self, req: Request) -> np.ndarray:
-        """Prompt tokens as admitted: the B=1 prefill row holds max_seq
-        positions and an admitted request must keep at least one writable
-        decode position — an oversized prompt used to be accepted and
-        silently overrun (clamped writes corrupt the row). Left-truncates
-        (keeps the most recent context) under ``truncate_prompts``."""
-        toks = np.asarray(req.prompt, np.int32)
-        limit = self.max_seq - 1
-        if len(toks) > limit:
-            if not self.truncate_prompts:
-                raise ValueError(
-                    f"prompt length {len(toks)} exceeds the cache row: "
-                    f"max_seq={self.max_seq} admits at most {limit} prompt "
-                    "tokens (pass truncate_prompts=True to left-truncate "
-                    "instead)")
-            toks = toks[-limit:]
-        return toks
+        return validate_prompt(req.prompt, self.max_seq, self.truncate_prompts)
 
     def _admit(self, req: Request, slot: int):
         if req.max_new_tokens <= 0:
@@ -175,7 +220,8 @@ class Server:
         logits, row = self._prefill(
             self.params, {"tokens": jnp.asarray(toks)[None, :]}, row, pos
         )
-        nxt = int(jnp.argmax(logits[0, -1]))
+        self.rng, nxt = sample_tokens(self.rng, logits[0, -1], self.greedy)
+        nxt = int(nxt)
         req.output = [nxt]
         # prefill already emitted one token — a max_new_tokens=1 (or
         # immediate-EOS) request must finish here, never taking a decode
@@ -195,11 +241,8 @@ class Server:
         pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
         logits, self.cache = self._decode(self.params, {"tokens": toks},
                                           self.cache, pos)
-        if self.greedy:
-            nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
-        else:
-            self.rng, k = jax.random.split(self.rng)
-            nxt = np.asarray(jax.random.categorical(k, logits[:, -1, :]))
+        self.rng, nxt = sample_tokens(self.rng, logits[:, -1, :], self.greedy)
+        nxt = np.asarray(nxt)
         for slot in range(self.num_slots):
             if self.slot_free[slot]:
                 continue
@@ -235,6 +278,436 @@ class Server:
                     self._admit(queue.pop(0), slot)
             if not all(self.slot_free):
                 self._step_all()
+        return list(requests)
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Queue entry: a request plus the exact tokens its prefill will see.
+
+    ``toks`` is the validated (possibly truncated) prompt for fresh
+    entries; for a preempted request it is the original prompt PLUS every
+    token generated so far, so re-admission restores the sequence by
+    recompute — the prefill's last-position logits are exactly what the
+    interrupted decode step would have produced, keeping greedy outputs
+    token-identical across preemption (DESIGN.md §10). ``orig`` stays the
+    original validated prompt so a second preemption rebuilds from it.
+    """
+    req: Request
+    toks: np.ndarray
+    orig: np.ndarray
+    resumed: bool = False
+
+
+class ContinuousServer:
+    """Continuous-batching scheduler over a paged KV cache.
+
+    Differences from :class:`Server` (kept as the oracle for the
+    differential tests):
+
+      * memory is a shared :class:`~repro.launch.paging.PagePool` of
+        ``pool_pages`` pages of ``page_size`` tokens instead of a full
+        ``max_seq`` cache row per slot — a pool sized well below
+        ``num_slots * max_seq`` serves the same traffic because live
+        requests rarely all reach ``max_seq`` at once;
+      * requests join and leave per step: an admission queue feeds freed
+        slots/pages between decode steps (optionally gated by per-request
+        ``arrival_steps`` to replay an arrival trace), while live slots
+        keep decoding;
+      * pool exhaustion preempts the most-recently-admitted slot (vLLM's
+        policy): its pages are freed for the needy older request and it is
+        re-queued at the FRONT of the admission queue with
+        prompt+generated-so-far, restored later by recompute.
+
+    Greedy generations are token-identical to ``Server`` — the paged
+    attention view masks exactly the positions the ring cache masks, and
+    recompute-restore re-derives the interrupted logits bitwise (pinned by
+    the differential suite in tests/test_serve.py).
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        params: PyTree,
+        num_slots: int = 8,
+        max_seq: int = 512,
+        page_size: int = 16,
+        pool_pages: Optional[int] = None,
+        apply_mode: Optional[str] = None,
+        greedy: bool = True,
+        seed: int = 0,
+        rules: Optional[ShardingRules] = None,
+        param_axes: Optional[PyTree] = None,
+        truncate_prompts: bool = False,
+        prefill_bucket: Optional[int] = None,
+    ):
+        from .paging import PagePool
+
+        self.model = model
+        self.rules = rules
+        if rules is not None and param_axes is not None:
+            params = jax.device_put(
+                params, shardings_from_axes(param_axes, rules, params)
+            )
+        self.params = params
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        if pool_pages is None:
+            # fully provisioned (never preempts); the interesting deploys
+            # pass a smaller pool and lean on preemption
+            pool_pages = num_slots * (-(-max_seq // page_size))
+        self.pool = PagePool(pool_pages, page_size, num_slots, max_seq)
+        self.apply_mode = apply_mode
+        self.truncate_prompts = truncate_prompts
+        self.greedy = greedy
+        self.rng = jax.random.PRNGKey(seed)
+        # Admission prefills are right-padded to a multiple of this bucket
+        # so the jitted prefill only ever sees a handful of shapes. Without
+        # it, every preemption resume (prompt + generated-so-far) arrives
+        # at a new length and triggers a fresh XLA compile — resume lengths
+        # are data-dependent, so the compile count would be unbounded.
+        # Padding is exact for ATTENTION: dummy tail tokens write FUTURE
+        # positions, which the causal mask hides from every real query and
+        # the decode loop later overwrites in place; logits are read at the
+        # true last prompt position. It is NOT neutral for token-count-
+        # dependent dispatch: a padded MoE prefill computes expert capacity
+        # from the padded count and lets dummy tokens compete for capacity
+        # slots (and can flip the token-path/EP gates), changing which REAL
+        # tokens drop — so MoE models default to unbucketed prefill
+        # (correctness over compile count). Pass prefill_bucket explicitly
+        # to opt an MoE deployment back in when its prefills stay on the
+        # capacity-free token path.
+        if prefill_bucket is None:
+            prefill_bucket = 1 if model.cfg.is_moe else page_size
+        self.prefill_bucket = max(prefill_bucket, 1)
+
+        cache_l = model.init_paged_cache(num_slots, max_seq, page_size,
+                                         pool_pages)
+        self.cache, self.cache_axes = split_logical(cache_l)
+
+        def _under_rules(fn):
+            def wrapped(p, b, c, pos):
+                with use_rules(rules):
+                    return fn(p, b, c, pos)
+            return wrapped if rules is not None else fn
+
+        self._decode = jax.jit(_under_rules(
+            lambda p, b, c, pos: model.decode_step(
+                p, b, c, pos, apply_mode=apply_mode
+            )
+        ))
+        self._prefill = jax.jit(_under_rules(
+            # last_only=False: the bucketed prefill reads logits at the
+            # true last prompt position, not the padded tail
+            lambda p, b, c, pos: model.prefill(
+                p, b, c, positions=pos, last_only=False,
+                apply_mode=apply_mode
+            )
+        ))
+        self.slot_free = [True] * num_slots
+        self.slot_pos = np.zeros(num_slots, np.int64)  # next position to write
+        self.slot_req: List[Optional[Request]] = [None] * num_slots
+        self.slot_last_tok = np.zeros(num_slots, np.int64)
+        self.slot_orig: List[Optional[np.ndarray]] = [None] * num_slots
+        self.slot_seq = np.zeros(num_slots, np.int64)  # admission order
+        self._admit_counter = 0
+        self._bt_dirty = False
+        self.stats = {"steps": 0, "preemptions": 0, "tokens": 0,
+                      "peak_pages_in_use": 0, "page_util_sum": 0.0}
+
+    def warmup(self, max_len: Optional[int] = None):
+        """Compile every shape the serving loop can ever need.
+
+        Bucketing makes the prefill shape set FINITE — one per bucket
+        multiple up to the cache depth — so a production boot can pay all
+        XLA compiles before traffic arrives instead of stalling the loop
+        on the first preemption resume (whose padded length may be a
+        bucket multiple no fresh prompt has hit yet). ``max_len`` bounds
+        the covered sequence length when the deployment knows its longest
+        prompt + budget (a preemption resume never exceeds
+        prompt + max_new). Runs against the pristine cache: every
+        block-table row is unmapped, so the dummy prefill/decode writes
+        all drop on the floor.
+        """
+        assert all(self.slot_free), "warmup() must run before traffic"
+        cap = self.max_seq if max_len is None else min(max_len, self.max_seq)
+        shapes = set(range(self.prefill_bucket, cap + 1,
+                           self.prefill_bucket))
+        shapes.add(cap)  # the cap shape when the bucket doesn't divide it
+        for s_pad in sorted(shapes):
+            toks = jnp.zeros((1, s_pad), jnp.int32)
+            pos = jnp.arange(s_pad, dtype=jnp.int32)[None, :]
+            self._prefill(self.params, {"tokens": toks},
+                          self._slot_view(0), pos)
+        toks = jnp.zeros((self.num_slots, 1), jnp.int32)
+        pos = jnp.zeros((self.num_slots, 1), jnp.int32)
+        self._decode(self.params, {"tokens": toks}, self.cache, pos)
+
+    # -- cache surgery (host-side; mirrors the PagePool into the device tree) ----
+
+    def _tree_map(self, fn, *extra):
+        return jax.tree_util.tree_map(
+            fn, self.cache, *extra, self.cache_axes,
+            is_leaf=lambda x: hasattr(x, "shape"),
+        )
+
+    def _sync_block_tables(self):
+        """Broadcast the host block tables into every layer's cache leaf
+        (skipped when no allocation changed since the last sync)."""
+        if not self._bt_dirty:
+            return
+        tbl = jnp.asarray(self.pool.block_tables)
+
+        def upd(leaf, axes):
+            if "batch" not in axes:
+                return leaf
+            return jnp.broadcast_to(tbl, leaf.shape)
+
+        self.cache = self._tree_map(upd)
+        self._bt_dirty = False
+
+    def _reset_pages(self, pages: List[int]):
+        """Stamp freed pages' position rows back to the staleness sentinel
+        so a reused page cannot leak its previous owner's positions into
+        the causal mask (the k/v payload is dead once pos is stale)."""
+        if not pages:
+            return
+        idx = jnp.asarray(pages)
+
+        def upd(leaf, axes):
+            if "pages" not in axes or not jnp.issubdtype(leaf.dtype,
+                                                         jnp.integer):
+                return leaf
+            sl = [slice(None)] * leaf.ndim
+            sl[axes.index("pages")] = idx
+            return leaf.at[tuple(sl)].set(-tfm.attn.GLOBAL_WINDOW)
+
+        self.cache = self._tree_map(upd)
+
+    def _slot_view(self, slot: int) -> PyTree:
+        """The B=1 prefill view: full shared pools, this slot's table row."""
+        def sl(leaf, axes):
+            if "batch" not in axes:
+                return leaf
+            idx = [slice(None)] * leaf.ndim
+            idx[axes.index("batch")] = slice(slot, slot + 1)
+            return leaf[tuple(idx)]
+
+        return self._tree_map(sl)
+
+    def _merge_pools(self, new_view: PyTree):
+        """Take prefill-written pools back; keep the [B, M] block tables."""
+        def mg(old, new, axes):
+            return old if "batch" in axes else new
+
+        self.cache = jax.tree_util.tree_map(
+            mg, self.cache, new_view, self.cache_axes,
+            is_leaf=lambda x: hasattr(x, "shape"),
+        )
+
+    # -- request lifecycle ------------------------------------------------------
+
+    def _validate(self, req: Request) -> np.ndarray:
+        toks = validate_prompt(req.prompt, self.max_seq,
+                               self.truncate_prompts)
+        if req.max_new_tokens > 0:
+            # lifetime page demand: prefill writes len(toks) positions and
+            # each further decode step writes one more, capped by the cache
+            demand = self.pool.pages_needed(
+                min(len(toks) + req.max_new_tokens - 1, self.max_seq))
+            if demand > self.pool.num_pages:
+                raise ValueError(
+                    f"request needs {demand} pages "
+                    f"({len(toks)} prompt + {req.max_new_tokens} new tokens "
+                    f"at page_size={self.page_size}) but the whole pool has "
+                    f"{self.pool.num_pages} — raise pool_pages or shrink "
+                    "the request")
+        return toks
+
+    def _sample(self, logits_row) -> int:
+        self.rng, nxt = sample_tokens(self.rng, logits_row, self.greedy)
+        return int(nxt)
+
+    def _admit(self, ent: _Pending, slot: int):
+        req = ent.req
+        if not ent.resumed and req.max_new_tokens <= 0:
+            req.output = []
+            return
+        toks = ent.toks
+        s = len(toks)
+        for logical in range(self.pool.pages_needed(s)):
+            if not self.pool.has_page(slot, logical):
+                self.pool.alloc(slot, logical)
+                self._bt_dirty = True
+        self._sync_block_tables()
+        # bucketed prefill: pad to the next bucket multiple (capped at the
+        # cache depth). The dummy tail writes future positions — pages not
+        # yet allocated drop the writes, allocated ones get overwritten by
+        # the decode loop — and contributes nothing to the causal window.
+        s_pad = min(-(-s // self.prefill_bucket) * self.prefill_bucket,
+                    self.max_seq)
+        padded = np.zeros(s_pad, np.int32)
+        padded[:s] = toks
+        pos = jnp.arange(s_pad, dtype=jnp.int32)[None, :]
+        logits, new_view = self._prefill(
+            self.params, {"tokens": jnp.asarray(padded)[None, :]},
+            self._slot_view(slot), pos
+        )
+        self._merge_pools(new_view)
+        nxt = self._sample(logits[0, s - 1])
+        if ent.resumed:
+            req.output.append(nxt)
+        else:
+            req.output = [nxt]
+        self.stats["tokens"] += 1
+        # same finish-at-admit rules as Server's admit + step: max_new
+        # reached, instant EOS, or cache exhausted. The last case is
+        # resume-only: a fresh prompt is validated to <= max_seq - 1
+        # tokens, but a request preempted at slot_pos == max_seq - 1
+        # resumes with exactly max_seq tokens — its prefill fills the
+        # whole cache and emits the token the interrupted decode step
+        # would have been the last to produce, so it must finish HERE
+        # (re-entering the decode loop would write past the cache).
+        done = len(req.output) >= req.max_new_tokens or (
+            req.eos_id is not None and nxt == req.eos_id
+        ) or s >= self.max_seq
+        if done:
+            self._release(slot)
+            return
+        self.slot_free[slot] = False
+        self.slot_pos[slot] = s
+        self.slot_req[slot] = req
+        self.slot_last_tok[slot] = nxt
+        self.slot_orig[slot] = ent.orig
+        self.slot_seq[slot] = self._admit_counter
+        self._admit_counter += 1
+
+    def _release(self, slot: int):
+        """Free a slot's pages (finish or preempt) and reset their pos rows."""
+        freed = self.pool.free_slot(slot)
+        self._reset_pages(freed)
+        if freed:
+            self._bt_dirty = True
+        self._sync_block_tables()
+        self.slot_free[slot] = True
+        self.slot_req[slot] = None
+        self.slot_orig[slot] = None
+
+    def _preempt(self, slot: int, queue) -> None:
+        """Evict a live request; re-queue it at the front for recompute."""
+        req = self.slot_req[slot]
+        orig = self.slot_orig[slot]
+        resume = np.concatenate(
+            [orig, np.asarray(req.output, np.int32)]).astype(np.int32)
+        self._release(slot)
+        queue.appendleft(_Pending(req=req, toks=resume, orig=orig,
+                                  resumed=True))
+        self.stats["preemptions"] += 1
+
+    def _active_slots(self) -> List[int]:
+        return [s for s in range(self.num_slots) if not self.slot_free[s]]
+
+    def _ensure_pages(self, queue):
+        """Every live slot gets a page for its next write, preempting the
+        most-recently-admitted slot on exhaustion. Terminates: each
+        preemption frees >= 1 page (a live slot owns its prefill pages),
+        and a slot whose own demand exceeds the pool was rejected at
+        validation."""
+        for slot in sorted(self._active_slots(),
+                           key=lambda s: self.slot_seq[s]):
+            if self.slot_free[slot]:
+                continue  # preempted by an earlier iteration
+            logical = int(self.slot_pos[slot]) // self.page_size
+            if self.pool.has_page(slot, logical):
+                continue
+            while self.pool.num_free == 0:
+                victim = max(self._active_slots(),
+                             key=lambda s: self.slot_seq[s])
+                self._preempt(victim, queue)
+                if victim == slot:
+                    break
+            if self.slot_free[slot]:
+                continue
+            self.pool.alloc(slot, logical)
+            self._bt_dirty = True
+        self._sync_block_tables()
+
+    def _step_all(self):
+        toks = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
+        logits, self.cache = self._decode(self.params, {"tokens": toks},
+                                          self.cache, pos)
+        self.rng, nxt = sample_tokens(self.rng, logits[:, -1, :], self.greedy)
+        nxt = np.asarray(nxt)
+        for slot in self._active_slots():
+            req = self.slot_req[slot]
+            self.slot_pos[slot] += 1
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            self.stats["tokens"] += 1
+            done = len(req.output) >= req.max_new_tokens or (
+                req.eos_id is not None and tok == req.eos_id
+            ) or self.slot_pos[slot] >= self.max_seq
+            if done:
+                self._release(slot)
+            else:
+                self.slot_last_tok[slot] = tok
+        self.stats["steps"] += 1
+        self.stats["peak_pages_in_use"] = max(
+            self.stats["peak_pages_in_use"], self.pool.pages_in_use)
+        self.stats["page_util_sum"] += self.pool.utilization
+
+    def _admit_from(self, queue):
+        """Admit queue-front requests into free slots while pages last."""
+        for slot in range(self.num_slots):
+            while self.slot_free[slot] and queue:
+                head = queue[0]
+                if self.pool.num_free < self.pool.pages_needed(
+                        len(head.toks)):
+                    return  # wait for decode to free pages
+                self._admit(queue.popleft(), slot)
+
+    def serve(self, requests: Sequence[Request],
+              arrival_steps: Optional[Sequence[int]] = None) -> List[Request]:
+        """Run the scheduler until every request finishes.
+
+        ``arrival_steps[i]`` (optional) is the decode-step index at which
+        request i becomes visible to the admission queue — pass a Poisson
+        trace to replay open-loop traffic; scheduling never changes greedy
+        outputs, only wall-clock. All requests are validated up front so a
+        bad one leaves the server clean.
+        """
+        validated = [self._validate(r) for r in requests]
+        if arrival_steps is None:
+            arrival = [0] * len(requests)
+        else:
+            if len(arrival_steps) != len(requests):
+                raise ValueError("arrival_steps must match requests")
+            arrival = [int(a) for a in arrival_steps]
+        waiting = collections.deque(sorted(
+            ((a, i, _Pending(req=r, toks=t, orig=t))
+             for i, (r, t, a) in enumerate(zip(requests, validated, arrival))),
+            key=lambda e: (e[0], e[1])))
+        queue = collections.deque()
+        clock = 0
+        while waiting or queue or self._active_slots():
+            while waiting and waiting[0][0] <= clock:
+                queue.append(waiting.popleft()[2])
+            self._admit_from(queue)
+            if not self._active_slots():
+                # nothing runnable: tick the clock toward the next arrival
+                # (an un-admittable queue head with an idle pool cannot
+                # happen — lifetime demand was validated against the pool)
+                clock += 1
+                continue
+            # no admission retry here: a preemption frees ceil(pos/ps)
+            # pages but the resume needs ceil((pos+1)/ps) and the needy
+            # slot just took one, so the queue head can never fit at this
+            # point — re-admission happens at the next loop-top _admit_from
+            self._ensure_pages(queue)
+            self._step_all()
+            clock += 1
         return list(requests)
 
 
@@ -290,6 +763,23 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
         "--truncate-prompts", action="store_true",
         help="left-truncate prompts longer than max_seq-1 instead of "
              "rejecting them at admit",
+    )
+    ap.add_argument(
+        "--paged", action="store_true",
+        help="serve with the continuous-batching scheduler over a paged KV "
+             "cache (ContinuousServer: shared page pool, per-step "
+             "join/leave, preemption with recompute-restore; DESIGN.md "
+             "§10) instead of the slot-synchronous row-cache Server",
+    )
+    ap.add_argument(
+        "--page-size", type=int, default=16, metavar="TOKENS",
+        help="tokens per KV page under --paged (default 16)",
+    )
+    ap.add_argument(
+        "--pool-pages", type=int, default=None, metavar="N",
+        help="total pages in the shared pool under --paged; undersize it "
+             "(below num_slots * max_seq / page_size) to trade preemptions "
+             "for HBM — default fully provisions every slot",
     )
     args = ap.parse_args()
     cfg = reduced_config(args.arch)
@@ -358,10 +848,18 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
         if len(shape) != 2:
             raise SystemExit("--mesh must be DxM, e.g. 2x4")
         rules = make_rules(make_mesh(shape, ("data", "model")))
-    server = Server(model, params, num_slots=4, max_seq=128,
-                    apply_mode=args.apply_mode, rules=rules,
-                    param_axes=axes if rules is not None else None,
-                    truncate_prompts=args.truncate_prompts)
+    if args.paged:
+        server = ContinuousServer(
+            model, params, num_slots=4, max_seq=128,
+            page_size=args.page_size, pool_pages=args.pool_pages,
+            apply_mode=args.apply_mode, rules=rules,
+            param_axes=axes if rules is not None else None,
+            truncate_prompts=args.truncate_prompts)
+    else:
+        server = Server(model, params, num_slots=4, max_seq=128,
+                        apply_mode=args.apply_mode, rules=rules,
+                        param_axes=axes if rules is not None else None,
+                        truncate_prompts=args.truncate_prompts)
     rng = np.random.default_rng(0)
     reqs = [
         Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,)),
@@ -371,6 +869,8 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
     server.serve(reqs)
     for i, r in enumerate(reqs):
         print(f"req{i}: {r.output}")
+    if args.paged:
+        print(f"paged stats: {server.stats}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,61 @@ GLOBAL_WINDOW = 1 << 30  # sentinel: effectively unbounded causal attention
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache primitives (launch/paging.py holds the host-side allocator)
+# ---------------------------------------------------------------------------
+#
+# A paged cache stores per-layer KV in a [num_pages, page_size, ...] pool
+# shared by every decode slot; a [B, max_pages] block table (physical page
+# per logical page, -1 = unallocated) threads through the cache dict under
+# the "block_table" key, which is also how the attention mixers detect the
+# paged layout. Unallocated/foreign pages are excluded two ways: the block
+# table gives a per-page validity mask, and freed pages get their ``pos``
+# rows reset to -GLOBAL_WINDOW (the same staleness sentinel the ring cache
+# uses), so a reused page can never leak another request's positions into
+# the causal mask. Writes to unmapped logical pages (free slots decoding
+# padding tokens) resolve to an out-of-range flat index and are dropped.
+
+
+def paged_update(pool: jnp.ndarray, new: jnp.ndarray, block_table: jnp.ndarray,
+                 positions: jnp.ndarray) -> jnp.ndarray:
+    """Scatter per-token values [B, S, ...] into a [P, page_size, ...] pool.
+
+    ``positions`` [B, S] are absolute; the block table maps their logical
+    page to a physical one. Entries whose logical page is unmapped (-1)
+    flatten to an out-of-bounds index and are dropped.
+    """
+    p, ps = pool.shape[:2]
+    b, s = positions.shape
+    phys = jnp.take_along_axis(block_table, positions // ps, axis=1)  # [B, S]
+    flat = jnp.where(phys >= 0, phys * ps + positions % ps, p * ps)
+    return (
+        pool.reshape((p * ps,) + pool.shape[2:])
+        .at[flat.reshape(-1)]
+        .set(new.astype(pool.dtype).reshape((b * s,) + pool.shape[2:]),
+             mode="drop")
+        .reshape(pool.shape)
+    )
+
+
+def paged_gather(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot contiguous view [B, max_pages*page_size, ...] of a pool.
+
+    The jnp stand-in for a paged-attention kernel (mirrors _sdpa standing in
+    for flash): unmapped entries gather page 0 and rely on the caller's
+    validity mask + the -GLOBAL_WINDOW position sentinel.
+    """
+    b, m = block_table.shape
+    ps = pool.shape[1]
+    out = pool[jnp.maximum(block_table, 0)]  # [B, M, ps, ...]
+    return out.reshape((b, m * ps) + pool.shape[2:])
+
+
+def paged_valid(block_table: jnp.ndarray, page_size: int) -> jnp.ndarray:
+    """[B, max_pages*page_size] bool: token slots backed by an owned page."""
+    return jnp.repeat(block_table >= 0, page_size, axis=1)
+
+
+# ---------------------------------------------------------------------------
 # GQA
 # ---------------------------------------------------------------------------
 
@@ -145,6 +200,24 @@ def gqa_attention(
     if cache is None:
         out = _sdpa(q, k, v, positions, positions, window, softcap=softcap)
         new_cache = None
+    elif "block_table" in cache:
+        # Paged cache: shared [P, ps, Hkv, D] pools + per-slot block tables.
+        # Stale offsets carry pos = -GLOBAL_WINDOW (reset on free) and
+        # foreign pages are cut by the validity mask, so the gathered view
+        # attends over exactly the positions the ring cache would — the
+        # masked columns contribute exact zeros, keeping the two layouts
+        # bitwise-identical (tests/test_serve.py differential suite).
+        bt = cache["block_table"]
+        ps = cache["pos"].shape[1]
+        ck = paged_update(cache["k"], k, bt, positions)
+        cv = paged_update(cache["v"], v, bt, positions)
+        cpos = paged_update(cache["pos"], positions, bt, positions)
+        out = _sdpa(
+            q, paged_gather(ck, bt), paged_gather(cv, bt), positions,
+            paged_gather(cpos, bt), window,
+            k_valid=paged_valid(bt, ps), softcap=softcap,
+        )
+        new_cache = {"k": ck, "v": cv, "pos": cpos, "block_table": bt}
     else:
         # Ring-buffer cache: slot = position % cache_len. Absolute positions
         # are stored alongside so causal/window masks and slot-staleness fall
@@ -171,6 +244,30 @@ def init_gqa_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Cache:
         "v": LogicalParam(jnp.zeros(shape, dtype), ("batch", "cache_seq", "kv_heads", None)),
         "pos": LogicalParam(
             jnp.full((batch, max_seq), -GLOBAL_WINDOW, jnp.int32), ("batch", "cache_seq")
+        ),
+    }
+
+
+def init_gqa_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                         page_size: int, max_pages: int, dtype) -> Cache:
+    """Single-layer paged KV cache: shared page pool + per-slot block table.
+
+    Pool ``pos`` starts at the -GLOBAL_WINDOW staleness sentinel; block
+    tables start fully unmapped (-1). ``pages`` is replicated under the
+    default sharding rules (pages interleave live requests, so there is no
+    batch-dim sharding to inherit — a sequence-sharded paged pool would
+    need a paged-attention kernel first).
+    """
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": LogicalParam(jnp.zeros(shape, dtype), ("pages", None, "kv_heads", None)),
+        "v": LogicalParam(jnp.zeros(shape, dtype), ("pages", None, "kv_heads", None)),
+        "pos": LogicalParam(
+            jnp.full((num_pages, page_size), -GLOBAL_WINDOW, jnp.int32),
+            ("pages", None),
+        ),
+        "block_table": LogicalParam(
+            jnp.full((batch, max_pages), -1, jnp.int32), ("batch", None)
         ),
     }
 
@@ -276,18 +373,34 @@ def mla_attention(
         new_cache = None
     else:
         # absorbed decode form: attend directly over the latent cache.
-        cc, cr, cpos = cache["c_kv"], cache["k_rope"], cache["pos"]
-        bidx = jnp.arange(b)[:, None]
-        s_cache = cc.shape[1]
-        idx = positions % s_cache
-        cc = cc.at[bidx, idx].set(c_kv.astype(cc.dtype))
-        cr = cr.at[bidx, idx].set(k_rope.astype(cr.dtype))
-        cpos = cpos.at[bidx, idx].set(positions.astype(cpos.dtype))
+        if "block_table" in cache:
+            bt = cache["block_table"]
+            ps = cache["pos"].shape[1]
+            pc = paged_update(cache["c_kv"], c_kv, bt, positions)
+            pr = paged_update(cache["k_rope"], k_rope, bt, positions)
+            ppos = paged_update(cache["pos"], positions, bt, positions)
+            cc, cr, cpos = (paged_gather(pc, bt), paged_gather(pr, bt),
+                            paged_gather(ppos, bt))
+            k_valid = paged_valid(bt, ps)
+            new_cache = {"c_kv": pc, "k_rope": pr, "pos": ppos,
+                         "block_table": bt}
+        else:
+            cc, cr, cpos = cache["c_kv"], cache["k_rope"], cache["pos"]
+            bidx = jnp.arange(b)[:, None]
+            s_cache = cc.shape[1]
+            idx = positions % s_cache
+            cc = cc.at[bidx, idx].set(c_kv.astype(cc.dtype))
+            cr = cr.at[bidx, idx].set(k_rope.astype(cr.dtype))
+            cpos = cpos.at[bidx, idx].set(positions.astype(cpos.dtype))
+            k_valid = None
+            new_cache = {"c_kv": cc, "k_rope": cr, "pos": cpos}
         # absorb wk_b into q: q_lat [B,S,H,rkv]
         q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, params["wk_b"])
         valid = (cpos[:, None, :] <= positions[:, :, None]) & (
             (positions[:, :, None] - cpos[:, None, :]) < window
         )  # [B, Tq, S_cache]
+        if k_valid is not None:
+            valid = valid & k_valid[:, None, :]
         scores = (
             jnp.einsum("bqhr,bkr->bhqk", q_lat.astype(jnp.float32), cc.astype(jnp.float32))
             + jnp.einsum("bqhe,bke->bhqk", q_rope.astype(jnp.float32),
@@ -297,7 +410,6 @@ def mla_attention(
         probs = jax.nn.softmax(scores, axis=-1)
         out_lat = jnp.einsum("bhqk,bkr->bqhr", probs, cc.astype(jnp.float32))
         out = jnp.einsum("bqhr,rhd->bqhd", out_lat.astype(x.dtype), params["wv_b"])
-        new_cache = {"c_kv": cc, "k_rope": cr, "pos": cpos}
 
     out = jnp.einsum("bqhd,hdo->bqo", out, params["wo"])
     return out, new_cache
@@ -315,5 +427,27 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Cache:
         ),
         "pos": LogicalParam(
             jnp.full((batch, max_seq), -GLOBAL_WINDOW, jnp.int32), ("batch", "cache_seq")
+        ),
+    }
+
+
+def init_mla_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                         page_size: int, max_pages: int, dtype) -> Cache:
+    """Paged latent cache: same pool/block-table layout as the GQA variant."""
+    return {
+        "c_kv": LogicalParam(
+            jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
+            ("pages", None, None),
+        ),
+        "k_rope": LogicalParam(
+            jnp.zeros((num_pages, page_size, cfg.qk_rope_head_dim), dtype),
+            ("pages", None, None),
+        ),
+        "pos": LogicalParam(
+            jnp.full((num_pages, page_size), -GLOBAL_WINDOW, jnp.int32),
+            ("pages", None),
+        ),
+        "block_table": LogicalParam(
+            jnp.full((batch, max_pages), -1, jnp.int32), ("batch", None)
         ),
     }

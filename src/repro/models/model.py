@@ -44,6 +44,13 @@ class Model:
         tree = jax.eval_shape(lambda: tfm.init_cache(self.cfg, batch, max_seq))
         return split_logical(tree)
 
+    def init_paged_cache(self, batch: int, max_seq: int, page_size: int,
+                         num_pages: int) -> PyTree:
+        """Paged serving cache (page pools + block tables); see
+        transformer.init_paged_cache and launch/paging.py."""
+        return tfm.init_paged_cache(self.cfg, batch, max_seq, page_size,
+                                    num_pages)
+
     # -- compute ---------------------------------------------------------------
 
     def loss(self, params, batch, remat: bool = True):

@@ -302,6 +302,55 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
     return out
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                     page_size: int, num_pages: int) -> PyTree:
+    """Paged serving cache: per-layer page pools + per-slot block tables.
+
+    Same segment/slot tree shape as :func:`init_cache`, so the forward pass
+    is untouched — the attention mixers detect the paged layout by the
+    ``block_table`` key. Every layer gets its own ``[num_pages, page_size,
+    ...]`` pool but the SAME logical->physical mapping (one host-side
+    PagePool drives every layer's table), mirroring vLLM's layout. Sliding-
+    window layers keep full-length logical tables — the window is enforced
+    by masking, not by ring reuse, so paged pools trade the ring cache's
+    window-bounded storage for cross-request page sharing.
+
+    Recurrent mixers (rglru/rwkv) hold O(1) per-slot states with no
+    sequence axis to page; serving them continuously needs row-granular
+    state surgery instead, so they are rejected here.
+    """
+    plan = build_plan(cfg)
+    max_pages = -(-max_seq // page_size)
+    out = []
+    for seg in plan:
+        slots = []
+        for spec in seg.pattern:
+            dt = _dtype_of(cfg)
+            if spec.mixer == "gqa":
+                c = attn.init_gqa_paged_cache(
+                    cfg, batch, num_pages, page_size, max_pages, dt)
+            elif spec.mixer == "mla":
+                c = attn.init_mla_paged_cache(
+                    cfg, batch, num_pages, page_size, max_pages, dt)
+            else:
+                raise NotImplementedError(
+                    f"paged KV cache supports attention mixers only "
+                    f"(gqa/mla), got {spec.mixer!r} — serve recurrent "
+                    "models with the row-cache Server")
+            if seg.repeats > 1:
+                c = jax.tree_util.tree_map(
+                    lambda p: LogicalParam(
+                        jnp.broadcast_to(p.value, (seg.repeats,) + p.value.shape).copy(),
+                        ("layers",) + p.axes,
+                    ),
+                    c,
+                    is_leaf=lambda x: isinstance(x, LogicalParam),
+                )
+            slots.append(c)
+        out.append({"slots": slots})
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------

@@ -1,0 +1,170 @@
+"""PagePool invariants: allocation, conservation, block-table consistency.
+
+The pool is pure host-side numpy (no jax import), so these tests are cheap
+enough to fuzz: arbitrary alloc/free/preempt sequences run against a shadow
+model and the three invariants from launch/paging.py's docstring are
+asserted after every operation — no page is ever double-assigned, no page
+leaks (free + owned == total, always), and block tables only ever point at
+pages their slot owns. Hypothesis drives the sequences when installed (the
+CI image has it); a seeded numpy fuzzer covers the bare-venv tier-1 run.
+"""
+import numpy as np
+import pytest
+
+from repro.launch.paging import PagePool
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 runs without dev extras (pyproject.toml)
+    HAVE_HYPOTHESIS = False
+
+
+# -- deterministic basics -----------------------------------------------------
+
+
+def test_alloc_free_roundtrip():
+    pool = PagePool(num_pages=4, page_size=8, num_slots=2, max_seq=32)
+    assert pool.max_pages_per_slot == 4
+    p0 = pool.alloc(0, 0)
+    p1 = pool.alloc(0, 1)
+    p2 = pool.alloc(1, 0)
+    assert len({p0, p1, p2}) == 3
+    assert pool.num_free == 1 and pool.pages_in_use == 3
+    assert pool.has_page(0, 1) and not pool.has_page(1, 1)
+    pool.check()
+    freed = pool.free_slot(0)
+    assert sorted(freed) == sorted([p0, p1])
+    assert pool.num_free == 3
+    assert not pool.has_page(0, 0)
+    pool.check()
+
+
+def test_pages_needed_rounds_up():
+    pool = PagePool(num_pages=2, page_size=8, num_slots=1, max_seq=32)
+    assert pool.pages_needed(1) == 1
+    assert pool.pages_needed(8) == 1
+    assert pool.pages_needed(9) == 2
+
+
+def test_alloc_errors():
+    pool = PagePool(num_pages=1, page_size=4, num_slots=2, max_seq=8)
+    pool.alloc(0, 0)
+    with pytest.raises(RuntimeError, match="already mapped"):
+        pool.alloc(0, 0)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(1, 0)
+    with pytest.raises(ValueError, match="slot"):
+        pool.alloc(2, 0)
+    with pytest.raises(ValueError, match="logical"):
+        pool.alloc(1, 99)
+    pool.check()
+
+
+def test_free_slot_is_idempotent_and_isolated():
+    pool = PagePool(num_pages=4, page_size=4, num_slots=3, max_seq=8)
+    pool.alloc(0, 0)
+    keep = pool.alloc(1, 0)
+    assert pool.free_slot(2) == []  # never held anything
+    pool.free_slot(0)
+    assert pool.free_slot(0) == []
+    assert pool.owner[keep] == 1  # slot 1 untouched
+    pool.check()
+
+
+# -- randomized alloc/free/preempt sequences ----------------------------------
+
+
+def _run_random_ops(pool: PagePool, choose, n_ops: int):
+    """Drive ``n_ops`` random ops, checking every invariant after each.
+
+    ``choose(kind, options)`` picks from a list — hypothesis `data.draw`
+    or a seeded numpy rng, so both fuzzers share one oracle loop.
+    """
+    handed_out = set()  # every page currently on loan, across all slots
+    shadow = {s: set() for s in range(pool.num_slots)}  # slot -> owned
+    for _ in range(n_ops):
+        op = choose("op", ["alloc", "alloc", "free"])
+        slot = choose("slot", list(range(pool.num_slots)))
+        if op == "alloc":
+            unmapped = [l for l in range(pool.max_pages_per_slot)
+                        if not pool.has_page(slot, l)]
+            if not unmapped:
+                continue
+            logical = choose("logical", unmapped)
+            if pool.num_free == 0:
+                with pytest.raises(RuntimeError, match="exhausted"):
+                    pool.alloc(slot, logical)
+            else:
+                page = pool.alloc(slot, logical)
+                # never double-assigned: the page was not on loan anywhere
+                assert page not in handed_out
+                handed_out.add(page)
+                shadow[slot].add(page)
+        else:  # free (finish or preempt — the pool cannot tell them apart)
+            freed = pool.free_slot(slot)
+            assert set(freed) == shadow[slot]
+            handed_out -= shadow[slot]
+            shadow[slot] = set()
+        # conservation after EVERY op: nothing leaks, nothing double-counts
+        assert pool.num_free + pool.pages_in_use == pool.num_pages
+        assert pool.pages_in_use == len(handed_out)
+        # block tables only map pages their slot owns
+        for s in range(pool.num_slots):
+            row = pool.block_tables[s]
+            assert set(row[row >= 0].tolist()) == shadow[s]
+        pool.check()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pool_invariants_seeded_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    pool = PagePool(
+        num_pages=int(rng.integers(1, 13)),
+        page_size=int(rng.integers(1, 9)),
+        num_slots=int(rng.integers(1, 6)),
+        max_seq=int(rng.integers(1, 9)) * int(rng.integers(1, 7)),
+    )
+    _run_random_ops(
+        pool, lambda kind, opts: opts[int(rng.integers(len(opts)))], 80)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_pool_invariants_under_random_ops(data):
+        num_pages = data.draw(st.integers(1, 12), label="num_pages")
+        page_size = data.draw(st.integers(1, 8), label="page_size")
+        num_slots = data.draw(st.integers(1, 5), label="num_slots")
+        max_pages = data.draw(st.integers(1, 6), label="max_pages")
+        pool = PagePool(num_pages, page_size, num_slots,
+                        max_seq=max_pages * page_size)
+        n_ops = data.draw(st.integers(0, 60), label="n_ops")
+        _run_random_ops(
+            pool,
+            lambda kind, opts: data.draw(st.sampled_from(opts), label=kind),
+            n_ops)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 10), st.integers(0, 200), st.integers(1, 4))
+    def test_pool_churn_never_leaks(num_pages, rounds, num_slots):
+        """Alternating full-allocation and full-release cycles return the
+        pool to pristine state — LIFO reuse must not lose or duplicate
+        pages."""
+        pool = PagePool(num_pages, 4, num_slots, max_seq=4 * num_pages)
+        rng = np.random.default_rng(rounds)
+        for _ in range(rounds % 11):
+            while pool.num_free:
+                slot = int(rng.integers(num_slots))
+                unmapped = [l for l in range(pool.max_pages_per_slot)
+                            if not pool.has_page(slot, l)]
+                if not unmapped:
+                    break
+                pool.alloc(slot, unmapped[0])
+            for s in range(num_slots):
+                pool.free_slot(s)
+            assert pool.num_free == num_pages
+            assert (pool.block_tables == -1).all()
+            assert (pool.owner == -1).all()
+            pool.check()

@@ -1,4 +1,11 @@
-"""Serving loop: continuous batching equals sequential greedy decoding."""
+"""Serving loop: continuous batching equals sequential greedy decoding.
+
+Two servers live in launch/serve.py: the slot-synchronous ``Server`` (one
+full cache row per slot) and the paged ``ContinuousServer`` (shared page
+pool, per-step join/leave, preemption). The differential suite at the
+bottom pins the latter to the former token-for-token across randomized
+schedules — the sync server is the oracle.
+"""
 import dataclasses
 
 import jax
@@ -7,8 +14,12 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced_config
-from repro.launch.serve import Request, Server
-from repro.models import build_model, compress_model_params
+from repro.launch.serve import ContinuousServer, Request, Server
+from repro.models import (
+    build_model,
+    compress_model_params,
+    quantize_compressed_params,
+)
 from repro.sharding import split_logical
 
 
@@ -194,3 +205,281 @@ def test_server_with_compressed_params(rng):
     dense.serve([r1])
     comp.serve([r2])
     assert r1.output == r2.output
+
+
+# ---------------------------------------------------------------------------
+# ContinuousServer (paged KV + preemption) differential suite
+# ---------------------------------------------------------------------------
+
+
+def _random_schedule(seed, vocab, n_lo=2, n_hi=5, max_new_hi=7):
+    """One randomized serving schedule: prompts, budgets, arrival trace.
+
+    Prompt lengths draw from a small set so the B=1 prefill only ever
+    traces a handful of shapes across the whole suite.
+    """
+    r = np.random.default_rng(seed)
+    n = int(r.integers(n_lo, n_hi + 1))
+    prompts = [r.integers(0, vocab, size=(int(r.choice([4, 6, 8])),))
+               .astype(np.int32) for _ in range(n)]
+    max_new = [int(r.integers(1, max_new_hi)) for _ in range(n)]
+    order = r.permutation(n)
+    arrivals = np.sort(r.poisson(1.0, size=n)).tolist()
+    return prompts, max_new, order, arrivals
+
+
+def _assert_differential(model, params, schedules, apply_mode=None,
+                         num_slots=3, max_seq=48, page_size=4, pool_pages=9,
+                         max_new_override=None):
+    """Serve each schedule through both servers; outputs must be identical.
+
+    The ContinuousServer sees the requests in a permuted order under a
+    Poisson arrival trace — scheduling must never change greedy outputs.
+    Returns the total preemption count so callers can assert the
+    interesting regime was exercised.
+    """
+    cfg = model.cfg
+    sync = Server(model, params, num_slots=num_slots, max_seq=max_seq,
+                  apply_mode=apply_mode)
+    cont = ContinuousServer(model, params, num_slots=num_slots,
+                            max_seq=max_seq, page_size=page_size,
+                            pool_pages=pool_pages, apply_mode=apply_mode)
+    for seed in schedules:
+        prompts, max_new, order, arrivals = _random_schedule(
+            seed, cfg.vocab_size)
+        if max_new_override is not None:
+            max_new = [max_new_override] * len(max_new)
+        ra = [Request(prompt=p, max_new_tokens=m)
+              for p, m in zip(prompts, max_new)]
+        rb = [Request(prompt=p, max_new_tokens=m)
+              for p, m in zip(prompts, max_new)]
+        sync.serve(ra)
+        cont.serve([rb[i] for i in order], arrival_steps=arrivals)
+        for i, (a, b) in enumerate(zip(ra, rb)):
+            assert a.output == b.output, (seed, i, a.output, b.output)
+        # the pool must come back empty after every schedule: leaked pages
+        # would starve later schedules (and falsify the utilization stats)
+        cont.pool.check()
+        assert cont.pool.pages_in_use == 0
+    return cont.stats["preemptions"]
+
+
+def test_continuous_server_differential_dense(rng):
+    """20 randomized schedules (arrival orders, prompt lengths, budgets):
+    paged continuous batching is token-identical to the sync oracle. The
+    pool (9 pages x 4 tokens) is deliberately smaller than
+    num_slots * max_seq = 144, so some schedules preempt and re-admit."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    preemptions = _assert_differential(model, params, schedules=range(20))
+    assert preemptions > 0, "pool was sized to force at least one preemption"
+
+
+def test_continuous_server_differential_compressed(rng):
+    """Differential parity on the ResMoE-SVD store across both restore-free
+    kernel paths and both store dtypes, under a pool tight enough to
+    preempt mid-schedule.
+    # PARITY: fused_kernel/fp32  # PARITY: fused_kernel/int8
+    # PARITY: fused_token/fp32   # PARITY: fused_token/int8
+    """
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                        keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    qp = quantize_compressed_params(cp)
+    total = 0
+    for store in (cp, qp):
+        for mode in ("fused_kernel", "fused_token"):
+            total += _assert_differential(
+                model, store, schedules=[7], apply_mode=mode,
+                num_slots=2, max_seq=32, page_size=4, pool_pages=5,
+                max_new_override=6)
+    assert total > 0, "tight pool should preempt at least once"
+
+
+def test_continuous_server_preemption_and_readmission(rng):
+    """A schedule built to thrash: more live demand than the pool holds.
+    Every request must still finish with the oracle's exact tokens, and
+    the preempted-and-readmitted ones must not lose or duplicate tokens."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(4)]
+    sync = Server(model, params, num_slots=3, max_seq=48)
+    ra = [Request(prompt=p, max_new_tokens=10) for p in prompts]
+    sync.serve(ra)
+    cont = ContinuousServer(model, params, num_slots=3, max_seq=48,
+                            page_size=4, pool_pages=6)
+    rb = [Request(prompt=p, max_new_tokens=10) for p in prompts]
+    cont.serve(rb)
+    assert cont.stats["preemptions"] > 0
+    for a, b in zip(ra, rb):
+        assert a.output == b.output
+        assert len(b.output) == 10
+
+
+def test_continuous_server_no_padding_on_capacity_dispatched_moe(rng):
+    """Prefill padding must not change MoE expert-capacity dispatch: a
+    padded prefill computes capacity from the padded token count and lets
+    dummy tokens compete for capacity slots, changing which REAL tokens
+    drop. MoE models therefore default to UNBUCKETED prefill; this pins
+    the scenario that diverged under padding (long skewed prompt on the
+    dispatched path, capacity_factor low enough that a few extra tokens
+    cross a capacity step)."""
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=1.7),
+        resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    # skewed routing: one repeated token, length NOT a page multiple
+    prompt = np.full(18, int(rng.integers(0, cfg.vocab_size)), np.int32)
+    ra, rb = (Request(prompt=prompt, max_new_tokens=5) for _ in range(2))
+    Server(model, cp, num_slots=2, max_seq=64, apply_mode="fused").serve([ra])
+    cont = ContinuousServer(model, cp, num_slots=2, max_seq=64, page_size=4,
+                            apply_mode="fused")
+    assert cont.prefill_bucket == 1  # MoE models must not pad by default
+    cont.serve([rb])
+    assert ra.output == rb.output, (ra.output, rb.output)
+
+
+def test_continuous_server_preempt_at_cache_boundary(rng):
+    """A request preempted at slot_pos == max_seq - 1 resumes with exactly
+    max_seq tokens — its prefill fills the whole cache and must FINISH at
+    admit (it used to re-enter the decode loop with no writable position:
+    an IndexError past the block table when page_size divides max_seq, a
+    silent overrun otherwise), still matching the oracle token-for-token."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    max_seq = 8
+    short = rng.integers(0, cfg.vocab_size, size=(4,)).astype(np.int32)
+    long = rng.integers(0, cfg.vocab_size, size=(7,)).astype(np.int32)
+    reqs = [Request(prompt=short, max_new_tokens=4),
+            Request(prompt=long, max_new_tokens=3)]
+    oracle = [Request(prompt=short, max_new_tokens=4),
+              Request(prompt=long, max_new_tokens=3)]
+    Server(model, params, num_slots=2, max_seq=max_seq).serve(oracle)
+    # 3 pages of 4: the long request (most recently admitted, at
+    # slot_pos = 7 == max_seq - 1 when the short one needs its 2nd page)
+    # gets preempted holding a full-cache resume prompt
+    cont = ContinuousServer(model, params, num_slots=2, max_seq=max_seq,
+                            page_size=4, pool_pages=3)
+    cont.serve(reqs)
+    assert cont.stats["preemptions"] > 0
+    for a, b in zip(oracle, reqs):
+        assert a.output == b.output, (a.output, b.output)
+    cont.pool.check()
+    assert cont.pool.pages_in_use == 0
+
+
+def test_continuous_server_prompt_at_boundary(rng):
+    """Admission edge: a prompt of exactly max_seq - 1 tokens is the
+    longest admissible prompt; it prefills, decodes the single remaining
+    cache position, and matches the oracle."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    max_seq = 16
+    prompt = rng.integers(0, cfg.vocab_size,
+                          size=(max_seq - 1,)).astype(np.int32)
+    ra, rb = (Request(prompt=prompt, max_new_tokens=5) for _ in range(2))
+    Server(model, params, num_slots=2, max_seq=max_seq).serve([ra])
+    cont = ContinuousServer(model, params, num_slots=2, max_seq=max_seq,
+                            page_size=4)
+    cont.serve([rb])
+    # prefill emits one token, the last cache position one more
+    assert rb.output == ra.output and len(rb.output) == 2
+    # one past the boundary is rejected by both servers
+    too_long = rng.integers(0, cfg.vocab_size,
+                            size=(max_seq,)).astype(np.int32)
+    with pytest.raises(ValueError, match="max_seq"):
+        cont.serve([Request(prompt=too_long, max_new_tokens=2)])
+    assert cont.pool.pages_in_use == 0  # nothing half-admitted
+
+
+def test_empty_prompt_rejected_even_with_truncation(rng):
+    """Admission edge: an empty prompt — as sent, or truncated to nothing
+    by max_seq=1 — raises a clear error instead of tracing a [1, 0]
+    prefill, on both servers."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    empty = np.zeros((0,), np.int32)
+    tok = rng.integers(0, cfg.vocab_size, size=(3,)).astype(np.int32)
+    for server in (Server(model, params, num_slots=2, max_seq=16,
+                          truncate_prompts=True),
+                   ContinuousServer(model, params, num_slots=2, max_seq=16,
+                                    page_size=4, truncate_prompts=True)):
+        with pytest.raises(ValueError, match="empty prompt"):
+            server.serve([Request(prompt=empty, max_new_tokens=2)])
+    # truncation that keeps zero tokens (max_seq == 1) lands in the same
+    # error — not a crash inside prefill
+    crush = ContinuousServer(model, params, num_slots=2, max_seq=1,
+                             page_size=4, truncate_prompts=True)
+    with pytest.raises(ValueError, match="empty prompt"):
+        crush.serve([Request(prompt=tok, max_new_tokens=2)])
+
+
+def test_continuous_server_demand_exceeding_pool_is_rejected(rng):
+    """Admission edge: a request whose lifetime page demand exceeds the
+    whole pool fails fast with a clear error (the scheduler could never
+    satisfy it — preemption would spin forever), and the server stays
+    serviceable."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cont = ContinuousServer(model, params, num_slots=2, max_seq=48,
+                            page_size=4, pool_pages=2)  # 8 token positions
+    big = Request(prompt=rng.integers(0, cfg.vocab_size, size=(6,))
+                  .astype(np.int32), max_new_tokens=10)  # needs 4 pages
+    with pytest.raises(ValueError, match="pool"):
+        cont.serve([big])
+    assert cont.pool.pages_in_use == 0 and all(cont.slot_free)
+    ok = Request(prompt=rng.integers(0, cfg.vocab_size, size=(4,))
+                 .astype(np.int32), max_new_tokens=3)
+    cont.serve([ok])  # fits in 2 pages: 4 prompt + 2 decode positions
+    assert len(ok.output) == 3
+
+
+@pytest.mark.soak
+def test_continuous_server_soak(rng):
+    """Seeded long-run soak (scripts/ci.sh soak tier): hundreds of small
+    requests stream through a tiny pool, forcing constant preemption and
+    page reuse. Every request must complete within budget, the pool must
+    come back pristine, and a deterministic subset is cross-checked
+    against the sync oracle token-for-token."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    n = 200
+    prompts = [rng.integers(0, cfg.vocab_size, size=(int(rng.choice([3, 5])),))
+               .astype(np.int32) for _ in range(n)]
+    max_new = [int(rng.integers(1, 7)) for _ in range(n)]
+    arrivals = np.sort(rng.poisson(0.5, size=n)).tolist()
+    reqs = [Request(prompt=p, max_new_tokens=m)
+            for p, m in zip(prompts, max_new)]
+    cont = ContinuousServer(model, params, num_slots=4, max_seq=32,
+                            page_size=4, pool_pages=8)
+    cont.serve(reqs, arrival_steps=arrivals)
+    assert cont.stats["preemptions"] > 0, "tiny pool must preempt"
+    assert cont.stats["peak_pages_in_use"] == cont.pool.num_pages
+    for r in reqs:
+        assert 1 <= len(r.output) <= r.max_new_tokens
+    cont.pool.check()
+    assert cont.pool.pages_in_use == 0
+    # oracle cross-check on a deterministic subset
+    sync = Server(model, params, num_slots=4, max_seq=32)
+    subset = list(range(0, n, 25))
+    oracle = [Request(prompt=prompts[i], max_new_tokens=max_new[i])
+              for i in subset]
+    sync.serve(oracle)
+    for i, o in zip(subset, oracle):
+        assert reqs[i].output == o.output, (i, reqs[i].output, o.output)
