@@ -51,7 +51,7 @@ def main() -> int:
         ("t10", memory.run),
         ("t11", runtime.run),
         ("t12", flops_table.run),
-        ("serve", runtime.paged_vs_sync_serving),
+        ("serve", runtime.serve_suite),
         ("roofline", analyze.run),
     ]
     if not args.fast:

@@ -474,6 +474,46 @@ def paged_vs_sync_serving(seed: int = 0):
     ]
 
 
+def zoo_decode_serving(seed: int = 0):
+    """Decode throughput of ContinuousServer per mixer family.
+
+    One row per architecture family the StatePage layer serves: pure
+    attention (token pages), hybrid rec-rec-attn (pages + state slots) and
+    pure recurrence (state slots only). Same trace shape for all three —
+    16 decode-heavy requests on a fully provisioned pool, so the numbers
+    track per-step model cost + scheduling overhead, not preemption luck.
+    Compilation is excluded by a one-request warm serve (all prompts share
+    one length, so the timed trace replays already-traced shapes)."""
+    import time
+
+    from repro.launch.serve import ContinuousServer, Request
+
+    rng = np.random.default_rng(seed)
+    rows = []
+    for arch in ("granite-8b", "recurrentgemma-9b", "rwkv6-1.6b"):
+        cfg = reduced_config(arch)
+        model = build_model(cfg)
+        params, _ = model.init_split(jax.random.PRNGKey(0))
+        server = ContinuousServer(model, params, num_slots=8, max_seq=64,
+                                  page_size=8)
+        prompts = [rng.integers(0, cfg.vocab_size, size=(8,))
+                   .astype(np.int32) for _ in range(16)]
+        server.serve([Request(prompt=prompts[0], max_new_tokens=2)])
+        reqs = [Request(prompt=p, max_new_tokens=24) for p in prompts]
+        t0 = time.perf_counter()
+        server.serve(reqs)
+        dt = time.perf_counter() - t0
+        tok = sum(len(r.output) for r in reqs)
+        rows.append((f"SERVE/zoo/{arch}/tok_per_s", round(tok / dt, 1),
+                     f"8 slots; {server.state.describe()}"))
+    return rows
+
+
+def serve_suite(seed: int = 0):
+    """All serving rows: the paged-vs-sync headline plus the zoo matrix."""
+    return paged_vs_sync_serving(seed) + zoo_decode_serving(seed)
+
+
 def grouped_roofline_mixtral(e=8, c=128, d=4096, f=14336, keep=0.25,
                              bm=128, bn=128, dtype_bytes=4):
     """Analytic TPU roofline at true Mixtral-8x7B expert shapes.

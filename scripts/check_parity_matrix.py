@@ -1,19 +1,25 @@
 #!/usr/bin/env python
-"""CI guard: every (apply_mode, store_dtype) combination has a parity test.
+"""CI guard: every (apply_mode, store_dtype) combination has a parity test,
+and every mixer kind has a serving-differential parity test.
 
 Purely static (no jax import — runs in ~10 ms like check_docs.py):
 
-  * the required matrix is read from the source of truth — the
+  * the required store matrix is read from the source of truth — the
     ``APPLY_MODES`` and ``STORE_DTYPES`` tuples of ``ResMoEConfig``
     (``configs/base.py``) — so ADDING a new apply mode or store dtype
     fails CI until a parity test covers it;
-  * coverage is declared in test docstrings/comments with the marker
+  * the required mixer rows come from ``MIXER_KINDS``
+    (``models/transformer.py``) — adding a mixer fails CI until the zoo
+    differential suite covers it end-to-end through ContinuousServer;
+  * coverage is declared in test docstrings/comments with the markers
 
         # PARITY: <apply_mode>/<store_dtype>
+        # PARITY: mixer/<mixer_kind>
 
     placed on the test that asserts that combination's output parity
     (e.g. tests/test_quant.py covers the int8 column, tests/test_moe.py
-    and tests/test_moe_token.py the fp32 one).
+    and tests/test_moe_token.py the fp32 one, tests/test_serve.py's zoo
+    suite the mixer rows).
 
 Run directly or via ``scripts/ci.sh docs`` / ``scripts/ci.sh all``.
 """
@@ -46,6 +52,10 @@ def main() -> int:
     dtypes = _tuple_of_strings(source, "STORE_DTYPES", base)
     required = {(m, d) for m in modes for d in dtypes}
 
+    tfm = ROOT / "src/repro/models/transformer.py"
+    kinds = _tuple_of_strings(tfm.read_text(), "MIXER_KINDS", tfm)
+    required |= {("mixer", k) for k in kinds}
+
     covered = {}
     for test in sorted((ROOT / "tests").glob("test_*.py")):
         for m, d in MARKER_RE.findall(test.read_text()):
@@ -57,12 +67,17 @@ def main() -> int:
         print(f"FAIL marker for unknown combination {m}/{d} in "
               f"{', '.join(covered[(m, d)])} (typo, or a removed mode?)")
     for m, d in missing:
-        print(f"FAIL no parity test declared for apply_mode={m} "
-              f"store_dtype={d} — add one and mark it '# PARITY: {m}/{d}'")
+        if m == "mixer":
+            print(f"FAIL no serving-differential parity test declared for "
+                  f"mixer kind {d!r} — add a zoo test and mark it "
+                  f"'# PARITY: mixer/{d}'")
+        else:
+            print(f"FAIL no parity test declared for apply_mode={m} "
+                  f"store_dtype={d} — add one and mark it '# PARITY: {m}/{d}'")
     if unknown or missing:
         return 1
     print(f"parity matrix OK: {len(modes)} apply modes x {len(dtypes)} "
-          "store dtypes all covered")
+          f"store dtypes + {len(kinds)} mixer kinds all covered")
     return 0
 
 

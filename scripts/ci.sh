@@ -13,6 +13,10 @@
 #                            # requests through a tiny page pool (forced
 #                            # preemption/reuse); excluded from tier-1 by
 #                            # the `-m "not soak"` addopts default
+#   scripts/ci.sh zoo        # architecture-matrix serving differentials:
+#                            # every mixer kind (gqa/mla/rglru/rwkv, hybrid,
+#                            # compressed-MoE) through ContinuousServer vs
+#                            # the sync oracle with forced preemption
 #   scripts/ci.sh docs       # broken md links / stale README references /
 #                            # apply-mode x store-dtype parity-test matrix
 #   scripts/ci.sh all        # every tier above, tier-1 first
@@ -81,6 +85,16 @@ soak() {
     python -m pytest -q -m soak tests/test_serve.py
 }
 
+# Zoo tier: ContinuousServer == Server token parity on every architecture
+# family in the model zoo (pure attention, sliding local/global, MLA+MoE,
+# pure recurrent, hybrid, compressed-MoE hybrid), each with at least one
+# forced preemption-restore. check_parity_matrix.py requires a
+# `# PARITY: mixer/<kind>` marker per MIXER_KINDS entry, so a new mixer
+# cannot ship without a row here.
+zoo() {
+    python -m pytest -q -m zoo tests/
+}
+
 # Docs tier: intra-repo markdown links must resolve, README code blocks
 # must reference real modules/paths/flags, and every
 # (apply_mode, store_dtype) combination must declare a parity test
@@ -96,7 +110,8 @@ case "${1:-tier1}" in
     multidev) multidev ;;
     bench)    bench ;;
     soak)     soak ;;
+    zoo)      zoo ;;
     docs)     docs ;;
-    all)      tier1; kernels; multidev; bench; soak; docs ;;
-    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|docs|all]" >&2; exit 2 ;;
+    all)      tier1; kernels; multidev; bench; soak; zoo; docs ;;
+    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|zoo|docs|all]" >&2; exit 2 ;;
 esac

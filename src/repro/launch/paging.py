@@ -1,4 +1,4 @@
-"""Paged KV-cache bookkeeping: a fixed pool of pages + per-slot block tables.
+"""Per-mixer serving-state bookkeeping: page pools, state slots, StatePage.
 
 The device-side layout (models/attention.py) is vLLM-style: every attention
 layer owns a ``[num_pages, page_size, ...]`` pool shared by all decode
@@ -21,12 +21,27 @@ pages are unit-sized and interchangeable, so there is no fragmentation and
 no need for anything cleverer. Preemption is just ``free_slot`` — the
 scheduler re-queues the victim and restores it later by recompute
 (DESIGN.md §10).
+
+Above the raw pool sits the :class:`StatePage` interface (DESIGN.md §11):
+one resource manager per mixer *kind*. Attention mixers keep token pages
+(:class:`TokenPages`, wrapping a shared :class:`PagePool` and reclaiming
+window-expired pages for sliding-window-only stacks); recurrent mixers
+(rglru/rwkv6) keep one fixed-size state slot per serving slot
+(:class:`RecurrentSlots` — nothing to page, preemption drops the state and
+restores by recompute). :class:`ServingState` composes whichever of the two
+a layer plan needs, so hybrid rec/attn stacks hold both and the scheduler
+allocates/frees/preempts through one object without knowing the mix.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+# Mixer kinds each StatePage serves (mirrors transformer.MIXER_KINDS; kept
+# literal here so the host allocator never imports jax-heavy model code).
+ATTENTION_MIXERS = ("gqa", "mla")
+RECURRENT_MIXERS = ("rglru", "rwkv")
 
 
 class PagePool:
@@ -107,6 +122,26 @@ class PagePool:
         self.block_tables[slot, :] = -1
         return pages
 
+    def free_page(self, slot: int, logical: int) -> int:
+        """Release ONE mapped page (window reclamation), keeping the slot
+        live — the block-table entry goes back to -1 so paged_valid masks
+        the hole and later writes to it drop on the floor."""
+        if not (0 <= slot < self.num_slots):
+            raise ValueError(f"slot {slot} out of range [0, {self.num_slots})")
+        if not (0 <= logical < self.max_pages_per_slot):
+            raise ValueError(
+                f"logical page {logical} out of range "
+                f"[0, {self.max_pages_per_slot})")
+        page = int(self.block_tables[slot, logical])
+        if page < 0:
+            raise RuntimeError(
+                f"slot {slot} logical page {logical} is not mapped — "
+                "nothing to reclaim")
+        self.owner[page] = -1
+        self._free.append(page)
+        self.block_tables[slot, logical] = -1
+        return page
+
     # -- self-check (used by the property tests and the soak tier) --------------
 
     def check(self) -> None:
@@ -130,3 +165,257 @@ class PagePool:
             s = int(self.owner[p])
             assert p in self.block_tables[s], (
                 f"page {int(p)} owned by slot {s} but absent from its table")
+
+
+# ---------------------------------------------------------------------------
+# StatePage: per-mixer serving-state resources (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+class StatePage:
+    """One mixer kind's host-side serving-state resource.
+
+    The scheduler talks to every kind through the same five verbs —
+    ``demand`` (units a request of N tokens needs), ``prepare`` (make a
+    slot's state writable for its first N tokens), ``release`` (finish or
+    preempt), ``reclaim`` (free state no future query can read), and
+    ``check`` (invariants). "Units" are kind-specific: token pages for
+    attention, state slots for recurrence — :class:`ServingState` keeps
+    the accounting separate rather than pretending they convert.
+    """
+
+    kind = "abstract"
+
+    def demand(self, num_tokens: int) -> int:
+        raise NotImplementedError
+
+    def prepare(self, slot: int, num_tokens: int) -> bool:
+        """Make ``slot`` writable for positions [0, num_tokens); returns
+        True when the device-visible mapping changed (table resync)."""
+        raise NotImplementedError
+
+    def release(self, slot: int) -> List[int]:
+        """Free the slot's state; returns released physical pages (token
+        kinds) so the server can stamp their staleness sentinels."""
+        raise NotImplementedError
+
+    def reclaim(self, slot: int, next_pos: int) -> List[int]:
+        """Free state no query at position >= ``next_pos`` can ever read."""
+        return []
+
+    def check(self) -> None:
+        pass
+
+
+class TokenPages(StatePage):
+    """Attention-mixer state: a shared :class:`PagePool` of KV pages.
+
+    ``window`` is the widest attention window across the stack's attention
+    layers — the block tables are shared by every layer, so a page is
+    reclaimable only once it is dead in ALL of them. With any global-
+    attention layer in the stack ``window`` is the GLOBAL_WINDOW sentinel
+    and :meth:`reclaim` never fires (the loop is skipped entirely).
+    """
+
+    kind = "token"
+
+    def __init__(self, num_pages: int, page_size: int, num_slots: int,
+                 max_seq: int, window: Optional[int] = None):
+        self.pool = PagePool(num_pages, page_size, num_slots, max_seq)
+        self.window = window
+        # a window as wide as the cache can never expire a page
+        self.reclaimable = window is not None and window < max_seq
+
+    def demand(self, num_tokens: int) -> int:
+        return self.pool.pages_needed(num_tokens)
+
+    def admit_ok(self, num_tokens: int) -> bool:
+        return self.pool.num_free >= self.pool.pages_needed(num_tokens)
+
+    def prepare(self, slot: int, num_tokens: int) -> bool:
+        changed = False
+        for logical in range(self.pool.pages_needed(num_tokens)):
+            if not self.pool.has_page(slot, logical):
+                self.pool.alloc(slot, logical)
+                changed = True
+        return changed
+
+    def release(self, slot: int) -> List[int]:
+        return self.pool.free_slot(slot)
+
+    def reclaim(self, slot: int, next_pos: int) -> List[int]:
+        """Free pages whose every token is outside the sliding window for
+        every query the slot can still issue.
+
+        The mask keeps key ``k`` visible to query ``q`` iff
+        ``q - k < window`` (models/attention.py); future queries sit at
+        ``q >= next_pos``, so a position is dead once
+        ``k <= next_pos - window``, and page ``l`` (last position
+        ``(l+1) * page_size - 1``) once that bound covers it whole.
+        """
+        if not self.reclaimable:
+            return []
+        ps = self.pool.page_size
+        freed = []
+        for logical in range(self.pool.max_pages_per_slot):
+            if not self.pool.has_page(slot, logical):
+                continue
+            if (logical + 1) * ps - 1 <= next_pos - self.window:
+                freed.append(self.pool.free_page(slot, logical))
+        return freed
+
+    def check(self) -> None:
+        self.pool.check()
+
+
+class RecurrentSlots(StatePage):
+    """Recurrent-mixer state: one fixed-size slot per serving slot.
+
+    RG-LRU and RWKV6 carry O(1) state per sequence (hidden vector + conv
+    taps, or the wkv matrix + token-shift rows) — there is no sequence
+    axis to page, so "allocation" is the slot assignment itself and demand
+    is always exactly one slot regardless of token count. Preemption keeps
+    no state: the resume prefill recomputes it from the token history,
+    which is bitwise-identical because the state-carrying prefill scan
+    runs the same per-step recurrence as decode (DESIGN.md §11).
+    """
+
+    kind = "recurrent"
+
+    def __init__(self, num_slots: int, num_layers: int):
+        self.num_slots = int(num_slots)
+        self.num_layers = int(num_layers)
+        self.occupied = np.zeros(self.num_slots, bool)
+
+    def demand(self, num_tokens: int) -> int:
+        return 1
+
+    def prepare(self, slot: int, num_tokens: int) -> bool:
+        self.occupied[slot] = True
+        return False  # no device-visible mapping to resync
+
+    def release(self, slot: int) -> List[int]:
+        self.occupied[slot] = False
+        return []
+
+    def check(self) -> None:
+        assert self.occupied.shape == (self.num_slots,)
+
+
+class ServingState:
+    """Composite of the StatePages a layer plan needs (DESIGN.md §11).
+
+    Built from ``[(mixer, window), ...]`` in execution order (see
+    transformer.mixer_layout): attention layers contribute a shared
+    :class:`TokenPages` (ONE pool — the block tables are shared across
+    layers, each layer owning its own device-side payload pool), recurrent
+    layers a :class:`RecurrentSlots`. A pure-attention stack has
+    ``slots is None``, a pure-recurrent stack ``pages is None``, hybrids
+    hold both — the scheduler never branches on architecture.
+    """
+
+    def __init__(self, mixers: Sequence[Tuple[str, int]], num_slots: int,
+                 max_seq: int, page_size: int,
+                 pool_pages: Optional[int] = None):
+        attn_windows = []
+        num_recurrent = 0
+        for mixer, window in mixers:
+            if mixer in ATTENTION_MIXERS:
+                attn_windows.append(int(window))
+            elif mixer in RECURRENT_MIXERS:
+                num_recurrent += 1
+            else:
+                raise ValueError(
+                    f"unknown mixer kind {mixer!r} — ServingState knows "
+                    f"{ATTENTION_MIXERS + RECURRENT_MIXERS}; teach it the "
+                    "new kind's state layout before serving it")
+        self.num_slots = int(num_slots)
+        self.max_seq = int(max_seq)
+        self.pages: Optional[TokenPages] = None
+        self.slots: Optional[RecurrentSlots] = None
+        if attn_windows:
+            if pool_pages is None:
+                # fully provisioned (never preempts); the interesting
+                # deploys pass a smaller pool and lean on preemption
+                pool_pages = num_slots * (-(-max_seq // page_size))
+            self.pages = TokenPages(pool_pages, page_size, num_slots,
+                                    max_seq, window=max(attn_windows))
+        if num_recurrent:
+            self.slots = RecurrentSlots(num_slots, num_recurrent)
+        self.num_attention_layers = len(attn_windows)
+        self.num_recurrent_layers = num_recurrent
+
+    @property
+    def pool(self) -> Optional[PagePool]:
+        return self.pages.pool if self.pages is not None else None
+
+    def members(self) -> List[StatePage]:
+        return [m for m in (self.pages, self.slots) if m is not None]
+
+    def demand(self, num_tokens: int) -> dict:
+        """Per-kind units a request holding ``num_tokens`` positions needs."""
+        return {
+            "token_pages": (self.pages.demand(num_tokens)
+                            if self.pages is not None else 0),
+            "state_slots": (self.slots.demand(num_tokens)
+                            if self.slots is not None else 0),
+        }
+
+    def validate_demand(self, prompt_tokens: int, total_tokens: int) -> None:
+        """Admission check: the request's LIFETIME demand must fit the
+        capacity even with every other slot evicted, or the scheduler
+        would preempt forever. State slots always fit (demand is one slot
+        and the request occupies one); pages can genuinely exceed the
+        pool."""
+        d = self.demand(total_tokens)
+        if self.pages is not None and d["token_pages"] > self.pool.num_pages:
+            raise ValueError(
+                f"request needs {d['token_pages']} pages + "
+                f"{d['state_slots']} state slot(s) "
+                f"({prompt_tokens} prompt tokens, {total_tokens} lifetime "
+                f"positions at page_size={self.pool.page_size}) but the "
+                f"whole pool has {self.pool.num_pages} — raise pool_pages "
+                "or shrink the request")
+
+    def admit_ok(self, num_tokens: int) -> bool:
+        """Can a fresh admission's prefill be satisfied right now?"""
+        if self.pages is not None and not self.pages.admit_ok(num_tokens):
+            return False
+        return True
+
+    def prepare(self, slot: int, num_tokens: int) -> bool:
+        changed = False
+        for m in self.members():
+            changed |= m.prepare(slot, num_tokens)
+        return changed
+
+    def release(self, slot: int) -> List[int]:
+        freed: List[int] = []
+        for m in self.members():
+            freed.extend(m.release(slot))
+        return freed
+
+    def reclaim(self, slot: int, next_pos: int) -> List[int]:
+        freed: List[int] = []
+        for m in self.members():
+            freed.extend(m.reclaim(slot, next_pos))
+        return freed
+
+    def check(self) -> None:
+        for m in self.members():
+            m.check()
+
+    def describe(self) -> str:
+        parts = []
+        if self.pages is not None:
+            p = self.pages
+            reclaim = (f"window={p.window} reclaim=on" if p.reclaimable
+                       else "reclaim=off")
+            parts.append(
+                f"token_pages({p.pool.num_pages}x{p.pool.page_size} pool, "
+                f"{self.num_attention_layers} attn layers, {reclaim})")
+        if self.slots is not None:
+            parts.append(
+                f"recurrent_slots({self.slots.num_slots} slots x "
+                f"{self.slots.num_layers} recurrent layers)")
+        return " + ".join(parts)

@@ -319,10 +319,28 @@ class ContinuousServer:
         re-queued at the FRONT of the admission queue with
         prompt+generated-so-far, restored later by recompute.
 
+    Serving state is composed per mixer kind through the StatePage
+    interface (launch/paging.py, DESIGN.md §11): attention layers draw
+    token pages from the shared pool, recurrent layers (rglru/rwkv6) hold
+    one fixed-size state slot per serving slot, hybrid stacks hold both —
+    the scheduler allocates/frees/preempts through ``self.state`` without
+    branching on architecture. Preempting a recurrent slot keeps NO state:
+    the resume prefill recomputes it from prompt+generated-so-far, which
+    is bitwise-identical because the state-carrying prefill scan runs the
+    same per-step recurrence as decode. Sliding-window-only stacks also
+    reclaim window-expired pages each step (``stats["reclaimed_pages"]``).
+
     Greedy generations are token-identical to ``Server`` — the paged
     attention view masks exactly the positions the ring cache masks, and
     recompute-restore re-derives the interrupted logits bitwise (pinned by
-    the differential suite in tests/test_serve.py).
+    the differential suite in tests/test_serve.py across the architecture
+    matrix).
+
+    ``preempt_steps`` forces a preemption of the most-recently-admitted
+    slot before the given decode-step indices — a deterministic scheduler
+    hook for tests/benchmarks to exercise preemption-restore on stacks
+    whose state never exhausts naturally (pure-recurrent models hold no
+    pages, so pool pressure cannot evict them).
     """
 
     def __init__(
@@ -340,8 +358,9 @@ class ContinuousServer:
         param_axes: Optional[PyTree] = None,
         truncate_prompts: bool = False,
         prefill_bucket: Optional[int] = None,
+        preempt_steps: Optional[Sequence[int]] = None,
     ):
-        from .paging import PagePool
+        from .paging import ServingState
 
         self.model = model
         self.rules = rules
@@ -353,11 +372,12 @@ class ContinuousServer:
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.page_size = page_size
-        if pool_pages is None:
-            # fully provisioned (never preempts); the interesting deploys
-            # pass a smaller pool and lean on preemption
-            pool_pages = num_slots * (-(-max_seq // page_size))
-        self.pool = PagePool(pool_pages, page_size, num_slots, max_seq)
+        self.state = ServingState(tfm.mixer_layout(model.cfg), num_slots,
+                                  max_seq, page_size, pool_pages)
+        # None for pure-recurrent stacks (no attention layer, no pages)
+        self.pool = self.state.pool
+        self._preempt_steps = (None if preempt_steps is None
+                               else set(int(s) for s in preempt_steps))
         self.apply_mode = apply_mode
         self.truncate_prompts = truncate_prompts
         self.greedy = greedy
@@ -375,15 +395,21 @@ class ContinuousServer:
         # from the padded count and lets dummy tokens compete for capacity
         # slots (and can flip the token-path/EP gates), changing which REAL
         # tokens drop — so MoE models default to unbucketed prefill
-        # (correctness over compile count). Pass prefill_bucket explicitly
-        # to opt an MoE deployment back in when its prefills stay on the
-        # capacity-free token path.
+        # (correctness over compile count). Recurrent state is NOT padding-
+        # neutral either: dummy tail tokens advance the recurrence (h/wkv/
+        # shift taps have no causal mask to hide behind), so recurrent and
+        # hybrid stacks also default to unbucketed prefill. Pass
+        # prefill_bucket explicitly to opt a deployment back in when its
+        # prefills tolerate it (MoE on the capacity-free token path).
         if prefill_bucket is None:
-            prefill_bucket = 1 if model.cfg.is_moe else page_size
+            needs_exact = (model.cfg.is_moe
+                           or model.cfg.recurrent_type != "none")
+            prefill_bucket = 1 if needs_exact else page_size
         self.prefill_bucket = max(prefill_bucket, 1)
 
-        cache_l = model.init_paged_cache(num_slots, max_seq, page_size,
-                                         pool_pages)
+        cache_l = model.init_paged_cache(
+            num_slots, max_seq, page_size,
+            self.pool.num_pages if self.pool is not None else 1)
         self.cache, self.cache_axes = split_logical(cache_l)
 
         def _under_rules(fn):
@@ -414,7 +440,8 @@ class ContinuousServer:
         self._admit_counter = 0
         self._bt_dirty = False
         self.stats = {"steps": 0, "preemptions": 0, "tokens": 0,
-                      "peak_pages_in_use": 0, "page_util_sum": 0.0}
+                      "peak_pages_in_use": 0, "page_util_sum": 0.0,
+                      "reclaimed_pages": 0}
 
     def warmup(self, max_len: Optional[int] = None):
         """Compile every shape the serving loop can ever need.
@@ -453,14 +480,18 @@ class ContinuousServer:
         )
 
     def _sync_block_tables(self):
-        """Broadcast the host block tables into every layer's cache leaf
-        (skipped when no allocation changed since the last sync)."""
-        if not self._bt_dirty:
+        """Broadcast the host block tables into every layer's block-table
+        leaf — identified by the "page_table" logical axis, NOT by "batch"
+        (recurrent state rows carry "batch" too and must never be
+        overwritten). Skipped when no allocation changed since last sync,
+        and a no-op for pure-recurrent stacks (no pool, no tables)."""
+        if not self._bt_dirty or self.pool is None:
+            self._bt_dirty = False
             return
         tbl = jnp.asarray(self.pool.block_tables)
 
         def upd(leaf, axes):
-            if "batch" not in axes:
+            if "page_table" not in axes:
                 return leaf
             return jnp.broadcast_to(tbl, leaf.shape)
 
@@ -496,15 +527,48 @@ class ContinuousServer:
 
         return self._tree_map(sl)
 
-    def _merge_pools(self, new_view: PyTree):
-        """Take prefill-written pools back; keep the [B, M] block tables."""
+    def _merge_prefill(self, slot: int, new_view: PyTree):
+        """Fold a B=1 prefill result back into the batched cache, per leaf
+        kind: shared page pools ("pages" leaves) are taken wholesale (the
+        prefill wrote this slot's pages in place), recurrent state rows
+        ("batch" leaves) are row-inserted at ``slot`` — discarding them
+        would silently lose the state the prefill just computed — and the
+        block tables ("page_table") stay host-authoritative."""
         def mg(old, new, axes):
-            return old if "batch" in axes else new
+            if "page_table" in axes:
+                return old
+            if "batch" in axes:
+                ax = axes.index("batch")
+                idx = [slice(None)] * old.ndim
+                idx[ax] = slice(slot, slot + 1)
+                return old.at[tuple(idx)].set(new)
+            return new
 
         self.cache = jax.tree_util.tree_map(
             mg, self.cache, new_view, self.cache_axes,
             is_leaf=lambda x: hasattr(x, "shape"),
         )
+
+    def _reset_state(self, slot: int):
+        """Zero a slot's recurrent state rows before a fresh prefill.
+
+        Free slots keep riding the batched decode step with padding
+        tokens, so their state rows drift — a new admission must start
+        from the fresh-init state, which for every recurrent mixer is
+        all-zeros (models/recurrent.py init_*_state). No-op on
+        pure-attention stacks (their only "batch" leaf is the block
+        table, excluded by the "page_table" axis)."""
+        if self.state.slots is None:
+            return
+
+        def upd(leaf, axes):
+            if "batch" not in axes or "page_table" in axes:
+                return leaf
+            idx = [slice(None)] * leaf.ndim
+            idx[axes.index("batch")] = slice(slot, slot + 1)
+            return leaf.at[tuple(idx)].set(0)
+
+        self.cache = self._tree_map(upd)
 
     # -- request lifecycle ------------------------------------------------------
 
@@ -512,17 +576,13 @@ class ContinuousServer:
         toks = validate_prompt(req.prompt, self.max_seq,
                                self.truncate_prompts)
         if req.max_new_tokens > 0:
-            # lifetime page demand: prefill writes len(toks) positions and
-            # each further decode step writes one more, capped by the cache
-            demand = self.pool.pages_needed(
+            # lifetime demand per state kind: prefill writes len(toks)
+            # positions and each further decode step one more, capped by
+            # the cache — ServingState accounts pages and state slots
+            # separately (hybrid stacks need both)
+            self.state.validate_demand(
+                len(toks),
                 min(len(toks) + req.max_new_tokens - 1, self.max_seq))
-            if demand > self.pool.num_pages:
-                raise ValueError(
-                    f"request needs {demand} pages "
-                    f"({len(toks)} prompt + {req.max_new_tokens} new tokens "
-                    f"at page_size={self.page_size}) but the whole pool has "
-                    f"{self.pool.num_pages} — raise pool_pages or shrink "
-                    "the request")
         return toks
 
     def _sample(self, logits_row) -> int:
@@ -536,10 +596,12 @@ class ContinuousServer:
             return
         toks = ent.toks
         s = len(toks)
-        for logical in range(self.pool.pages_needed(s)):
-            if not self.pool.has_page(slot, logical):
-                self.pool.alloc(slot, logical)
-                self._bt_dirty = True
+        # fresh state for the slot: token pages for the prompt (attention)
+        # and a zeroed recurrent state row — the previous occupant's state
+        # must not leak into this prefill
+        self._reset_state(slot)
+        if self.state.prepare(slot, s):
+            self._bt_dirty = True
         self._sync_block_tables()
         # bucketed prefill: pad to the next bucket multiple (capped at the
         # cache depth). The dummy tail writes future positions — pages not
@@ -554,7 +616,7 @@ class ContinuousServer:
             self.params, {"tokens": jnp.asarray(padded)[None, :]},
             self._slot_view(slot), pos
         )
-        self._merge_pools(new_view)
+        self._merge_prefill(slot, new_view)
         nxt = self._sample(logits[0, s - 1])
         if ent.resumed:
             req.output.append(nxt)
@@ -584,8 +646,11 @@ class ContinuousServer:
         self._admit_counter += 1
 
     def _release(self, slot: int):
-        """Free a slot's pages (finish or preempt) and reset their pos rows."""
-        freed = self.pool.free_slot(slot)
+        """Free a slot's serving state (finish or preempt): token pages go
+        back to the pool with their pos rows reset; recurrent state is
+        simply dropped (the slot's rows are re-zeroed at the next admit —
+        free slots keep decoding padding, so zeroing now would not stick)."""
+        freed = self.state.release(slot)
         self._reset_pages(freed)
         if freed:
             self._bt_dirty = True
@@ -613,7 +678,18 @@ class ContinuousServer:
         most-recently-admitted slot on exhaustion. Terminates: each
         preemption frees >= 1 page (a live slot owns its prefill pages),
         and a slot whose own demand exceeds the pool was rejected at
-        validation."""
+        validation. Pure-recurrent stacks hold no pages — state slots are
+        always writable, so this is a no-op for them. Window-expired pages
+        are reclaimed FIRST: freeing dead pages relieves pool pressure
+        before any preemption fires."""
+        if self.pool is None:
+            return
+        for slot in self._active_slots():
+            dead = self.state.reclaim(slot, int(self.slot_pos[slot]))
+            if dead:
+                self._reset_pages(dead)
+                self._bt_dirty = True
+                self.stats["reclaimed_pages"] += len(dead)
         for slot in sorted(self._active_slots(),
                            key=lambda s: self.slot_seq[s]):
             if self.slot_free[slot]:
@@ -654,17 +730,17 @@ class ContinuousServer:
             else:
                 self.slot_last_tok[slot] = tok
         self.stats["steps"] += 1
-        self.stats["peak_pages_in_use"] = max(
-            self.stats["peak_pages_in_use"], self.pool.pages_in_use)
-        self.stats["page_util_sum"] += self.pool.utilization
+        if self.pool is not None:
+            self.stats["peak_pages_in_use"] = max(
+                self.stats["peak_pages_in_use"], self.pool.pages_in_use)
+            self.stats["page_util_sum"] += self.pool.utilization
 
     def _admit_from(self, queue):
         """Admit queue-front requests into free slots while pages last."""
         for slot in range(self.num_slots):
             while self.slot_free[slot] and queue:
                 head = queue[0]
-                if self.pool.num_free < self.pool.pages_needed(
-                        len(head.toks)):
+                if not self.state.admit_ok(len(head.toks)):
                     return  # wait for decode to free pages
                 self._admit(queue.popleft(), slot)
 
@@ -706,6 +782,23 @@ class ContinuousServer:
             # slot just took one, so the queue head can never fit at this
             # point — re-admission happens at the next loop-top _admit_from
             self._ensure_pages(queue)
+            if (self._preempt_steps
+                    and self.stats["steps"] in self._preempt_steps
+                    and self._active_slots()):
+                # forced preemption (deterministic test/bench hook): evict
+                # the most-recently-admitted slot exactly as pool pressure
+                # would — pure-recurrent stacks have no pool to exhaust,
+                # so this is the only way to exercise their restore path.
+                # Each index fires ONCE: the step counter does not advance
+                # when the victim was the only live slot, and re-firing on
+                # its resume would preempt forever.
+                self._preempt_steps.discard(self.stats["steps"])
+                victim = max(self._active_slots(),
+                             key=lambda s: self.slot_seq[s])
+                self._preempt(victim, queue)
+                if not self._active_slots():
+                    clock += 1
+                    continue
             self._step_all()
             clock += 1
         return list(requests)
@@ -766,10 +859,14 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
     )
     ap.add_argument(
         "--paged", action="store_true",
-        help="serve with the continuous-batching scheduler over a paged KV "
-             "cache (ContinuousServer: shared page pool, per-step "
-             "join/leave, preemption with recompute-restore; DESIGN.md "
-             "§10) instead of the slot-synchronous row-cache Server",
+        help="serve with the continuous-batching scheduler over per-mixer "
+             "serving state (ContinuousServer: shared page pool for "
+             "attention layers, fixed-size state slots for recurrent "
+             "layers, per-step join/leave, preemption with "
+             "recompute-restore; DESIGN.md §10–11) instead of the "
+             "slot-synchronous row-cache Server — works on every mixer "
+             "family, including recurrent (rwkv6) and hybrid "
+             "(recurrentgemma) stacks",
     )
     ap.add_argument(
         "--page-size", type=int, default=16, metavar="TOKENS",
@@ -855,6 +952,9 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
             apply_mode=args.apply_mode, rules=rules,
             param_axes=axes if rules is not None else None,
             truncate_prompts=args.truncate_prompts)
+        # per-mixer composition up front: what admission will account for
+        # (page demand, state slots) before any traffic arrives
+        print(f"serving state: {server.state.describe()}")
     else:
         server = Server(model, params, num_slots=4, max_seq=128,
                         apply_mode=args.apply_mode, rules=rules,

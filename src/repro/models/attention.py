@@ -266,8 +266,12 @@ def init_gqa_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
             jnp.full((num_pages, page_size), -GLOBAL_WINDOW, jnp.int32),
             ("pages", None),
         ),
+        # "page_table" marks the block-table leaf for the serving layer's
+        # host-side surgery (sync/merge/reset) — recurrent state leaves
+        # share the "batch" axis, so "batch" alone no longer identifies it
         "block_table": LogicalParam(
-            jnp.full((batch, max_pages), -1, jnp.int32), ("batch", None)
+            jnp.full((batch, max_pages), -1, jnp.int32),
+            ("batch", "page_table")
         ),
     }
 
@@ -448,6 +452,7 @@ def init_mla_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
             ("pages", None),
         ),
         "block_table": LogicalParam(
-            jnp.full((batch, max_pages), -1, jnp.int32), ("batch", None)
+            jnp.full((batch, max_pages), -1, jnp.int32),
+            ("batch", "page_table")
         ),
     }

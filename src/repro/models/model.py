@@ -46,10 +46,16 @@ class Model:
 
     def init_paged_cache(self, batch: int, max_seq: int, page_size: int,
                          num_pages: int) -> PyTree:
-        """Paged serving cache (page pools + block tables); see
-        transformer.init_paged_cache and launch/paging.py."""
+        """Paged serving cache: attention layers get page pools + block
+        tables, recurrent layers get per-slot state slots; see
+        transformer.init_paged_cache and launch/paging.py (DESIGN.md §11)."""
         return tfm.init_paged_cache(self.cfg, batch, max_seq, page_size,
                                     num_pages)
+
+    def serving_layout(self):
+        """``(mixer, window)`` per layer — feeds ServingState's per-mixer
+        demand accounting in the continuous-batching scheduler."""
+        return tfm.mixer_layout(self.cfg)
 
     # -- compute ---------------------------------------------------------------
 

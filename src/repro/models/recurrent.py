@@ -113,6 +113,14 @@ def rglru_block(
 
 
 def init_rglru_state(cfg: ModelConfig, batch: int) -> State:
+    """Zeroed RG-LRU decode state: hidden vector + causal-conv taps.
+
+    Doubles as the PAGED serving state (DESIGN.md §11): with
+    ``batch = num_slots`` each row is one slot's fixed-size state slot
+    (``launch/paging.py::RecurrentSlots``) — there is no sequence axis to
+    page. All-zeros IS the fresh-sequence state, which is what lets the
+    serving loop reset a slot by zeroing its rows at admit and restore a
+    preempted request bitwise by recomputing the prefill scan."""
     w = cfg.lru_width or cfg.d_model
     return {
         "h": LogicalParam(jnp.zeros((batch, w), jnp.float32), ("batch", "lru")),
@@ -256,6 +264,11 @@ def rwkv6_channel_mix(
 
 
 def init_rwkv6_state(cfg: ModelConfig, batch: int) -> State:
+    """Zeroed RWKV6 decode state: per-head wkv matrix + token-shift rows.
+
+    Like :func:`init_rglru_state`, these arrays double as per-slot state
+    slots under paged serving (DESIGN.md §11) — O(1) per sequence,
+    all-zeros at a fresh sequence, recompute-restored after preemption."""
     d = cfg.d_model
     h = d // _RWKV_HEAD
     return {

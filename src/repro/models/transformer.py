@@ -43,9 +43,16 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 
 
+# Every mixer kind a LayerSpec can name. The serving layer builds one
+# StatePage per kind family (launch/paging.py) and scripts/
+# check_parity_matrix.py requires a `# PARITY: mixer/<kind>` differential
+# serving test per entry — adding a kind here fails CI until both exist.
+MIXER_KINDS = ("gqa", "mla", "rglru", "rwkv")
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
-    mixer: str  # "gqa" | "mla" | "rglru" | "rwkv"
+    mixer: str  # one of MIXER_KINDS
     ffn: str  # "ffn" | "moe" | "rwkv_cm"
     window: int = attn.GLOBAL_WINDOW
     rope_theta: float = 10000.0
@@ -97,6 +104,13 @@ def layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
             f = "moe"
         specs.append(LayerSpec(mixer=mixer, ffn=f, window=window, rope_theta=theta))
     return specs
+
+
+def mixer_layout(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """``(mixer, window)`` per layer in execution order — the input to
+    :class:`~repro.launch.paging.ServingState` (host-side demand accounting
+    without pulling model code into the allocator)."""
+    return [(s.mixer, s.window) for s in layer_specs(cfg)]
 
 
 def build_plan(cfg: ModelConfig) -> List[Segment]:
@@ -308,16 +322,21 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
     Same segment/slot tree shape as :func:`init_cache`, so the forward pass
     is untouched — the attention mixers detect the paged layout by the
-    ``block_table`` key. Every layer gets its own ``[num_pages, page_size,
-    ...]`` pool but the SAME logical->physical mapping (one host-side
-    PagePool drives every layer's table), mirroring vLLM's layout. Sliding-
-    window layers keep full-length logical tables — the window is enforced
-    by masking, not by ring reuse, so paged pools trade the ring cache's
-    window-bounded storage for cross-request page sharing.
+    ``block_table`` key. Every attention layer gets its own ``[num_pages,
+    page_size, ...]`` pool but the SAME logical->physical mapping (one
+    host-side PagePool drives every layer's table), mirroring vLLM's
+    layout. Sliding-window layers keep full-length logical tables — the
+    window is enforced by masking, not by ring reuse, so paged pools trade
+    the ring cache's window-bounded storage for cross-request page sharing
+    (the serving loop reclaims window-expired pages instead,
+    launch/paging.py::TokenPages.reclaim).
 
     Recurrent mixers (rglru/rwkv) hold O(1) per-slot states with no
-    sequence axis to page; serving them continuously needs row-granular
-    state surgery instead, so they are rejected here.
+    sequence axis to page — each serving slot gets one fixed-size state
+    slot, identical to the row cache's state rows (the StatePage split in
+    DESIGN.md §11). ``batch`` is the slot count for those leaves, and the
+    serving loop does row-granular surgery on them (zero at admit,
+    row-insert after prefill).
     """
     plan = build_plan(cfg)
     max_pages = -(-max_seq // page_size)
@@ -332,11 +351,13 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_seq: int,
             elif spec.mixer == "mla":
                 c = attn.init_mla_paged_cache(
                     cfg, batch, num_pages, page_size, max_pages, dt)
+            elif spec.mixer == "rglru":
+                c = rec.init_rglru_state(cfg, batch)
+            elif spec.mixer == "rwkv":
+                c = rec.init_rwkv6_state(cfg, batch)
             else:
-                raise NotImplementedError(
-                    f"paged KV cache supports attention mixers only "
-                    f"(gqa/mla), got {spec.mixer!r} — serve recurrent "
-                    "models with the row-cache Server")
+                raise ValueError(
+                    f"unknown mixer {spec.mixer!r} (known: {MIXER_KINDS})")
             if seg.repeats > 1:
                 c = jax.tree_util.tree_map(
                     lambda p: LogicalParam(

@@ -9,7 +9,7 @@ single CPU device.
 Logical axes used across the framework:
   batch, seq, embed(d_model), vocab, heads, kv_heads, head_dim, mlp(d_ff),
   experts, expert_cap, layers(stacked scan dim), lru, rank(resmoe), kv_lora,
-  q_lora, conv, codebooks, stats
+  q_lora, conv, codebooks, stats, page_table(paged-cache block tables)
 """
 from __future__ import annotations
 
@@ -51,6 +51,9 @@ DEFAULT_RULES: Dict[str, Optional[str]] = {
     "expert_tok": ("data",),
     "expert_group": None,
     "cache_seq": "model",   # sequence-sharded KV cache for decode
+    # paged-cache block tables [num_slots, max_pages]: tiny int32 maps,
+    # replicated — also the serving layer's marker axis for table surgery
+    "page_table": None,
     "layers": None,
     "lru": "model",
     "kv_lora": None,

@@ -49,13 +49,16 @@ def test_prefill_then_decode_matches_forward(arch, rng):
         )
 
 
-@pytest.mark.parametrize("arch", ["granite-8b", "deepseek-v3-671b"])
+@pytest.mark.parametrize("arch", ["granite-8b", "deepseek-v3-671b",
+                                  "recurrentgemma-9b", "rwkv6-1.6b"])
 def test_paged_cache_matches_row_cache_bitwise(arch, rng):
-    """The paged KV layout (page pools + block tables, DESIGN.md §10) must
-    reproduce the row cache BITWISE for both attention families: masked
-    columns contribute exact softmax zeros, so prefill+decode logits are
-    identical arrays, not merely close — that exactness is what lets the
-    serving differential suite demand token identity."""
+    """The paged layout (page pools + block tables for attention layers,
+    per-slot state slots for recurrent layers — DESIGN.md §10–11) must
+    reproduce the row cache BITWISE across the mixer families: masked
+    columns contribute exact softmax zeros and recurrent state slots ARE
+    row state, so prefill+decode logits are identical arrays, not merely
+    close — that exactness is what lets the serving differential suite
+    demand token identity."""
     cfg = reduced_config(arch)
     model = build_model(cfg)
     params, _ = model.init_split(jax.random.PRNGKey(0))
@@ -67,12 +70,14 @@ def test_paged_cache_matches_row_cache_bitwise(arch, rng):
     paged_cache, paged_axes = split_logical(
         model.init_paged_cache(B, max_seq, ps, num_pages=2 * B * max_seq // ps))
     # identity-ish block tables: slot b owns pages [b*M, (b+1)*M) in logical
-    # order — any permutation works, this one is easy to eyeball
+    # order — any permutation works, this one is easy to eyeball. Tables are
+    # identified by the "page_table" logical axis: recurrent state leaves
+    # also carry "batch" and must stay zero-initialized.
     m = max_seq // ps
     tbl = jnp.arange(B * m, dtype=jnp.int32).reshape(B, m)
     paged_cache = jax.tree_util.tree_map(
         lambda leaf, axes: (jnp.broadcast_to(tbl, leaf.shape)
-                            if "batch" in axes else leaf),
+                            if "page_table" in axes else leaf),
         paged_cache, paged_axes, is_leaf=lambda x: hasattr(x, "shape"))
 
     pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
@@ -92,12 +97,31 @@ def test_paged_cache_matches_row_cache_bitwise(arch, rng):
         np.testing.assert_array_equal(np.asarray(lr), np.asarray(lp))
 
 
-def test_paged_cache_rejects_recurrent_mixers():
-    """Recurrent states have no sequence axis to page — a clear error, not
-    a silently wrong cache."""
-    cfg = reduced_config("rwkv6-1.6b")
-    with pytest.raises(NotImplementedError, match="paged"):
-        build_model(cfg).init_paged_cache(2, 32, 8, 16)
+@pytest.mark.parametrize("arch,n_tables,n_state",
+                         [("rwkv6-1.6b", 0, 3),
+                          ("recurrentgemma-9b", 1, 2)])
+def test_paged_cache_recurrent_state_slots(arch, n_tables, n_state):
+    """Recurrent mixers get fixed-size per-slot state slots in the paged
+    cache (they used to be rejected): no sequence axis to page, so the
+    leaves match the row cache's state rows exactly, while hybrid stacks
+    still carry block tables for their attention layers. ``batch`` on a
+    state leaf is the slot count."""
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    num_slots = 3
+    cache, axes = split_logical(model.init_paged_cache(num_slots, 32, 8, 16))
+    flat_a = jax.tree_util.tree_leaves(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_v = jax.tree_util.tree_leaves(cache)
+    tables = [a for a in flat_a if "page_table" in a]
+    state = [(v, a) for v, a in zip(flat_v, flat_a)
+             if "batch" in a and "page_table" not in a]
+    # scanned segments stack leaves along "layers"; count leaf KINDS
+    assert len(tables) == n_tables  # block tables per pattern slot
+    assert len(state) >= n_state  # h/conv or wkv/shift_att/shift_ffn
+    for v, a in state:
+        assert v.shape[a.index("batch")] == num_slots
+        assert not v.any()  # fresh state is all-zeros (reset contract)
 
 
 def test_ring_buffer_windowed_cache(rng):

@@ -11,7 +11,8 @@ CI image has it); a seeded numpy fuzzer covers the bare-venv tier-1 run.
 import numpy as np
 import pytest
 
-from repro.launch.paging import PagePool
+from repro.launch.paging import (PagePool, RecurrentSlots, ServingState,
+                                 TokenPages)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -61,6 +62,31 @@ def test_alloc_errors():
     pool.check()
 
 
+def test_free_page_roundtrip():
+    pool = PagePool(num_pages=3, page_size=4, num_slots=2, max_seq=16)
+    p0 = pool.alloc(0, 0)
+    p1 = pool.alloc(0, 1)
+    assert pool.free_page(0, 0) == p0
+    assert not pool.has_page(0, 0) and pool.has_page(0, 1)
+    assert pool.num_free == 2
+    pool.check()
+    # LIFO reuse: the reclaimed physical page comes straight back
+    assert pool.alloc(1, 0) == p0
+    assert pool.owner[p1] == 0  # untouched neighbour
+    pool.check()
+
+
+def test_free_page_errors():
+    pool = PagePool(num_pages=2, page_size=4, num_slots=2, max_seq=8)
+    with pytest.raises(RuntimeError, match="not mapped"):
+        pool.free_page(0, 0)
+    with pytest.raises(ValueError, match="slot"):
+        pool.free_page(5, 0)
+    with pytest.raises(ValueError, match="logical"):
+        pool.free_page(0, 99)
+    pool.check()
+
+
 def test_free_slot_is_idempotent_and_isolated():
     pool = PagePool(num_pages=4, page_size=4, num_slots=3, max_seq=8)
     pool.alloc(0, 0)
@@ -84,7 +110,7 @@ def _run_random_ops(pool: PagePool, choose, n_ops: int):
     handed_out = set()  # every page currently on loan, across all slots
     shadow = {s: set() for s in range(pool.num_slots)}  # slot -> owned
     for _ in range(n_ops):
-        op = choose("op", ["alloc", "alloc", "free"])
+        op = choose("op", ["alloc", "alloc", "free", "reclaim"])
         slot = choose("slot", list(range(pool.num_slots)))
         if op == "alloc":
             unmapped = [l for l in range(pool.max_pages_per_slot)
@@ -101,6 +127,18 @@ def _run_random_ops(pool: PagePool, choose, n_ops: int):
                 assert page not in handed_out
                 handed_out.add(page)
                 shadow[slot].add(page)
+        elif op == "reclaim":  # window expiry frees single mapped pages
+            mapped = [l for l in range(pool.max_pages_per_slot)
+                      if pool.has_page(slot, l)]
+            if not mapped:
+                with pytest.raises(RuntimeError, match="not mapped"):
+                    pool.free_page(slot, 0)
+                continue
+            logical = choose("logical", mapped)
+            page = pool.free_page(slot, logical)
+            assert page in shadow[slot]
+            handed_out.discard(page)
+            shadow[slot].discard(page)
         else:  # free (finish or preempt — the pool cannot tell them apart)
             freed = pool.free_slot(slot)
             assert set(freed) == shadow[slot]
@@ -168,3 +206,85 @@ if HAVE_HYPOTHESIS:
             assert (pool.block_tables == -1).all()
             assert (pool.owner == -1).all()
             pool.check()
+
+
+# -- StatePage layer: TokenPages / RecurrentSlots / ServingState --------------
+
+
+def test_token_pages_reclaim_boundary_math():
+    """A page is window-dead iff its LAST token is already invisible to the
+    next query: (logical+1)*page_size - 1 <= next_pos - window."""
+    tp = TokenPages(num_pages=8, page_size=4, num_slots=1, max_seq=32,
+                    window=8)
+    assert tp.reclaimable
+    for logical in range(4):
+        tp.pool.alloc(0, logical)
+    # key k is visible to query q iff q - k < window, so k dies once every
+    # future query q >= next_pos has q - k >= window, i.e. k <= next_pos - 8.
+    # Page 0 covers keys [0,3]: its last key 3 dies exactly at next_pos=11.
+    assert tp.reclaim(0, 10) == []
+    dead = tp.reclaim(0, 11)
+    assert len(dead) == 1 and not tp.pool.has_page(0, 0)
+    tp.check()
+    # idempotent: already-freed pages are not re-reported
+    assert tp.reclaim(0, 11) == []
+    # page 1 covers keys [4,7]: last key 7 dies at next_pos=15
+    assert tp.reclaim(0, 14) == []
+    assert len(tp.reclaim(0, 15)) == 1
+    tp.check()
+
+
+def test_token_pages_reclaim_off_for_global_window():
+    tp = TokenPages(num_pages=4, page_size=4, num_slots=1, max_seq=16,
+                    window=None)
+    tp.pool.alloc(0, 0)
+    assert not tp.reclaimable
+    assert tp.reclaim(0, 16) == []  # global attention never expires keys
+    wide = TokenPages(num_pages=4, page_size=4, num_slots=1, max_seq=16,
+                      window=16)
+    assert not wide.reclaimable  # window >= max_seq -> nothing ever dies
+
+
+def test_serving_state_hybrid_demand():
+    layout = [("rglru", 8), ("gqa", 8), ("rglru", 8), ("gqa", 64)]
+    ss = ServingState(layout, num_slots=2, max_seq=32, page_size=4)
+    assert ss.pages is not None and ss.slots is not None
+    d = ss.demand(9)
+    assert d == {"token_pages": 3, "state_slots": 1}
+    # reclaim window is the max across attention layers (shared tables)
+    assert ss.pages.window == 64
+    assert not ss.pages.reclaimable  # 64 >= max_seq 32
+    assert "token_pages" in ss.describe() and "recurrent_slots" in ss.describe()
+
+
+def test_serving_state_pure_recurrent_has_no_pool():
+    ss = ServingState([("rwkv", 8)] * 3, num_slots=2, max_seq=32, page_size=4)
+    assert ss.pool is None and ss.slots is not None
+    assert ss.demand(100) == {"token_pages": 0, "state_slots": 1}
+    assert ss.admit_ok(100)  # state slot is pre-reserved with the slot
+    assert ss.prepare(0, 5) is False  # nothing device-side to sync
+    assert ss.release(0) == []
+    ss.check()
+
+
+def test_serving_state_rejects_unknown_mixer():
+    with pytest.raises(ValueError, match="mixer"):
+        ServingState([("mamba", 8)], num_slots=1, max_seq=8, page_size=4)
+
+
+def test_serving_state_validate_demand_message():
+    ss = ServingState([("gqa", 64)], num_slots=2, max_seq=16, page_size=4,
+                      pool_pages=2)
+    ss.validate_demand(4, 8)  # 2 pages: fits exactly
+    with pytest.raises(ValueError, match="pool_pages"):
+        ss.validate_demand(4, 12)  # needs 3 pages > pool of 2
+
+
+def test_recurrent_slots_occupancy():
+    rs = RecurrentSlots(num_slots=3, num_layers=2)
+    assert rs.demand(999) == 1
+    assert rs.prepare(1, 7) is False
+    assert rs.occupied[1] and not rs.occupied[0]
+    assert rs.release(1) == []
+    assert not rs.occupied.any()
+    rs.check()
