@@ -28,7 +28,7 @@ import traceback
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: t1,t3,t4,f4,t10,t11,t12,serve,"
+                    help="comma list: t1,t3,t4,f4,t10,t11,t12,serve,spec,"
                          "roofline,xl")
     ap.add_argument("--fast", action="store_true",
                     help="skip the training-backed downstream eval")
@@ -52,6 +52,7 @@ def main() -> int:
         ("t11", runtime.run),
         ("t12", flops_table.run),
         ("serve", runtime.serve_suite),
+        ("spec", runtime.spec_decode_comparison),
         ("roofline", analyze.run),
     ]
     if not args.fast:

@@ -11,15 +11,19 @@ Purely static (no jax import — runs in ~10 ms like check_docs.py):
   * the required mixer rows come from ``MIXER_KINDS``
     (``models/transformer.py``) — adding a mixer fails CI until the zoo
     differential suite covers it end-to-end through ContinuousServer;
+  * the required speculative-decoding rows come from ``SPEC_PARITY_MODES``
+    (``launch/spec.py``) crossed with ``STORE_DTYPES`` — every restore-free
+    verifier path x store dtype needs a spec-vs-plain token-identity test;
   * coverage is declared in test docstrings/comments with the markers
 
         # PARITY: <apply_mode>/<store_dtype>
         # PARITY: mixer/<mixer_kind>
+        # PARITY: spec/<apply_mode>-<store_dtype>
 
     placed on the test that asserts that combination's output parity
     (e.g. tests/test_quant.py covers the int8 column, tests/test_moe.py
     and tests/test_moe_token.py the fp32 one, tests/test_serve.py's zoo
-    suite the mixer rows).
+    suite the mixer rows and its spec_k parametrization the spec rows).
 
 Run directly or via ``scripts/ci.sh docs`` / ``scripts/ci.sh all``.
 """
@@ -56,6 +60,11 @@ def main() -> int:
     kinds = _tuple_of_strings(tfm.read_text(), "MIXER_KINDS", tfm)
     required |= {("mixer", k) for k in kinds}
 
+    spec = ROOT / "src/repro/launch/spec.py"
+    spec_modes = _tuple_of_strings(spec.read_text(), "SPEC_PARITY_MODES",
+                                   spec)
+    required |= {("spec", f"{m}-{d}") for m in spec_modes for d in dtypes}
+
     covered = {}
     for test in sorted((ROOT / "tests").glob("test_*.py")):
         for m, d in MARKER_RE.findall(test.read_text()):
@@ -71,13 +80,18 @@ def main() -> int:
             print(f"FAIL no serving-differential parity test declared for "
                   f"mixer kind {d!r} — add a zoo test and mark it "
                   f"'# PARITY: mixer/{d}'")
+        elif m == "spec":
+            print(f"FAIL no speculative-decoding parity test declared for "
+                  f"{d} — add a spec_k differential and mark it "
+                  f"'# PARITY: spec/{d}'")
         else:
             print(f"FAIL no parity test declared for apply_mode={m} "
                   f"store_dtype={d} — add one and mark it '# PARITY: {m}/{d}'")
     if unknown or missing:
         return 1
     print(f"parity matrix OK: {len(modes)} apply modes x {len(dtypes)} "
-          f"store dtypes + {len(kinds)} mixer kinds all covered")
+          f"store dtypes + {len(kinds)} mixer kinds + {len(spec_modes)} "
+          f"spec verifier modes x {len(dtypes)} dtypes all covered")
     return 0
 
 

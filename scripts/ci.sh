@@ -17,6 +17,12 @@
 #                            # every mixer kind (gqa/mla/rglru/rwkv, hybrid,
 #                            # compressed-MoE) through ContinuousServer vs
 #                            # the sync oracle with forced preemption
+#   scripts/ci.sh spec       # barycenter-draft speculative decoding
+#                            # differential matrix: spec_k > 0 must be
+#                            # token-identical to plain decode across both
+#                            # restore-free verifier paths, both store
+#                            # dtypes, forced preemption mid-speculation
+#                            # and page-boundary rejections
 #   scripts/ci.sh docs       # broken md links / stale README references /
 #                            # apply-mode x store-dtype parity-test matrix
 #   scripts/ci.sh all        # every tier above, tier-1 first
@@ -71,7 +77,13 @@ assert any("quant_roofline" in k for k in quant), \
     f"no quant roofline rows in bench artifact ({len(rows)} rows)"
 assert any("int8" in k for k in quant), \
     f"no int8 comparison rows in bench artifact ({len(rows)} rows)"
-print(f"bench artifact OK: {len(quant)} quantized rows of {len(rows)}")
+# the speculative-decoding comparison (accepted-tokens/step + tokens/s per
+# spec_k) must land too — the suite itself asserts the >1 acceptance floor
+spec = [k for k in rows if k.startswith("SERVE/spec/")]
+assert any("accepted_tok_per_step" in k for k in spec), \
+    f"no spec acceptance rows in bench artifact ({len(rows)} rows)"
+print(f"bench artifact OK: {len(quant)} quantized rows, "
+      f"{len(spec)} spec rows of {len(rows)}")
 PY
 }
 
@@ -95,6 +107,15 @@ zoo() {
     python -m pytest -q -m zoo tests/
 }
 
+# Spec tier: speculative decoding as a pure latency knob — every spec_k>0
+# parametrization of the differential suites (launch/spec.py drafter +
+# rollback against the plain-decode oracle). check_parity_matrix.py
+# requires a `# PARITY: spec/<mode>-<dtype>` marker per SPEC_PARITY_MODES
+# x STORE_DTYPES cell, so a new verifier path cannot ship uncovered.
+spec() {
+    python -m pytest -q -m spec tests/
+}
+
 # Docs tier: intra-repo markdown links must resolve, README code blocks
 # must reference real modules/paths/flags, and every
 # (apply_mode, store_dtype) combination must declare a parity test
@@ -111,7 +132,8 @@ case "${1:-tier1}" in
     bench)    bench ;;
     soak)     soak ;;
     zoo)      zoo ;;
+    spec)     spec ;;
     docs)     docs ;;
-    all)      tier1; kernels; multidev; bench; soak; zoo; docs ;;
-    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|zoo|docs|all]" >&2; exit 2 ;;
+    all)      tier1; kernels; multidev; bench; soak; zoo; spec; docs ;;
+    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|zoo|spec|docs|all]" >&2; exit 2 ;;
 esac

@@ -83,7 +83,12 @@ class ResMoEConfig:
     # (ragged capacity-free per-token path — no dispatch buffer; the decode
     # hot path, DESIGN.md §4.4). The restore-free modes switch to
     # fused_token automatically for small token batches — see
-    # MoEConfig.token_path_max_tokens.
+    # MoEConfig.token_path_max_tokens. "center_only" drops the per-expert
+    # residuals entirely and runs every expert as the shared barycenter
+    # center (gate-weighted, no u/v gathers, no dispatch) — NOT a serving
+    # path: it is the drafter of the speculative-decoding layer
+    # (launch/spec.py, DESIGN.md §12), whose proposals a full-path
+    # verifier accepts or rejects token-by-token.
     apply_mode: str = "restored"
     # Beyond-paper: treat per-layer dense FFNs as the expert population.
     scope: str = "experts"  # "experts" | "cross_layer"
@@ -96,7 +101,7 @@ class ResMoEConfig:
     store_dtype: str = "fp32"
 
     APPLY_MODES = ("restored", "fused", "fused_shared", "fused_kernel",
-                   "fused_token")
+                   "fused_token", "center_only")
     STORE_DTYPES = ("fp32", "int8")
 
     def __post_init__(self):

@@ -142,6 +142,22 @@ class PagePool:
         self.block_tables[slot, logical] = -1
         return page
 
+    def truncate_slot(self, slot: int, keep_pages: int) -> List[int]:
+        """Release every page mapped at logical index >= ``keep_pages``,
+        keeping the slot live — speculative-decode rollback (DESIGN.md
+        §12): a rejected draft's pages unmap by block-table truncation, no
+        page copies. The kept prefix is untouched; freed entries go back
+        to -1 so paged_valid masks them exactly like a window hole."""
+        if not (0 <= slot < self.num_slots):
+            raise ValueError(f"slot {slot} out of range [0, {self.num_slots})")
+        if keep_pages < 0:
+            raise ValueError(f"keep_pages must be >= 0, got {keep_pages}")
+        freed = []
+        for logical in range(keep_pages, self.max_pages_per_slot):
+            if self.block_tables[slot, logical] >= 0:
+                freed.append(self.free_page(slot, logical))
+        return freed
+
     # -- self-check (used by the property tests and the soak tier) --------------
 
     def check(self) -> None:
@@ -242,6 +258,11 @@ class TokenPages(StatePage):
 
     def release(self, slot: int) -> List[int]:
         return self.pool.free_slot(slot)
+
+    def truncate(self, slot: int, num_tokens: int) -> List[int]:
+        """Roll a slot back to ``num_tokens`` kept positions: free every
+        page wholly past the accepted frontier (speculative rollback)."""
+        return self.pool.truncate_slot(slot, self.pool.pages_needed(num_tokens))
 
     def reclaim(self, slot: int, next_pos: int) -> List[int]:
         """Free pages whose every token is outside the sliding window for
@@ -400,6 +421,15 @@ class ServingState:
         for m in self.members():
             freed.extend(m.reclaim(slot, next_pos))
         return freed
+
+    def truncate(self, slot: int, num_tokens: int) -> List[int]:
+        """Speculative-decode rollback (launch/spec.py, DESIGN.md §12):
+        free the token pages past the accepted frontier. Recurrent state
+        has no per-position axis to roll back — spec decoding refuses
+        recurrent stacks at construction, so only token pages get here."""
+        if self.pages is None:
+            return []
+        return self.pages.truncate(slot, num_tokens)
 
     def check(self) -> None:
         for m in self.members():

@@ -139,6 +139,7 @@ class Server:
         rules: Optional[ShardingRules] = None,
         param_axes: Optional[PyTree] = None,
         truncate_prompts: bool = False,
+        spec_k: int = 0,
     ):
         self.model = model
         self.rules = rules
@@ -153,6 +154,19 @@ class Server:
         self.truncate_prompts = truncate_prompts
         self.greedy = greedy
         self.rng = jax.random.PRNGKey(seed)
+        # spec_k >= 2: barycenter-draft speculative decoding (launch/
+        # spec.py, DESIGN.md §12) — each round drafts k-1 tokens through
+        # the center-only path and verifies them in one T=k forward.
+        # spec_k in {0, 1} is plain decode (a 1-token round IS a decode
+        # step). Greedy-only; outputs are token-identical either way.
+        self.spec_k = int(spec_k)
+        self.spec_stats = {"rounds": 0, "drafted": 0, "accepted": 0}
+        self.drafter = None
+        if self.spec_k >= 2:
+            from .spec import CenterDrafter, validate_spec_model
+
+            validate_spec_model(model, params, greedy)
+            self.drafter = CenterDrafter(model, rules=rules)
 
         cache_l = model.init_cache(num_slots, max_seq)
         self.cache, self.cache_axes = split_logical(cache_l)
@@ -209,6 +223,14 @@ class Server:
     def _validate_prompt(self, req: Request) -> np.ndarray:
         return validate_prompt(req.prompt, self.max_seq, self.truncate_prompts)
 
+    def _sample(self, logits_row) -> int:
+        """Sample one token, advancing the server's rng stream in the
+        helper — every call site routes through here so the key-splitting
+        discipline (and any future temperature/top-p change) cannot drift
+        per site."""
+        self.rng, nxt = sample_tokens(self.rng, logits_row, self.greedy)
+        return int(nxt)
+
     def _admit(self, req: Request, slot: int):
         if req.max_new_tokens <= 0:
             req.output = []
@@ -220,8 +242,7 @@ class Server:
         logits, row = self._prefill(
             self.params, {"tokens": jnp.asarray(toks)[None, :]}, row, pos
         )
-        self.rng, nxt = sample_tokens(self.rng, logits[0, -1], self.greedy)
-        nxt = int(nxt)
+        nxt = self._sample(logits[0, -1])
         req.output = [nxt]
         # prefill already emitted one token — a max_new_tokens=1 (or
         # immediate-EOS) request must finish here, never taking a decode
@@ -236,32 +257,77 @@ class Server:
         self.slot_req[slot] = req
         self.slot_last_tok[slot] = nxt
 
+    def _emit(self, slot: int, tok: int) -> bool:
+        """Record one generated token for ``slot``: advance the write
+        frontier, append to the request, apply the done rules (max_new /
+        EOS / cache exhausted). Returns True when the request finished
+        (slot freed). slot_pos is the NEXT position to write (already
+        incremented here), so the cache is exhausted only at == max_seq;
+        the old `>= max_seq - 1` left the last writable position unused
+        and truncated sequences one token early."""
+        req = self.slot_req[slot]
+        self.slot_pos[slot] += 1
+        req.output.append(tok)
+        done = len(req.output) >= req.max_new_tokens or (
+            req.eos_id is not None and tok == req.eos_id
+        ) or self.slot_pos[slot] >= self.max_seq
+        if done:
+            self.slot_free[slot] = True
+            self.slot_req[slot] = None
+        else:
+            self.slot_last_tok[slot] = tok
+        return done
+
     def _step_all(self):
+        if self.spec_k >= 2:
+            self._spec_step_all()
+        else:
+            self._plain_step_all()
+
+    def _plain_step_all(self):
         toks = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
         pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
         logits, self.cache = self._decode(self.params, {"tokens": toks},
                                           self.cache, pos)
-        self.rng, nxt = sample_tokens(self.rng, logits[:, -1, :], self.greedy)
-        nxt = np.asarray(nxt)
+        logits = np.asarray(logits[:, -1, :])
         for slot in range(self.num_slots):
             if self.slot_free[slot]:
                 continue
-            req = self.slot_req[slot]
-            self.slot_pos[slot] += 1
-            tok = int(nxt[slot])
-            req.output.append(tok)
-            # slot_pos is the NEXT position to write (already incremented
-            # above), so the cache is exhausted only at == max_seq; the
-            # old `>= max_seq - 1` left the last writable position unused
-            # and truncated sequences one token early.
-            done = len(req.output) >= req.max_new_tokens or (
-                req.eos_id is not None and tok == req.eos_id
-            ) or self.slot_pos[slot] >= self.max_seq
-            if done:
-                self.slot_free[slot] = True
-                self.slot_req[slot] = None
-            else:
-                self.slot_last_tok[slot] = tok
+            self._emit(slot, self._sample(logits[slot]))
+
+    def _spec_step_all(self):
+        """One speculative round: draft k-1 center-only steps, verify all
+        k tokens in one full-path forward, emit the oracle prefix
+        (DESIGN.md §12). The round size shrinks to the tightest cache
+        headroom across live slots — a position past max_seq would wrap
+        the ring cache into live entries — and a k<2 round degenerates to
+        a plain decode step."""
+        from .spec import accept_lengths
+
+        active = [s for s in range(self.num_slots) if not self.slot_free[s]]
+        k = min([self.spec_k]
+                + [self.max_seq - int(self.slot_pos[s]) for s in active])
+        if k < 2:
+            self._plain_step_all()
+            return
+        drafts, self.cache = self.drafter.draft(
+            self.params, self.cache, self.slot_last_tok, self.slot_pos,
+            k - 1)
+        ver_toks = np.concatenate(
+            [np.asarray(self.slot_last_tok)[:, None], drafts], axis=1)
+        ver_pos = np.asarray(self.slot_pos)[:, None] + np.arange(k)[None, :]
+        logits, self.cache = self._decode(
+            self.params, {"tokens": jnp.asarray(ver_toks, jnp.int32)},
+            self.cache, jnp.asarray(ver_pos, jnp.int32))
+        oracle = np.asarray(jnp.argmax(logits, axis=-1))
+        acc = accept_lengths(drafts, oracle)
+        self.spec_stats["rounds"] += 1
+        for slot in active:
+            self.spec_stats["drafted"] += k - 1
+            self.spec_stats["accepted"] += int(acc[slot])
+            for i in range(int(acc[slot]) + 1):
+                if self._emit(slot, int(oracle[slot, i])):
+                    break
 
     def serve(self, requests: Sequence[Request]) -> List[Request]:
         """Run the continuous-batching loop until all requests finish."""
@@ -359,6 +425,7 @@ class ContinuousServer:
         truncate_prompts: bool = False,
         prefill_bucket: Optional[int] = None,
         preempt_steps: Optional[Sequence[int]] = None,
+        spec_k: int = 0,
     ):
         from .paging import ServingState
 
@@ -441,7 +508,20 @@ class ContinuousServer:
         self._bt_dirty = False
         self.stats = {"steps": 0, "preemptions": 0, "tokens": 0,
                       "peak_pages_in_use": 0, "page_util_sum": 0.0,
-                      "reclaimed_pages": 0}
+                      "reclaimed_pages": 0, "spec_rounds": 0,
+                      "spec_drafted": 0, "spec_accepted": 0,
+                      "spec_boundary_rejects": 0}
+        # barycenter-draft speculative decoding (launch/spec.py,
+        # DESIGN.md §12); spec_k in {0, 1} is plain decode. One spec
+        # round counts as one stats["steps"] tick so preempt_steps and
+        # arrival traces keep their meaning.
+        self.spec_k = int(spec_k)
+        self.drafter = None
+        if self.spec_k >= 2:
+            from .spec import CenterDrafter, validate_spec_model
+
+            validate_spec_model(model, params, greedy)
+            self.drafter = CenterDrafter(model, rules=rules)
 
     def warmup(self, max_len: Optional[int] = None):
         """Compile every shape the serving loop can ever need.
@@ -470,6 +550,17 @@ class ContinuousServer:
         toks = jnp.zeros((self.num_slots, 1), jnp.int32)
         pos = jnp.zeros((self.num_slots, 1), jnp.int32)
         self._decode(self.params, {"tokens": toks}, self.cache, pos)
+        if self.spec_k >= 2:
+            # spec rounds add two shape families: the drafter's [B, 1]
+            # center-only step and the [B, k] verify forward for every
+            # round size the headroom cap can shrink k to
+            self.drafter.step(self.params, {"tokens": toks}, self.cache,
+                              pos)
+            for k in range(2, self.spec_k + 1):
+                vt = jnp.zeros((self.num_slots, k), jnp.int32)
+                vp = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32),
+                                      (self.num_slots, k))
+                self._decode(self.params, {"tokens": vt}, self.cache, vp)
 
     # -- cache surgery (host-side; mirrors the PagePool into the device tree) ----
 
@@ -707,33 +798,135 @@ class ContinuousServer:
                 continue
             self.pool.alloc(slot, logical)
             self._bt_dirty = True
+        if self.spec_k >= 2:
+            # speculative lookahead: pages for the up-to-k-1 positions a
+            # spec round writes past the frontier. BEST-EFFORT, never
+            # preempting — a missing lookahead page only caps how many
+            # accepted tokens the round may emit (the rest re-derive
+            # identically next round), while preempting here would evict
+            # live work for tokens that may be rejected anyway. Unused
+            # lookahead pages roll back via truncate at round end.
+            for slot in sorted(self._active_slots(),
+                               key=lambda s: self.slot_seq[s]):
+                for i in range(1, self.spec_k):
+                    p = int(self.slot_pos[slot]) + i
+                    if p >= self.max_seq:
+                        break
+                    logical = p // self.page_size
+                    if self.pool.has_page(slot, logical):
+                        continue
+                    if self.pool.num_free == 0:
+                        break
+                    self.pool.alloc(slot, logical)
+                    self._bt_dirty = True
         self._sync_block_tables()
 
-    def _step_all(self):
-        toks = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
-        pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
-        logits, self.cache = self._decode(self.params, {"tokens": toks},
-                                          self.cache, pos)
-        self.rng, nxt = sample_tokens(self.rng, logits[:, -1, :], self.greedy)
-        nxt = np.asarray(nxt)
-        for slot in self._active_slots():
-            req = self.slot_req[slot]
-            self.slot_pos[slot] += 1
-            tok = int(nxt[slot])
-            req.output.append(tok)
-            self.stats["tokens"] += 1
-            done = len(req.output) >= req.max_new_tokens or (
-                req.eos_id is not None and tok == req.eos_id
-            ) or self.slot_pos[slot] >= self.max_seq
-            if done:
-                self._release(slot)
-            else:
-                self.slot_last_tok[slot] = tok
+    def _emit(self, slot: int, tok: int) -> bool:
+        """Record one generated token for ``slot`` (same done rules as
+        Server._emit, plus stats and page release); True when finished."""
+        req = self.slot_req[slot]
+        self.slot_pos[slot] += 1
+        req.output.append(tok)
+        self.stats["tokens"] += 1
+        done = len(req.output) >= req.max_new_tokens or (
+            req.eos_id is not None and tok == req.eos_id
+        ) or self.slot_pos[slot] >= self.max_seq
+        if done:
+            self._release(slot)
+        else:
+            self.slot_last_tok[slot] = tok
+        return done
+
+    def _close_step(self):
         self.stats["steps"] += 1
         if self.pool is not None:
             self.stats["peak_pages_in_use"] = max(
                 self.stats["peak_pages_in_use"], self.pool.pages_in_use)
             self.stats["page_util_sum"] += self.pool.utilization
+
+    def _step_all(self):
+        if self.spec_k >= 2:
+            self._spec_step_all()
+        else:
+            self._plain_step_all()
+
+    def _plain_step_all(self):
+        toks = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
+        logits, self.cache = self._decode(self.params, {"tokens": toks},
+                                          self.cache, pos)
+        logits = np.asarray(logits[:, -1, :])
+        for slot in self._active_slots():
+            self._emit(slot, self._sample(logits[slot]))
+        self._close_step()
+
+    def _spec_step_all(self):
+        """One speculative round over the paged cache (DESIGN.md §12).
+
+        On top of Server._spec_step_all's headroom cap, each slot's emit
+        count is capped by its CONTIGUOUS page coverage from the frontier:
+        a verify write to an unmapped lookahead page drops silently, so
+        oracle logits are only trustworthy while every earlier position
+        this round was actually written. Tokens accepted beyond coverage
+        are discarded and re-derived bitwise next round (greedy decode is
+        deterministic from the same prefix). After emitting, pool
+        accounting rolls back by block-table truncation: pages wholly
+        past each live frontier return to the pool with the usual
+        staleness stamp — no page copies.
+        """
+        from .spec import accept_lengths
+
+        active = self._active_slots()
+        k = min([self.spec_k]
+                + [self.max_seq - int(self.slot_pos[s]) for s in active])
+        if k < 2:
+            self._plain_step_all()
+            return
+        ps = self.page_size
+        cover = {}
+        for slot in active:
+            c = k
+            if self.pool is not None:
+                c = 0
+                for i in range(k):
+                    logical = (int(self.slot_pos[slot]) + i) // ps
+                    if not self.pool.has_page(slot, logical):
+                        break
+                    c += 1
+            cover[slot] = c  # >= 1: _ensure_pages preempts for page 0
+        drafts, self.cache = self.drafter.draft(
+            self.params, self.cache, self.slot_last_tok, self.slot_pos,
+            k - 1)
+        ver_toks = np.concatenate(
+            [np.asarray(self.slot_last_tok)[:, None], drafts], axis=1)
+        ver_pos = np.asarray(self.slot_pos)[:, None] + np.arange(k)[None, :]
+        logits, self.cache = self._decode(
+            self.params, {"tokens": jnp.asarray(ver_toks, jnp.int32)},
+            self.cache, jnp.asarray(ver_pos, jnp.int32))
+        oracle = np.asarray(jnp.argmax(logits, axis=-1))
+        acc = accept_lengths(drafts, oracle)
+        self.stats["spec_rounds"] += 1
+        for slot in active:
+            j = min(int(acc[slot]) + 1, cover[slot])
+            self.stats["spec_drafted"] += k - 1
+            self.stats["spec_accepted"] += j - 1
+            for i in range(j):
+                if self._emit(slot, int(oracle[slot, i])):
+                    break
+            if (j < k and not self.slot_free[slot]
+                    and int(self.slot_pos[slot]) % ps == 0):
+                # a rejection whose accepted frontier lands exactly on a
+                # page boundary: the rollback below frees the very page
+                # the next decode write needs (re-allocated by
+                # _ensure_pages) — counted so tests can force-exercise it
+                self.stats["spec_boundary_rejects"] += 1
+        for slot in self._active_slots():
+            freed = self.state.truncate(slot, int(self.slot_pos[slot]))
+            if freed:
+                self._reset_pages(freed)
+                self._bt_dirty = True
+        self._sync_block_tables()
+        self._close_step()
 
     def _admit_from(self, queue):
         """Admit queue-front requests into free slots while pages last."""
@@ -873,6 +1066,14 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
         help="tokens per KV page under --paged (default 16)",
     )
     ap.add_argument(
+        "--spec-k", type=int, default=0, metavar="K",
+        help="barycenter-draft speculative decoding (DESIGN.md §12): each "
+             "round drafts K-1 tokens through the center-only path and "
+             "verifies them in one full-path forward — greedy outputs are "
+             "token-identical to plain decode; 0/1 disables. Requires a "
+             "compressed store (--apply-mode)",
+    )
+    ap.add_argument(
         "--pool-pages", type=int, default=None, metavar="N",
         help="total pages in the shared pool under --paged; undersize it "
              "(below num_slots * max_seq / page_size) to trade preemptions "
@@ -951,7 +1152,7 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
             page_size=args.page_size, pool_pages=args.pool_pages,
             apply_mode=args.apply_mode, rules=rules,
             param_axes=axes if rules is not None else None,
-            truncate_prompts=args.truncate_prompts)
+            truncate_prompts=args.truncate_prompts, spec_k=args.spec_k)
         # per-mixer composition up front: what admission will account for
         # (page demand, state slots) before any traffic arrives
         print(f"serving state: {server.state.describe()}")
@@ -959,7 +1160,8 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
         server = Server(model, params, num_slots=4, max_seq=128,
                         apply_mode=args.apply_mode, rules=rules,
                         param_axes=axes if rules is not None else None,
-                        truncate_prompts=args.truncate_prompts)
+                        truncate_prompts=args.truncate_prompts,
+                        spec_k=args.spec_k)
     rng = np.random.default_rng(0)
     reqs = [
         Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,)),
@@ -971,6 +1173,8 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
         print(f"req{i}: {r.output}")
     if args.paged:
         print(f"paged stats: {server.stats}")
+    elif args.spec_k >= 2:
+        print(f"spec stats: {server.spec_stats}")
 
 
 if __name__ == "__main__":

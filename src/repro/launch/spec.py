@@ -1,0 +1,159 @@
+"""Barycenter-draft speculative decoding (DESIGN.md §12).
+
+The ResMoE store carries its own draft model for free: the shared
+Wasserstein-barycenter center WITHOUT the per-expert residuals is a cheap
+dense-FFN approximation of every expert. :class:`CenterDrafter` runs k-1
+decode steps with ``apply_mode="center_only"`` (models/moe.py) — no u/v
+gathers, no capacity dispatch, one dense FFN per MoE layer — and a
+verifier scores the chain in ONE multi-token forward through the full
+compressed path (the server's existing jitted decode at T=k, riding the
+dispatched kernels where the batch clears the token-path gate).
+
+Why greedy verification is bitwise-safe (the acceptance oracle):
+
+  * The verify forward feeds ``[t_last, d_1 .. d_{k-1}]`` at positions
+    ``[s .. s+k-1]``; its logits at index i are the full-path next-token
+    distribution given the true prefix plus the first i drafts. The
+    oracle token ``o_i = argmax(logits[:, i])`` is therefore EXACTLY what
+    plain decode would emit after accepting ``d_1 .. d_i`` — so emitting
+    the oracle tokens up to (and including) the first draft mismatch
+    reproduces plain greedy decode token-for-token, by induction. The
+    bonus token ``o_a`` after ``a`` accepted drafts comes free from the
+    same forward, so every round emits ``a+1`` in [1, k] tokens.
+  * Draft steps write center-only k/v into the live cache, but within
+    one multi-token forward the cache update lands BEFORE attention
+    (models/attention.py), so the verify pass overwrites all k draft
+    positions with full-path k/v before any verify query reads them —
+    draft pollution never reaches an emitted logit.
+  * Rejected positions keep stale k/v, but a stale entry's stored
+    position exceeds every future query position until the frontier
+    re-covers it — causally masked — and the round that queries it
+    rewrites it first (same update-before-attend ordering). The paged
+    cache additionally rolls its POOL ACCOUNTING back by block-table
+    truncation (PagePool.truncate_slot — no page copies); freed pages
+    get the usual staleness stamp.
+  * Greedy argmax consumes no RNG, so the sampler stream is untouched
+    and spec_k>0 is a pure latency knob: outputs are token-identical to
+    ``spec_k=0`` (pinned by tests/test_serve.py as a parametrization of
+    the whole differential matrix).
+
+Spec decoding refuses non-greedy sampling (acceptance would need a
+distribution-level rule, not token equality), models without a
+compressed center store (nothing to draft with), and recurrent mixers
+(O(1) state has no per-position axis to roll back).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as tfm
+from ..models.model import Model, iter_compressed_stores
+from ..sharding import ShardingRules, use_rules
+
+PyTree = Any
+
+# Verifier apply modes pinned by the spec differential matrix (one
+# ``# PARITY: spec/<mode>-<dtype>`` test per mode x store dtype) — read by
+# scripts/check_parity_matrix.py via ast, keep it a literal tuple. These
+# are the two restore-free paths a verify batch can ride: the dispatched
+# grouped kernel above the token-path gate, the ragged per-token kernel
+# below it.
+SPEC_PARITY_MODES = ("fused_kernel", "fused_token")
+
+
+def validate_spec_model(model: Model, params: PyTree, greedy: bool) -> None:
+    """Reject configurations speculative decoding cannot serve correctly.
+
+    Raises ValueError unless: greedy sampling (token-equality acceptance),
+    at least one compressed MoE store with a barycenter center (the draft
+    model), and no recurrent mixers (their O(1) state advances per token
+    and cannot roll back past a rejected draft).
+    """
+    if not greedy:
+        raise ValueError(
+            "speculative decoding requires greedy sampling: acceptance "
+            "compares draft tokens to the verifier's argmax, which is "
+            "only a correct oracle at temperature 0")
+    if not any(True for _ in iter_compressed_stores(params)):
+        raise ValueError(
+            "speculative decoding needs a ResMoE-compressed store — the "
+            "shared barycenter center IS the draft model; compress the "
+            "params (compress_model_params) before passing spec_k > 0")
+    from .paging import RECURRENT_MIXERS
+
+    recurrent = [m for m, _ in tfm.mixer_layout(model.cfg)
+                 if m in RECURRENT_MIXERS]
+    if recurrent:
+        raise ValueError(
+            f"speculative decoding cannot serve recurrent mixers "
+            f"({sorted(set(recurrent))}): their O(1) state advances on "
+            "every drafted token and has no per-position axis to roll "
+            "back past a rejection")
+
+
+def accept_lengths(drafts: np.ndarray, oracle: np.ndarray) -> np.ndarray:
+    """Per-slot count of leading draft tokens the oracle confirms.
+
+    ``drafts`` is [B, k-1] (the drafted chain), ``oracle`` [B, k] (the
+    verifier's argmax at every position). Returns a [B] int array ``a``
+    with ``0 <= a <= k-1``: the round emits ``a+1`` oracle tokens (the
+    accepted drafts plus the bonus token after them). A k=1 round has a
+    [B, 0] draft matrix and returns zeros — plain decode.
+    """
+    nd = drafts.shape[1]
+    matches = drafts == oracle[:, :nd]
+    return np.cumprod(matches, axis=1).sum(axis=1)
+
+
+class CenterDrafter:
+    """k-step greedy drafter over the barycenter center.
+
+    Shares the server's LIVE cache: each draft step writes center-only
+    k/v at its position (overwritten by the verify pass before any
+    emitted logit reads them) and attends the accepted prefix in place —
+    accepted tokens are never recomputed. One jitted [B, 1] decode step,
+    compiled once, reused for every draft position.
+    """
+
+    def __init__(self, model: Model, rules: Optional[ShardingRules] = None):
+        def _under_rules(fn):
+            def wrapped(p, b, c, pos):
+                with use_rules(rules):
+                    return fn(p, b, c, pos)
+            return wrapped if rules is not None else fn
+
+        self._step = jax.jit(_under_rules(
+            lambda p, b, c, pos: model.decode_step(
+                p, b, c, pos, apply_mode="center_only"
+            )
+        ))
+
+    def step(self, params, batch, cache, positions):
+        """One raw center-only decode step (exposed for warmup)."""
+        return self._step(params, batch, cache, positions)
+
+    def draft(self, params, cache, last_tokens, start_pos,
+              num_drafts: int) -> Tuple[np.ndarray, PyTree]:
+        """Greedily draft ``num_drafts`` tokens per slot.
+
+        ``last_tokens`` [B] are the previously emitted tokens (written at
+        ``start_pos`` [B] by the first step); returns the [B, num_drafts]
+        draft matrix and the cache carrying the draft k/v writes.
+        """
+        toks = jnp.asarray(np.asarray(last_tokens), jnp.int32)
+        pos = np.asarray(start_pos, np.int64)
+        drafts = []
+        for i in range(num_drafts):
+            logits, cache = self._step(
+                params, {"tokens": toks[:, None]}, cache,
+                jnp.asarray(pos + i, jnp.int32)[:, None])
+            toks = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            drafts.append(np.asarray(toks))
+        if not drafts:
+            b = len(pos)
+            return np.zeros((b, 0), np.int64), cache
+        return np.stack(drafts, axis=1), cache

@@ -334,6 +334,33 @@ def _fused_kernel_expert_ffn(params, xg: jnp.ndarray, activation: str) -> jnp.nd
     return hint(y, ("experts", "expert_cap", "embed"))
 
 
+def center_only_ffn(params: Dict, x2d: jnp.ndarray, gates: jnp.ndarray,
+                    activation: str) -> jnp.ndarray:
+    """Barycenter-drafter math (launch/spec.py, DESIGN.md §12).
+
+    Every routed expert is approximated by the shared center, so the
+    top-k mixture collapses to ONE dense FFN pass scaled by the token's
+    total gate mass: ``y = (sum_k g_k) * FFN_center(x)`` — no u/v
+    gathers, no capacity dispatch, no per-expert compute. With normalized
+    gates the scale is exactly 1; routing still runs because the gate
+    mass (and the aux metrics) depend on it. An int8 store dequantizes
+    the center in-graph (the factors are never touched).
+    """
+    act = activation_fn(activation)
+    c = params["center"]
+    if "center_scale" in params:
+        from ..core.quant import dequantize_int8
+
+        c = {name: dequantize_int8(w, params["center_scale"][name], -2)
+             for name, w in c.items()}
+    h = act(jnp.einsum("td,df->tf", x2d, c["w1"]))
+    if "w3" in c:
+        h = h * jnp.einsum("td,df->tf", x2d, c["w3"])
+    h = hint(h, ("batch", "expert_mlp"))
+    y = jnp.einsum("tf,fd->td", h, c["w2"])
+    return y * gates.sum(-1, keepdims=True).astype(y.dtype)
+
+
 def svd_store_expert_ffn(store, xg: jnp.ndarray, activation: str,
                          mode: str) -> jnp.ndarray:
     """Run the restore-free expert math on an (optionally int8) SVD store.
@@ -366,7 +393,7 @@ def moe_layer(
     compressed store (decided by key presence); ``apply_mode`` overrides
     cfg.resmoe.apply_mode
     ("restored" | "fused" | "fused_shared" | "fused_kernel" |
-    "fused_token").
+    "fused_token" | "center_only").
 
     SVD stores with a restore-free mode and a decode-sized token batch
     (``token_path_applicable``) skip the capacity-padded dispatch and run
@@ -388,6 +415,15 @@ def moe_layer(
     compressed = "center" in params
     mode = apply_mode or cfg.resmoe.apply_mode
 
+    if mode == "center_only" and not compressed:
+        # checked BEFORE the EP gate: a dense bank under a mesh would
+        # otherwise sail through ep_moe_layer (which ignores apply_mode
+        # for dense banks) instead of failing loudly
+        raise ValueError(
+            "apply_mode='center_only' needs a compressed store — the "
+            "shared barycenter center IS the draft model; a dense "
+            "expert bank has no center to draft from")
+
     from ..sharding import current_rules
     from .moe_ep import ep_applicable, ep_moe_layer
 
@@ -403,6 +439,20 @@ def moe_layer(
         )
 
     expert_ids, gates, aux = route(params, x2d, m)
+
+    if mode == "center_only":
+        # barycenter drafter (launch/spec.py, DESIGN.md §12): the whole
+        # bank collapses to the shared center; the per-expert factors are
+        # never read. The EP gate above already declined (center_only is
+        # not in _EP_COMPRESSED_MODES) — under a mesh the center is
+        # replicated, so the GSPMD path here is exactly right.
+        y2d = center_only_ffn(params, x2d, gates, cfg.activation)
+        y2d = hint(y2d, ("batch", None))
+        if "shared" in params:
+            y2d = y2d + ffn(params["shared"], x2d, cfg.activation)
+        if "dense" in params:
+            y2d = y2d + ffn(params["dense"], x2d, cfg.activation)
+        return y2d.reshape(b, s, d).astype(x.dtype), aux
 
     if compressed and token_path_applicable(params, m, mode, t, rules=rules):
         # ragged capacity-free decode path: no [E, C, d] buffer, no

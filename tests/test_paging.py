@@ -98,6 +98,52 @@ def test_free_slot_is_idempotent_and_isolated():
     pool.check()
 
 
+def test_truncate_slot_frees_past_frontier():
+    """Speculative rollback: truncate_slot releases exactly the mapped
+    pages at logical >= keep_pages, leaves the kept prefix and other
+    slots untouched, and is idempotent."""
+    pool = PagePool(num_pages=6, page_size=4, num_slots=2, max_seq=24)
+    for logical in range(4):
+        pool.alloc(0, logical)
+    keep = pool.alloc(1, 0)
+    freed = pool.truncate_slot(0, 2)
+    assert len(freed) == 2
+    assert pool.has_page(0, 0) and pool.has_page(0, 1)
+    assert not pool.has_page(0, 2) and not pool.has_page(0, 3)
+    assert pool.owner[keep] == 1
+    assert pool.truncate_slot(0, 2) == []  # idempotent
+    # keep_pages past the table end is a harmless no-op, not an error
+    assert pool.truncate_slot(0, pool.max_pages_per_slot + 3) == []
+    with pytest.raises(ValueError, match="keep_pages"):
+        pool.truncate_slot(0, -1)
+    with pytest.raises(ValueError, match="slot"):
+        pool.truncate_slot(9, 0)
+    pool.check()
+
+
+def test_truncate_slot_skips_window_holes():
+    """A slot whose early pages were window-reclaimed has holes below the
+    frontier; truncation must skip them instead of double-freeing."""
+    pool = PagePool(num_pages=4, page_size=4, num_slots=1, max_seq=16)
+    for logical in range(4):
+        pool.alloc(0, logical)
+    pool.free_page(0, 1)  # window hole
+    freed = pool.truncate_slot(0, 3)
+    assert len(freed) == 1 and not pool.has_page(0, 3)
+    assert pool.has_page(0, 0) and pool.has_page(0, 2)
+    pool.check()
+
+
+def test_serving_state_truncate_recurrent_is_noop():
+    """Pure-recurrent stacks hold no pages — ServingState.truncate must
+    return [] (spec decoding refuses them before ever calling this, but
+    the StatePage contract still has to hold)."""
+    ss = ServingState([("rwkv", 8)] * 2, num_slots=2, max_seq=16,
+                      page_size=4)
+    assert ss.truncate(0, 3) == []
+    ss.check()
+
+
 # -- randomized alloc/free/preempt sequences ----------------------------------
 
 
@@ -110,9 +156,36 @@ def _run_random_ops(pool: PagePool, choose, n_ops: int):
     handed_out = set()  # every page currently on loan, across all slots
     shadow = {s: set() for s in range(pool.num_slots)}  # slot -> owned
     for _ in range(n_ops):
-        op = choose("op", ["alloc", "alloc", "free", "reclaim"])
+        op = choose("op", ["alloc", "alloc", "free", "reclaim",
+                           "speculate", "rollback"])
         slot = choose("slot", list(range(pool.num_slots)))
-        if op == "alloc":
+        if op == "speculate":
+            # best-effort lookahead like ContinuousServer._ensure_pages:
+            # map the lowest unmapped logical pages while the pool lasts,
+            # never raising on exhaustion
+            want = choose("lookahead", [1, 2, 3])
+            for logical in range(pool.max_pages_per_slot):
+                if want == 0 or pool.num_free == 0:
+                    break
+                if pool.has_page(slot, logical):
+                    continue
+                page = pool.alloc(slot, logical)
+                assert page not in handed_out
+                handed_out.add(page)
+                shadow[slot].add(page)
+                want -= 1
+        elif op == "rollback":
+            # speculative-decode rollback: truncate to a random frontier
+            keep = choose("keep_pages",
+                          list(range(pool.max_pages_per_slot + 1)))
+            freed = pool.truncate_slot(slot, keep)
+            assert set(freed) <= shadow[slot]
+            assert len(set(freed)) == len(freed)
+            for logical in range(keep, pool.max_pages_per_slot):
+                assert not pool.has_page(slot, logical)
+            handed_out -= set(freed)
+            shadow[slot] -= set(freed)
+        elif op == "alloc":
             unmapped = [l for l in range(pool.max_pages_per_slot)
                         if not pool.has_page(slot, l)]
             if not unmapped:
@@ -183,6 +256,48 @@ if HAVE_HYPOTHESIS:
             pool,
             lambda kind, opts: data.draw(st.sampled_from(opts), label=kind),
             n_ops)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_speculative_write_rollback_invariants(data):
+        """One full spec round against the pool, fuzzed over
+        (page_size, slot_pos, spec_k, accept-length): allocate the
+        committed prefix plus the round's lookahead pages (what
+        _ensure_pages maps), accept a random prefix, truncate to the new
+        frontier — exactly the pages wholly past it come back, the kept
+        prefix and a neighbour slot are untouched, nothing leaks."""
+        page_size = data.draw(st.integers(1, 8), label="page_size")
+        max_pages = data.draw(st.integers(2, 6), label="max_pages")
+        max_seq = page_size * max_pages
+        tp = TokenPages(num_pages=2 * max_pages, page_size=page_size,
+                        num_slots=2, max_seq=max_seq, window=None)
+        pool = tp.pool
+        # frontier with >= 1 position of headroom, like a live spec round
+        slot_pos = data.draw(st.integers(1, max_seq - 1), label="slot_pos")
+        spec_k = data.draw(st.integers(2, 6), label="spec_k")
+        k = min(spec_k, max_seq - slot_pos)
+        # pages covering committed prefix + the k speculative writes
+        mapped = pool.pages_needed(slot_pos + k)
+        for logical in range(mapped):
+            pool.alloc(0, logical)
+        neighbour = pool.alloc(1, 0)  # must survive slot 0's rollback
+        # the round emits j in [1, k] tokens; frontier moves to pos + j
+        j = data.draw(st.integers(1, k), label="accepted")
+        new_pos = slot_pos + j
+        freed = tp.truncate(0, new_pos)
+        kept = pool.pages_needed(new_pos)
+        assert len(freed) == mapped - kept
+        for logical in range(kept):
+            assert pool.has_page(0, logical)
+        for logical in range(kept, pool.max_pages_per_slot):
+            assert not pool.has_page(0, logical)
+        assert pool.owner[neighbour] == 1
+        assert pool.num_free + pool.pages_in_use == pool.num_pages
+        assert tp.truncate(0, new_pos) == []  # idempotent
+        pool.check()
+        pool.free_slot(0)
+        pool.free_slot(1)
+        assert pool.num_free == pool.num_pages
 
     @settings(max_examples=25, deadline=None)
     @given(st.integers(1, 10), st.integers(0, 200), st.integers(1, 4))

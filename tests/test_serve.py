@@ -231,7 +231,8 @@ def _random_schedule(seed, vocab, n_lo=2, n_hi=5, max_new_hi=7):
 
 def _assert_differential(model, params, schedules, apply_mode=None,
                          num_slots=3, max_seq=48, page_size=4, pool_pages=9,
-                         max_new_override=None, preempt_steps=None):
+                         max_new_override=None, preempt_steps=None,
+                         spec_k=0):
     """Serve each schedule through both servers; outputs must be identical.
 
     The ContinuousServer sees the requests in a permuted order under a
@@ -239,8 +240,12 @@ def _assert_differential(model, params, schedules, apply_mode=None,
     ``preempt_steps`` forces an eviction at given step indices (each fires
     once) so architectures whose state never runs out of pages — pure
     recurrence holds one fixed slot per sequence — still exercise the
-    preempt/recompute-restore path. Returns the total preemption count so
-    callers can assert the interesting regime was exercised.
+    preempt/recompute-restore path. ``spec_k`` turns on barycenter-draft
+    speculative decoding on the ContinuousServer ONLY — the sync Server
+    stays the plain-decode oracle, so passing spec_k > 0 asserts spec is
+    a pure latency knob (token-identical outputs, DESIGN.md §12).
+    Returns the total preemption count so callers can assert the
+    interesting regime was exercised.
     """
     cfg = model.cfg
     sync = Server(model, params, num_slots=num_slots, max_seq=max_seq,
@@ -248,7 +253,7 @@ def _assert_differential(model, params, schedules, apply_mode=None,
     cont = ContinuousServer(model, params, num_slots=num_slots,
                             max_seq=max_seq, page_size=page_size,
                             pool_pages=pool_pages, apply_mode=apply_mode,
-                            preempt_steps=preempt_steps)
+                            preempt_steps=preempt_steps, spec_k=spec_k)
     for seed in schedules:
         prompts, max_new, order, arrivals = _random_schedule(
             seed, cfg.vocab_size)
@@ -285,12 +290,19 @@ def test_continuous_server_differential_dense(rng):
     assert preemptions > 0, "pool was sized to force at least one preemption"
 
 
-def test_continuous_server_differential_compressed(rng):
+@pytest.mark.parametrize(
+    "spec_k", [0, pytest.param(2, marks=pytest.mark.spec),
+               pytest.param(4, marks=pytest.mark.spec)])
+def test_continuous_server_differential_compressed(rng, spec_k):
     """Differential parity on the ResMoE-SVD store across both restore-free
     kernel paths and both store dtypes, under a pool tight enough to
-    preempt mid-schedule.
+    preempt mid-schedule — and, at spec_k > 0, with barycenter-draft
+    speculative decoding on the paged server against the plain sync
+    oracle (the whole matrix again, drafts and rollbacks included).
     # PARITY: fused_kernel/fp32  # PARITY: fused_kernel/int8
     # PARITY: fused_token/fp32   # PARITY: fused_token/int8
+    # PARITY: spec/fused_kernel-fp32  # PARITY: spec/fused_kernel-int8
+    # PARITY: spec/fused_token-fp32   # PARITY: spec/fused_token-int8
     """
     cfg = reduced_config("mixtral-8x7b")
     cfg = dataclasses.replace(
@@ -306,8 +318,88 @@ def test_continuous_server_differential_compressed(rng):
             total += _assert_differential(
                 model, store, schedules=[7], apply_mode=mode,
                 num_slots=2, max_seq=32, page_size=4, pool_pages=5,
-                max_new_override=6)
-    assert total > 0, "tight pool should preempt at least once"
+                max_new_override=6, spec_k=spec_k)
+    if spec_k == 0:
+        # spec rounds emit several tokens per step, so the first request
+        # drains before the step-7 arrival and the slots never overlap;
+        # preemption *during* speculation is forced separately by
+        # test_spec_forced_preemption_mid_speculation.
+        assert total > 0, "tight pool should preempt at least once"
+
+
+def _compressed_mixtral_model():
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                        keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    return cfg, model, cp
+
+
+@pytest.mark.spec
+def test_spec_forced_preemption_mid_speculation(rng):
+    """A forced eviction lands between spec rounds while the victim holds
+    speculative lookahead pages past its frontier: the release must
+    return ALL of them (pool pristine after every schedule — asserted by
+    the harness) and the recompute-restore must re-derive the
+    interrupted round's tokens bitwise."""
+    cfg, model, cp = _compressed_mixtral_model()
+    preemptions = _assert_differential(
+        model, cp, schedules=[3, 11], apply_mode="fused_kernel",
+        num_slots=2, max_seq=32, page_size=4, pool_pages=5,
+        preempt_steps=[1], spec_k=4)
+    assert preemptions >= 1, "forced preemption must have fired"
+
+
+@pytest.mark.spec
+def test_spec_rejection_at_page_boundary(rng):
+    """The hard rollback case: a rejection whose accepted frontier lands
+    exactly on a page boundary (slot_pos % page_size == 0) — truncate
+    frees the very page the next round's first write needs, so
+    _ensure_pages must re-allocate it and the re-derived tokens must
+    still match the oracle. The stats counter proves the case fired."""
+    cfg, model, cp = _compressed_mixtral_model()
+    prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(3)]
+    oracle = [Request(prompt=p, max_new_tokens=8) for p in prompts]
+    Server(model, cp, num_slots=2, max_seq=32,
+           apply_mode="fused_kernel").serve(oracle)
+    reqs = [Request(prompt=p, max_new_tokens=8) for p in prompts]
+    cont = ContinuousServer(model, cp, num_slots=2, max_seq=32,
+                            page_size=4, pool_pages=5,
+                            apply_mode="fused_kernel", spec_k=4)
+    cont.serve(reqs)
+    assert cont.stats["spec_boundary_rejects"] > 0, cont.stats
+    for a, b in zip(oracle, reqs):
+        assert a.output == b.output, (a.output, b.output)
+    cont.pool.check()
+    assert cont.pool.pages_in_use == 0
+
+
+def test_same_seed_same_samples_non_greedy(rng):
+    """The rng-threading pin: sample_tokens splits the key INSIDE the
+    helper, so two servers of the same kind given the same seed and
+    schedule draw identical non-greedy samples — per-site key handling
+    once drifted exactly here. Covers both server kinds."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(3)]
+
+    def run(make):
+        reqs = [Request(prompt=p, max_new_tokens=5) for p in prompts]
+        make().serve(reqs)
+        return [r.output for r in reqs]
+
+    sync = lambda: Server(model, params, num_slots=2, max_seq=32,
+                          greedy=False, seed=7)
+    cont = lambda: ContinuousServer(model, params, num_slots=2, max_seq=32,
+                                    page_size=4, greedy=False, seed=7)
+    assert run(sync) == run(sync)
+    assert run(cont) == run(cont)
 
 
 def test_continuous_server_preemption_and_readmission(rng):
@@ -472,7 +564,14 @@ ZOO = [
     "rwkv6-1.6b",            # pure recurrent (rwkv6)
     "recurrentgemma-9b",     # hybrid rec-rec-attn (rglru + sliding gqa)
     "recurrentgemma-9b+resmoe",  # hybrid + compressed-MoE fused serving
+    "deepseek-v3-671b+resmoe",   # MLA + compressed-MoE fused serving
 ]
+
+# zoo entries barycenter-draft speculation can serve: a compressed store
+# (the center IS the draft model) and no recurrent mixers (their O(1)
+# state cannot roll back past a rejected draft). Everything else must
+# REFUSE spec_k > 0 with a clear error — asserted below.
+ZOO_SPEC = {"deepseek-v3-671b+resmoe"}
 
 
 def _zoo_model(arch):
@@ -501,22 +600,34 @@ def _zoo_model(arch):
 
 
 @pytest.mark.zoo
+@pytest.mark.parametrize(
+    "spec_k", [0, pytest.param(2, marks=pytest.mark.spec),
+               pytest.param(4, marks=pytest.mark.spec)])
 @pytest.mark.parametrize("arch", ZOO)
-def test_continuous_server_differential_zoo(arch):
+def test_continuous_server_differential_zoo(arch, spec_k):
     """Differential parity across the whole architecture matrix, with a
     FORCED preemption at step 1 of the first schedule: the victim's state
     is dropped (pages freed, recurrent slot zeroed at re-admit) and the
     resume prefill must recompute it token-identically — for recurrent
     mixers that is the bitwise prefill-scan == decode-step argument of
-    DESIGN.md §11, for attention it is page-table surgery.
+    DESIGN.md §11, for attention it is page-table surgery. At spec_k > 0
+    the spec-able entries (ZOO_SPEC) run the same differential under
+    barycenter-draft speculation; every other entry must refuse loudly
+    (no store to draft from, or recurrent state with no rollback axis).
     # PARITY: mixer/gqa   # PARITY: mixer/mla
     # PARITY: mixer/rglru # PARITY: mixer/rwkv
     """
     model, params, apply_mode = _zoo_model(arch)
+    if spec_k and arch not in ZOO_SPEC:
+        with pytest.raises(ValueError, match="compress|recurrent"):
+            ContinuousServer(model, params, num_slots=2, max_seq=48,
+                             page_size=4, pool_pages=9,
+                             apply_mode=apply_mode, spec_k=spec_k)
+        return
     preemptions = _assert_differential(
         model, params, schedules=[3, 11], apply_mode=apply_mode,
         num_slots=2, max_seq=48, page_size=4, pool_pages=9,
-        preempt_steps=[1])
+        preempt_steps=[1], spec_k=spec_k)
     assert preemptions >= 1, "forced preemption must have fired"
 
 

@@ -1,0 +1,260 @@
+"""Barycenter-draft speculative decoding (launch/spec.py, DESIGN.md §12).
+
+Layer-level parity for the drafter's ``center_only`` forward path, unit
+tests for the acceptance oracle, the refusal rules, and a small
+Server-level spec-vs-plain token-identity smoke. The full differential
+matrix (ContinuousServer, preemption mid-speculation, page-boundary
+rejections, both store dtypes) lives in tests/test_serve.py as a
+``spec_k`` parametrization of the existing suites.
+
+Parity coverage declared for scripts/check_parity_matrix.py:
+# PARITY: center_only/fp32
+# PARITY: center_only/int8
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import MoEConfig
+from repro.core.quant import dequantize_store, quantize_store
+from repro.launch.serve import Request, Server
+from repro.launch.spec import accept_lengths, validate_spec_model
+from repro.models import (
+    build_model,
+    compress_model_params,
+    quantize_compressed_params,
+)
+from repro.models.moe import activation_fn, moe_layer, route
+
+
+def _synthetic_store(rng, cfg, f=32, r=4):
+    """A minimal SVD store shaped for ``cfg``'s router/activation."""
+    d, e = cfg.d_model, cfg.moe.num_experts
+    names = ("w1", "w3")
+    center = {n: rng.normal(size=(d, f)).astype(np.float32) for n in names}
+    center["w2"] = rng.normal(size=(f, d)).astype(np.float32)
+    return {
+        "router": rng.normal(size=(d, e)).astype(np.float32),
+        "center": center,
+        "u": rng.normal(size=(e, f, r)).astype(np.float32),
+        "v": {n: rng.normal(size=(e, r, d)).astype(np.float32)
+              for n in names + ("w2",)},
+    }
+
+
+def _center_reference(store, x, cfg):
+    """Hand-rolled drafter math: y = (sum_k g_k) * FFN_center(x)."""
+    b, s, d = x.shape
+    x2d = jnp.asarray(np.asarray(x).reshape(-1, d))
+    _, gates, _ = route({"router": jnp.asarray(store["router"])}, x2d,
+                        cfg.moe)
+    act = activation_fn(cfg.activation)
+    c = store["center"]
+    h = np.asarray(act(x2d @ c["w1"]))
+    if "w3" in c:
+        h = h * np.asarray(x2d @ c["w3"])
+    y = h @ c["w2"]
+    y = y * np.asarray(gates).sum(-1, keepdims=True)
+    return y.reshape(b, s, d)
+
+
+def test_center_only_matches_einsum_reference(rng):
+    """apply_mode='center_only' collapses the routed mixture to one dense
+    center FFN scaled by the token's gate mass — the per-expert u/v
+    factors must never influence the output (corrupting them is a no-op).
+
+    # PARITY: center_only/fp32
+    """
+    cfg = reduced_config("mixtral-8x7b")
+    store = _synthetic_store(rng, cfg)
+    x = jnp.asarray(rng.normal(size=(2, 5, cfg.d_model)), jnp.float32)
+    out, aux = moe_layer(store, x, cfg, apply_mode="center_only")
+    expected = _center_reference(store, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=1e-4,
+                               atol=1e-5)
+    assert "load_balance_loss" in aux  # routing still runs (gate mass)
+    poisoned = dict(store)
+    poisoned["u"] = np.full_like(store["u"], 1e6)
+    poisoned["v"] = {n: np.full_like(a, 1e6)
+                     for n, a in store["v"].items()}
+    out2, _ = moe_layer(poisoned, x, cfg, apply_mode="center_only")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_center_only_int8_store(rng):
+    """center_only on an int8 store dequantizes the center in-graph and
+    matches center_only on the explicitly dequantized store exactly —
+    same dequant math, factors untouched.
+
+    # PARITY: center_only/int8
+    """
+    cfg = reduced_config("mixtral-8x7b")
+    store = _synthetic_store(rng, cfg)
+    q = quantize_store({k: v for k, v in store.items() if k != "router"})
+    q["router"] = store["router"]
+    x = jnp.asarray(rng.normal(size=(2, 4, cfg.d_model)), jnp.float32)
+    got, _ = moe_layer(q, x, cfg, apply_mode="center_only")
+    deq = dequantize_store(q)
+    ref_store = {"router": store["router"], "center": deq["center"],
+                 "u": deq["u"], "v": deq["v"]}
+    ref, _ = moe_layer(ref_store, x, cfg, apply_mode="center_only")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_center_only_rejects_dense_bank(rng):
+    """A dense expert bank has no center to draft from — loud failure,
+    checked BEFORE the EP gate so a mesh cannot mask it."""
+    cfg = reduced_config("mixtral-8x7b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    f = params["segments"][0]["slots"][0]["ffn"]
+    bank = {k: np.asarray(v[0]) for k, v in f.items()
+            if k in ("router", "w1", "w2", "w3")}
+    x = jnp.asarray(rng.normal(size=(1, 4, cfg.d_model)), jnp.float32)
+    with pytest.raises(ValueError, match="center"):
+        moe_layer(bank, x, cfg, apply_mode="center_only")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance oracle
+# ---------------------------------------------------------------------------
+
+
+def test_accept_lengths_counts_leading_matches():
+    drafts = np.array([[5, 6, 7],    # all accepted
+                       [5, 9, 7],    # mismatch at index 1
+                       [9, 6, 7]])   # instant mismatch
+    oracle = np.array([[5, 6, 7, 1],
+                       [5, 6, 7, 1],
+                       [5, 6, 7, 1]])
+    np.testing.assert_array_equal(accept_lengths(drafts, oracle), [3, 1, 0])
+
+
+def test_accept_lengths_k1_degenerates():
+    """A k=1 round has no drafts: a == 0 everywhere, i.e. plain decode
+    (exactly one oracle token emitted per slot)."""
+    drafts = np.zeros((4, 0), np.int64)
+    oracle = np.array([[3], [1], [4], [1]])
+    np.testing.assert_array_equal(accept_lengths(drafts, oracle),
+                                  [0, 0, 0, 0])
+
+
+def test_accept_lengths_no_resurrection_after_mismatch():
+    """A match AFTER the first mismatch must not count — acceptance is a
+    prefix property (the later 'match' was conditioned on a rejected
+    token)."""
+    drafts = np.array([[7, 9, 7]])
+    oracle = np.array([[7, 8, 7, 2]])
+    np.testing.assert_array_equal(accept_lengths(drafts, oracle), [1])
+
+
+# ---------------------------------------------------------------------------
+# Refusal rules
+# ---------------------------------------------------------------------------
+
+
+def _compressed_mixtral(seed=0):
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                        keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(seed))
+    cp, _ = compress_model_params(params, cfg)
+    return cfg, model, cp
+
+
+def test_spec_refuses_non_greedy():
+    cfg, model, cp = _compressed_mixtral()
+    with pytest.raises(ValueError, match="greedy"):
+        validate_spec_model(model, cp, greedy=False)
+    with pytest.raises(ValueError, match="greedy"):
+        Server(model, cp, num_slots=2, max_seq=32, apply_mode="fused",
+               greedy=False, spec_k=2)
+
+
+def test_spec_refuses_uncompressed_params():
+    cfg = reduced_config("mixtral-8x7b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="compress"):
+        Server(model, params, num_slots=2, max_seq=32, spec_k=2)
+
+
+def test_spec_refuses_recurrent_mixers():
+    """Recurrent state advances per drafted token with no per-position
+    axis to roll back — spec must refuse the hybrid compressed-MoE
+    recurrentgemma stack even though it HAS a center to draft with."""
+    cfg = reduced_config("recurrentgemma-9b")
+    cfg = dataclasses.replace(
+        cfg,
+        moe=MoEConfig(num_experts=4, top_k=2, expert_d_ff=128,
+                      capacity_factor=8.0),
+        resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                   keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    with pytest.raises(ValueError, match="recurrent"):
+        validate_spec_model(model, cp, greedy=True)
+
+
+# ---------------------------------------------------------------------------
+# Server-level token identity (the full matrix rides test_serve.py)
+# ---------------------------------------------------------------------------
+
+
+def test_server_spec_decode_token_identical(rng):
+    """spec_k=4 on the sync Server emits exactly the spec_k=0 tokens, and
+    the upcycled reduced config (center ~= experts) accepts drafts — the
+    latency win is real, not just not-wrong."""
+    cfg, model, cp = _compressed_mixtral()
+    prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(3)]
+    plain = [Request(prompt=p, max_new_tokens=8) for p in prompts]
+    Server(model, cp, num_slots=2, max_seq=32,
+           apply_mode="fused_kernel").serve(plain)
+    spec = [Request(prompt=p, max_new_tokens=8) for p in prompts]
+    srv = Server(model, cp, num_slots=2, max_seq=32,
+                 apply_mode="fused_kernel", spec_k=4)
+    srv.serve(spec)
+    for a, b in zip(plain, spec):
+        assert a.output == b.output, (a.output, b.output)
+    assert srv.spec_stats["rounds"] > 0
+    assert srv.spec_stats["accepted"] > 0, srv.spec_stats
+
+
+def test_server_spec_k1_is_plain_decode(rng):
+    """spec_k in {0, 1} never builds a drafter — a 1-token round IS a
+    decode step, so the spec machinery must stay cold."""
+    cfg, model, cp = _compressed_mixtral()
+    srv = Server(model, cp, num_slots=2, max_seq=32, apply_mode="fused",
+                 spec_k=1)
+    assert srv.drafter is None
+    req = Request(prompt=rng.integers(0, cfg.vocab_size, size=(5,))
+                  .astype(np.int32), max_new_tokens=4)
+    srv.serve([req])
+    assert len(req.output) == 4
+    assert srv.spec_stats == {"rounds": 0, "drafted": 0, "accepted": 0}
+
+
+def test_server_spec_int8_store_token_identical(rng):
+    """The drafter dequantizes the int8 center in-graph: spec on the int8
+    store matches plain decode on the SAME int8 store token-for-token."""
+    cfg, model, cp = _compressed_mixtral()
+    qp = quantize_compressed_params(cp)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(2)]
+    plain = [Request(prompt=p, max_new_tokens=6) for p in prompts]
+    Server(model, qp, num_slots=2, max_seq=32,
+           apply_mode="fused_token").serve(plain)
+    spec = [Request(prompt=p, max_new_tokens=6) for p in prompts]
+    Server(model, qp, num_slots=2, max_seq=32, apply_mode="fused_token",
+           spec_k=2).serve(spec)
+    for a, b in zip(plain, spec):
+        assert a.output == b.output, (a.output, b.output)
