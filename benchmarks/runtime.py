@@ -402,9 +402,18 @@ def paged_vs_sync_serving(seed: int = 0):
     pre-compiles every bucketed prefill shape plus the decode step (the
     finite-shape guarantee bucketing exists for), and the sync server is
     warmed on a short trace prefix covering both prompt shapes.
+
+    The overlapped engine (launch/engine.py, DESIGN.md §13) then drains
+    the SAME trace at the same pool geometry with per-token timestamps
+    on: its decode thread never runs admission prefills or the per-step
+    host readback, so the rows assert it sustains at least the sync
+    paged throughput while strictly improving p99 inter-token latency —
+    the sync scheduler stalls every live decode behind each arrival's
+    prefill, which is exactly the tail the engine exists to cut.
     """
     import time
 
+    from repro.launch.engine import OverlappedServer
     from repro.launch.serve import ContinuousServer, Request, Server
 
     cfg = reduced_config("granite-8b")
@@ -430,12 +439,18 @@ def paged_vs_sync_serving(seed: int = 0):
     sync = Server(model, params, num_slots=sync_slots, max_seq=max_seq)
     paged = ContinuousServer(model, params, num_slots=paged_slots,
                              max_seq=max_seq, page_size=page_size,
-                             pool_pages=pool_pages)
+                             pool_pages=pool_pages,
+                             record_token_times=True)
+    overlapped = OverlappedServer(model, params, num_slots=paged_slots,
+                                  max_seq=max_seq, page_size=page_size,
+                                  pool_pages=pool_pages, admit_batch=8,
+                                  record_token_times=True)
     warm, _ = trace(4)
     sync.serve(requests(warm))
     # longest resume = longest prompt (8) + max_new (32): bounding warmup
     # there skips ~25 never-used prefill shapes' compiles
     paged.warmup(max_len=8 + 32)
+    overlapped.warmup(max_len=8 + 32)
 
     # ONE trace, drained by both servers — otherwise speedup_x would also
     # measure the luck of two different prompt-length draws
@@ -447,14 +462,40 @@ def paged_vs_sync_serving(seed: int = 0):
     dt_sync = time.perf_counter() - t0
     tok_sync = sum(len(r.output) for r in reqs)
 
+    def intertoken_ms(reqs):
+        deltas = [b - a for r in reqs
+                  for a, b in zip(r.token_times, r.token_times[1:])]
+        return (1e3 * float(np.percentile(deltas, 50)),
+                1e3 * float(np.percentile(deltas, 99)))
+
     reqs = requests(prompts)
     t0 = time.perf_counter()
     paged.serve(reqs, arrival_steps=arrivals)
     dt_paged = time.perf_counter() - t0
     tok_paged = sum(len(r.output) for r in reqs)
+    paged_out = [r.output for r in reqs]
+    p50_paged, p99_paged = intertoken_ms(reqs)
+
+    reqs = requests(prompts)
+    t0 = time.perf_counter()
+    overlapped.serve(reqs, arrival_steps=arrivals)
+    dt_ov = time.perf_counter() - t0
+    tok_ov = sum(len(r.output) for r in reqs)
+    assert [r.output for r in reqs] == paged_out, (
+        "overlapped engine changed greedy outputs — threading must be a "
+        "pure latency/throughput knob")
+    p50_ov, p99_ov = intertoken_ms(reqs)
 
     tps_sync = tok_sync / dt_sync
     tps_paged = tok_paged / dt_paged
+    tps_ov = tok_ov / dt_ov
+    assert tps_ov >= tps_paged, (
+        f"overlapped engine lost throughput: {tps_ov:.1f} vs "
+        f"{tps_paged:.1f} tok/s on the same trace")
+    assert p99_ov < p99_paged, (
+        f"overlapped engine did not improve p99 inter-token latency: "
+        f"{p99_ov:.1f} vs {p99_paged:.1f} ms")
+    ost = overlapped.stats
     util = paged.stats["page_util_sum"] / max(paged.stats["steps"], 1)
     return [
         ("SERVE/paged_vs_sync/sync_tok_per_s", round(tps_sync, 1),
@@ -471,6 +512,21 @@ def paged_vs_sync_serving(seed: int = 0):
          f"peak {paged.stats['peak_pages_in_use']} of {pool_pages} pages"),
         ("SERVE/paged_vs_sync/preemptions", paged.stats["preemptions"],
          "evict+recompute events during the timed trace"),
+        ("SERVE/paged_vs_sync/overlapped_tok_per_s", round(tps_ov, 1),
+         f"engine on the same trace/pool; {tok_ov} tokens, "
+         f"{ost['admit_grouped_rows']} rows in {ost['admit_groups']} "
+         f"batched prefills (floor: sync paged {round(tps_paged, 1)})"),
+        ("SERVE/paged_vs_sync/sync_p50_ms", round(p50_paged, 2),
+         "median inter-token latency, sync paged server"),
+        ("SERVE/paged_vs_sync/sync_p99_ms", round(p99_paged, 2),
+         "p99 inter-token latency, sync paged server (prefill stalls "
+         "live decodes)"),
+        ("SERVE/paged_vs_sync/overlapped_p50_ms", round(p50_ov, 2),
+         "median inter-token latency, overlapped engine"),
+        ("SERVE/paged_vs_sync/overlapped_p99_ms", round(p99_ov, 2),
+         f"p99 inter-token latency, overlapped engine "
+         f"({p99_paged / max(p99_ov, 1e-9):.2f}x better than sync paged; "
+         "must be strictly better)"),
     ]
 
 

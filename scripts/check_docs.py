@@ -14,6 +14,11 @@ Two checks, both purely static (no jax import):
        resolve to a source file or package under src/ or the repo root;
      * ``--flags`` on a line that invokes a resolvable script/module must
        appear verbatim in that script's source (argparse strings).
+
+3. the serve CLI is fully documented: every ``add_argument("--flag")``
+   in src/repro/launch/serve.py must appear (backticked) in
+   docs/SERVING.md — the operator guide cannot silently fall behind
+   the CLI.
 """
 from __future__ import annotations
 
@@ -33,6 +38,10 @@ FLAG_RE = re.compile(r"(?<=\s)(--[a-z][\w-]*)(?=\s|$)")
 
 EXEMPT_LINKS = {"SNIPPETS.md"}
 CODE_CHECKED = ("README.md", "benchmarks/README.md")
+
+SERVE_CLI = Path("src/repro/launch/serve.py")
+SERVING_DOC = Path("docs/SERVING.md")
+ADD_ARG_RE = re.compile(r"add_argument\(\s*\"(--[\w-]+)\"")
 
 
 def md_files():
@@ -107,15 +116,30 @@ def check_code_blocks(errors):
                                       f"no flag {flag}")
 
 
+def check_serve_flags(errors):
+    doc = ROOT / SERVING_DOC
+    if not doc.exists():
+        errors.append(f"{SERVING_DOC}: missing (the serve CLI reference)")
+        return
+    text = doc.read_text()
+    for flag in ADD_ARG_RE.findall((ROOT / SERVE_CLI).read_text()):
+        if f"`{flag}`" not in text:
+            errors.append(f"{SERVING_DOC}: serve CLI flag {flag} "
+                          f"undocumented (added in {SERVE_CLI}, no "
+                          "backticked mention in the flag reference)")
+
+
 def main() -> int:
     errors: list = []
     check_links(errors)
     check_code_blocks(errors)
+    check_serve_flags(errors)
     for e in errors:
         print(f"FAIL {e}")
     if errors:
         return 1
-    print("docs OK: links + README code references resolve")
+    print("docs OK: links + README code references + serve CLI flag "
+          "coverage resolve")
     return 0
 
 

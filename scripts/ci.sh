@@ -23,7 +23,13 @@
 #                            # restore-free verifier paths, both store
 #                            # dtypes, forced preemption mid-speculation
 #                            # and page-boundary rejections
+#   scripts/ci.sh engine     # overlapped-engine differentials:
+#                            # OverlappedServer token-identical to the
+#                            # sync oracle across dense/MoE/recurrent/
+#                            # hybrid stacks, forced preemption and
+#                            # spec_k in {0, 2} included
 #   scripts/ci.sh docs       # broken md links / stale README references /
+#                            # serve CLI flag coverage in docs/SERVING.md /
 #                            # apply-mode x store-dtype parity-test matrix
 #   scripts/ci.sh all        # every tier above, tier-1 first
 #
@@ -116,10 +122,19 @@ spec() {
     python -m pytest -q -m spec tests/
 }
 
+# Engine tier: the overlapped serving engine (launch/engine.py) against
+# the sync oracle — randomized schedules, forced preemption-restore,
+# EOS-mid-decode (the zombie path), spec_k in {0, 2} — across the same
+# architecture spread as the zoo tier. Fast engine unit tests (stats
+# schema, warmup no-recompile, refusals) stay in tier-1 unmarked.
+engine() {
+    python -m pytest -q -m engine tests/
+}
+
 # Docs tier: intra-repo markdown links must resolve, README code blocks
-# must reference real modules/paths/flags, and every
-# (apply_mode, store_dtype) combination must declare a parity test
-# (no jax import — runs in ~1 s).
+# must reference real modules/paths/flags, the serve CLI must be fully
+# documented in docs/SERVING.md, and every (apply_mode, store_dtype)
+# combination must declare a parity test (no jax import — runs in ~1 s).
 docs() {
     python scripts/check_docs.py
     python scripts/check_parity_matrix.py
@@ -133,7 +148,8 @@ case "${1:-tier1}" in
     soak)     soak ;;
     zoo)      zoo ;;
     spec)     spec ;;
+    engine)   engine ;;
     docs)     docs ;;
-    all)      tier1; kernels; multidev; bench; soak; zoo; spec; docs ;;
-    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|zoo|spec|docs|all]" >&2; exit 2 ;;
+    all)      tier1; kernels; multidev; bench; soak; zoo; spec; engine; docs ;;
+    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|zoo|spec|engine|docs|all]" >&2; exit 2 ;;
 esac

@@ -1,0 +1,705 @@
+"""Overlapped serving engine: decode never blocks on admission or output.
+
+``ContinuousServer`` (launch/serve.py) runs admission, prefill, decode and
+detokenize in one synchronous Python loop, so every admission prefill and
+every per-step logits readback stalls the live decode slots. This module
+wraps the SAME scheduling/state machinery (PagePool, ServingState, spec
+rounds) in the MaxText/JetStream production shape — three threads around
+two bounded queues (DESIGN.md §13):
+
+  * an **admission thread** pulls pending requests off a thread-safe
+    deque, packs up to ``admit_batch`` of them into ONE batched prefill
+    against a private *mini* paged cache, materializes each row's first
+    token on the host, and pushes the finished group onto a bounded ready
+    queue — compiles and prefill FLOPs happen here, never on the decode
+    thread;
+  * the **decode thread** (the ``serve()`` caller) inserts ready rows by
+    copying whole KV pages / recurrent state rows from the mini cache onto
+    freshly allocated pool pages, then steps all slots with a
+    buffer-donated decode whose next tokens stay ON DEVICE — the decode
+    thread never waits for a device->host transfer;
+  * a **detokenize thread** performs the blocking ``np.asarray`` readback,
+    appends tokens to ``Request.output``, and reports EOS back through a
+    done queue.
+
+Batched prefill-insert and the PR-5 MoE capacity caveat: a padded/batched
+MoE prefill normally computes expert capacity from the GLOBAL token count,
+letting batchmates compete for capacity slots — which changes which real
+tokens drop versus the B=1 oracle. The engine solves it per ISSUE 8:
+same-length groups run the dispatched paths under ``capacity_per_row=True``
+(models/moe.py::make_dispatch_per_row — each row gets its own B=1
+capacity, bitwise-equal dispatch), and prompt lengths the oracle serves
+through the ragged per-token path run ``apply_mode="fused_token"``, which
+is capacity-free by construction at any batch size. Recurrent rows are
+never padded (dummy tail tokens would advance the recurrence).
+
+Token identity (proof sketch in DESIGN.md §13): every per-row prefill
+path above equals the oracle's B=1 prefill for that row; page placement
+is invisible through block-table indirection; EOS handled one step late
+only stops *scheduling* later (the detokenizer stops appending at EOS, and
+preemption-restore recomputes from prompt+generated, so extra "zombie"
+decode steps never reach an output). Greedy-only — the engine refuses
+``greedy=False`` (a shared rng stream cannot be consumed from two threads
+in a defined order) and refuses ``rules`` (the EP gate keys on global
+token count, which a batched prefill would flip against the oracle).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue as queue_lib
+import threading
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model, iter_compressed_stores
+from ..sharding import split_logical
+from .serve import ContinuousServer, Request, _Pending
+
+PyTree = Any
+
+
+class _AdmitQueue:
+    """Thread-safe admission deque: decode thread feeds arrivals (and
+    re-queues preemption victims at the FRONT, preserving the oracle's
+    resume-first policy); the admission thread takes same-length groups.
+    """
+
+    def __init__(self):
+        self._d: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._d)
+
+    def put(self, ent: _Pending):
+        with self._cv:
+            self._d.append(ent)
+            self._cv.notify()
+
+    def put_front(self, ent: _Pending):
+        with self._cv:
+            self._d.appendleft(ent)
+            self._cv.notify()
+
+    def close(self):
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def take_group(self, max_rows: int, exact: bool) -> List[_Pending]:
+        """Block for the head entry, then gather up to ``max_rows`` rows.
+
+        ``exact`` (MoE dispatched / recurrent stacks) admits only rows of
+        the head's length — later same-length entries may be pulled past
+        a mismatched one (the head itself always goes, so nothing
+        starves). Returns [] once closed and drained.
+        """
+        with self._cv:
+            while not self._d and not self._closed:
+                self._cv.wait()
+            if not self._d:
+                return []
+            head = self._d.popleft()
+            group = [head]
+            if exact:
+                want = len(head.toks)
+                kept = []
+                while self._d and len(group) < max_rows:
+                    ent = self._d.popleft()
+                    if len(ent.toks) == want:
+                        group.append(ent)
+                    else:
+                        kept.append(ent)
+                for ent in reversed(kept):
+                    self._d.appendleft(ent)
+            else:
+                while self._d and len(group) < max_rows:
+                    group.append(self._d.popleft())
+            return group
+
+
+@dataclasses.dataclass
+class _Ready:
+    """One prefilled group awaiting insertion on the decode thread."""
+    entries: List[_Pending]
+    lens: List[int]
+    first: List[int]  # host first token per row (argmax at the true end)
+    mini: PyTree      # private mini paged cache holding the rows' KV/state
+    pages_per_row: int
+    next_row: int = 0
+
+
+class OverlappedServer(ContinuousServer):
+    """JetStream-style overlapped engine over ContinuousServer's state.
+
+    Same constructor as :class:`ContinuousServer` plus:
+
+    ``admit_batch``
+        rows per batched prefill group (and the fixed batch dimension of
+        the group prefill compile — smaller groups are padded with dummy
+        rows whose mini block tables stay unmapped, so their writes drop).
+    ``queue_depth``
+        bound on the ready queue (prefilled groups waiting for slots) and
+        the detokenize queue (decode steps awaiting readback) — bounded so
+        a stalled consumer applies backpressure instead of hoarding
+        device memory.
+
+    Restrictions: ``greedy=True`` only, ``rules=None`` only (see module
+    docstring). With ``spec_k >= 2`` decode runs the inherited synchronous
+    spec rounds (drafting forces host round-trips anyway) — admission
+    still overlaps.
+    """
+
+    def __init__(self, *args, admit_batch: int = 4, queue_depth: int = 8,
+                 **kwargs):
+        super().__init__(*args, **kwargs)
+        if not self.greedy:
+            raise ValueError(
+                "OverlappedServer is greedy-only: sampling consumes a "
+                "shared rng stream whose split order the detokenize "
+                "thread cannot reproduce — use ContinuousServer")
+        if self.rules is not None:
+            raise ValueError(
+                "OverlappedServer refuses sharding rules: the EP gate "
+                "keys on the global token count, so a batched prefill "
+                "could route differently from the B=1 oracle — use "
+                "ContinuousServer for mesh serving")
+        self.admit_batch = max(1, int(admit_batch))
+        self.queue_depth = max(1, int(queue_depth))
+        cfg = self.model.cfg
+        # exact-length grouping for stacks whose prefill is not
+        # padding-neutral — the same predicate that defaults
+        # prefill_bucket to 1 in ContinuousServer
+        self._exact = bool(cfg.is_moe or cfg.recurrent_type != "none")
+        # one representative compressed store: the token-path gate keys
+        # only on key presence (center/u/v), which is uniform across a
+        # model's compressed layers
+        self._store0 = (next((f for _, _, f in
+                              iter_compressed_stores(self.params)), None)
+                        if cfg.is_moe else None)
+        model = self.model
+        apply_mode = self.apply_mode
+        # group prefill twins: per-row capacity on the dispatched paths,
+        # or the capacity-free per-token path when the oracle's B=1
+        # prefill would take it (_group_uses_token_path)
+        self._prefill_row = jax.jit(
+            lambda p, b, c, pos: model.prefill(
+                p, b, c, positions=pos, last_only=False,
+                apply_mode=apply_mode, capacity_per_row=True))
+        self._prefill_tok = jax.jit(
+            lambda p, b, c, pos: model.prefill(
+                p, b, c, positions=pos, last_only=False,
+                apply_mode="fused_token"))
+        # donated decode: the previous step's cache buffers are reused in
+        # place, and next tokens stay on device (argmax in a tiny follow-on
+        # jit over the SAME materialized logits the oracle reads — bitwise
+        # the same tokens, no device->host sync on this thread)
+        self._ostep = jax.jit(
+            lambda p, toks, c, pos: model.decode_step(
+                p, {"tokens": toks[:, None]}, c, pos,
+                apply_mode=apply_mode),
+            donate_argnums=(2,))
+        self._argmax_last = jax.jit(
+            lambda lg: jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32))
+        self._cur_toks = jnp.zeros((self.num_slots,), jnp.int32)
+        self._slot_gen = np.zeros(self.num_slots, np.int64)
+        self._slot_emitted = np.zeros(self.num_slots, np.int64)
+        self.stats.update({
+            "admit_groups": 0, "admit_grouped_rows": 0,
+            "peak_admit_depth": 0, "peak_ready_depth": 0,
+            "peak_detok_depth": 0,
+        })
+        self._started = False
+        self._thread_exc: Optional[BaseException] = None
+        self._detok_tokens = 0
+        self._remaining = 0
+        self._admitq: Optional[_AdmitQueue] = None
+        self._ready_q: Optional[queue_lib.Queue] = None
+        self._detok_q: Optional[queue_lib.Queue] = None
+        self._done_q: collections.deque = collections.deque()
+
+    # -- path selection ---------------------------------------------------------
+
+    def _group_uses_token_path(self, length: int) -> bool:
+        """Mirror the oracle's per-length MoE path choice: True iff a B=1
+        prefill of ``length`` tokens would take the ragged per-token path
+        (capacity-free, exact at any batch size) — then the group forces
+        ``fused_token``; otherwise the group runs per-row capacity."""
+        if self._store0 is None:
+            return False
+        from ..models.moe import token_path_applicable
+
+        mode = self.apply_mode or self.model.cfg.resmoe.apply_mode
+        return token_path_applicable(self._store0, self.model.cfg.moe,
+                                     mode, length, rules=None)
+
+    # -- admission thread: batched prefill into a mini paged cache --------------
+
+    def _mini_cache(self, length: int, lens: List[int]) -> Tuple[PyTree, int]:
+        """A private ``admit_batch``-row paged cache for one group.
+
+        Row ``g``'s logical page ``j`` maps to mini-physical page
+        ``g * P + j`` only for the ceil(lens[g]/page_size) pages the B=1
+        oracle would allocate — writes past them (padded tails, dummy
+        rows) drop exactly as they do against the big pool. Same config
+        => same tree structure as ``self.cache``, so ``self.cache_axes``
+        names every leaf's logical axes for both.
+        """
+        g_rows = self.admit_batch
+        pages = -(-length // self.page_size)
+        mini, _ = split_logical(self.model.init_paged_cache(
+            g_rows, length, self.page_size, g_rows * pages))
+        tbl = np.full((g_rows, pages), -1, np.int32)
+        for g, s in enumerate(lens):
+            n = -(-s // self.page_size)
+            tbl[g, :n] = g * pages + np.arange(n, dtype=np.int32)
+        tbl_j = jnp.asarray(tbl)
+
+        def upd(leaf, axes):
+            if "page_table" not in axes:
+                return leaf
+            return jnp.broadcast_to(tbl_j, leaf.shape)
+
+        mini = jax.tree_util.tree_map(
+            upd, mini, self.cache_axes,
+            is_leaf=lambda x: hasattr(x, "shape"))
+        return mini, pages
+
+    def _prefill_group(self, group: List[_Pending]) -> _Ready:
+        """One batched prefill for up to ``admit_batch`` pending rows."""
+        g_rows = self.admit_batch
+        lens = [len(ent.toks) for ent in group]
+        if self._exact:
+            length = lens[0]  # take_group guarantees same-length rows
+        else:
+            length = min(
+                -(-max(lens) // self.prefill_bucket) * self.prefill_bucket,
+                self.max_seq)
+        toks = np.zeros((g_rows, length), np.int32)
+        for g, ent in enumerate(group):
+            toks[g, :lens[g]] = ent.toks
+        mini, pages = self._mini_cache(length, lens)
+        pos = jnp.broadcast_to(jnp.arange(length, dtype=jnp.int32),
+                               (g_rows, length))
+        fn = (self._prefill_tok if self._group_uses_token_path(length)
+              else self._prefill_row)
+        logits, mini = fn(self.params, {"tokens": jnp.asarray(toks)},
+                          mini, pos)
+        last = np.asarray(lens + [1] * (g_rows - len(group)), np.int32) - 1
+        first = np.asarray(self._argmax_last(
+            logits[jnp.arange(g_rows), jnp.asarray(last)][:, None, :]))
+        self.stats["admit_groups"] += 1
+        self.stats["admit_grouped_rows"] += len(group)
+        return _Ready(entries=group, lens=lens,
+                      first=[int(first[g]) for g in range(len(group))],
+                      mini=mini, pages_per_row=pages)
+
+    def _admission_main(self):
+        try:
+            while True:
+                group = self._admitq.take_group(self.admit_batch,
+                                                self._exact)
+                if not group:
+                    return  # closed and drained
+                self._ready_q.put(self._prefill_group(group))
+        except BaseException as exc:  # noqa: BLE001 — surfaced on serve()
+            self._thread_exc = exc
+
+    # -- detokenize thread: the only place that blocks on device->host ----------
+
+    def _detok_main(self):
+        dead: dict = {}  # slot -> generation whose EOS already landed
+        while True:
+            item = self._detok_q.get()
+            if item is None:
+                self._detok_q.task_done()
+                return
+            if self._thread_exc is not None:
+                self._detok_q.task_done()  # keep join() from deadlocking
+                continue
+            try:
+                dev_toks, jobs = item
+                toks = np.asarray(dev_toks)  # blocks until the step lands
+                now = time.perf_counter()
+                for slot, gen, req in jobs:
+                    if dead.get(slot) == gen:
+                        continue  # zombie step after EOS: never emitted
+                    tok = int(toks[slot])
+                    req.output.append(tok)
+                    if self.record_token_times:
+                        if req.token_times is None:
+                            req.token_times = []
+                        req.token_times.append(now)
+                    self._detok_tokens += 1
+                    if req.eos_id is not None and tok == req.eos_id:
+                        dead[slot] = gen
+                        self._done_q.append((slot, gen))
+            except BaseException as exc:  # noqa: BLE001
+                self._thread_exc = exc
+            finally:
+                self._detok_q.task_done()
+
+    # -- decode thread ----------------------------------------------------------
+
+    def _raise_thread_exc(self):
+        if self._thread_exc is not None:
+            exc, self._thread_exc = self._thread_exc, None
+            raise RuntimeError(
+                "OverlappedServer background thread failed") from exc
+
+    def _release(self, slot: int):
+        # generation bump: detok events and jobs for the old occupant are
+        # recognizably stale wherever they are in flight
+        self._slot_gen[slot] += 1
+        super()._release(slot)
+
+    def _finish_slot(self, slot: int):
+        self._release(slot)
+        self._remaining -= 1
+
+    def _apply_done_events(self):
+        while True:
+            try:
+                slot, gen = self._done_q.popleft()
+            except IndexError:
+                return
+            if not self.slot_free[slot] and self._slot_gen[slot] == gen:
+                # EOS observed by the detokenizer: the request's output
+                # already ends at the EOS token; free its state. A count-
+                # finished slot got here first -> the gen mismatches and
+                # the stale event is dropped (no double finish).
+                self._finish_slot(slot)
+
+    def _drain_detok(self):
+        """Make Request.output authoritative: wait out the detok queue and
+        apply any EOS it discovered. Called before anything that READS
+        outputs concurrently with the detokenizer (preemption resume)."""
+        if self._detok_q is not None:
+            self._detok_q.join()
+        self._apply_done_events()
+
+    def _preempt(self, slot: int, queue=None) -> None:
+        # the inherited _ensure_pages passes its queue arg; the engine
+        # re-queues on the admission deque instead (front — the oracle's
+        # resume-first policy), after draining the detokenizer so the
+        # resume tokens are complete
+        self._drain_detok()
+        if self.slot_free[slot]:
+            return  # EOS landed during the drain; nothing left to evict
+        req = self.slot_req[slot]
+        orig = self.slot_orig[slot]
+        resume = np.concatenate(
+            [orig, np.asarray(req.output, np.int32)]).astype(np.int32)
+        self._release(slot)
+        self._admitq.put_front(_Pending(req=req, toks=resume, orig=orig,
+                                        resumed=True))
+        self.stats["preemptions"] += 1
+
+    def _insert_rows(self, ready: _Ready) -> bool:
+        """Insert as many of the group's remaining rows as slots/pages
+        allow: page/state bookkeeping first, then ONE device copy for all
+        rows inserted this call. Returns True if any row was consumed."""
+        pairs: List[Tuple[int, int]] = []  # (group row, slot)
+        progressed = False
+        while ready.next_row < len(ready.entries):
+            g = ready.next_row
+            ent = ready.entries[g]
+            req = ent.req
+            s = ready.lens[g]
+            tok = ready.first[g]
+            out_len = (len(req.output) + 1) if ent.resumed else 1
+            done = (out_len >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or s >= self.max_seq)
+            if done:
+                # finish-at-admit (same rules as the oracle): emit the
+                # prefill token and never occupy a slot
+                if ent.resumed:
+                    req.output.append(tok)
+                else:
+                    req.output = [tok]
+                self._stamp(req)
+                self.stats["tokens"] += 1
+                self._remaining -= 1
+                ready.next_row += 1
+                progressed = True
+                continue
+            free = [i for i in range(self.num_slots) if self.slot_free[i]
+                    and all(i != sl for _, sl in pairs)]
+            if not free or not self.state.admit_ok(s):
+                break  # head-block: wait for decode to free slots/pages
+            slot = free[0]
+            if self.state.prepare(slot, s):
+                self._bt_dirty = True
+            if ent.resumed:
+                req.output.append(tok)
+            else:
+                req.output = [tok]
+            self._stamp(req)
+            self.stats["tokens"] += 1
+            self.slot_free[slot] = False
+            self.slot_pos[slot] = s
+            self.slot_req[slot] = req
+            self.slot_last_tok[slot] = tok
+            self.slot_orig[slot] = ent.orig
+            self.slot_seq[slot] = self._admit_counter
+            self._admit_counter += 1
+            self._slot_emitted[slot] = len(req.output)
+            self._cur_toks = self._cur_toks.at[slot].set(tok)
+            pairs.append((g, slot))
+            ready.next_row += 1
+            progressed = True
+        if pairs:
+            self._sync_block_tables()
+            self._copy_rows(ready, pairs)
+        return progressed
+
+    def _copy_rows(self, ready: _Ready, pairs: List[Tuple[int, int]]):
+        """Copy whole mini-cache pages onto the slots' pool pages and mini
+        state rows onto the slots' state rows — the batched analogue of
+        the oracle's prefill-merge, in one tree_map."""
+        pages_per_row = ready.pages_per_row
+        src_pages: List[int] = []
+        dst_pages: List[int] = []
+        src_rows: List[int] = []
+        dst_slots: List[int] = []
+        for g, slot in pairs:
+            if self.pool is not None:
+                dst = self.pool.mapped_pages(slot, ready.lens[g])
+                src_pages.extend(g * pages_per_row + j
+                                 for j in range(len(dst)))
+                dst_pages.extend(dst)
+            src_rows.append(g)
+            dst_slots.append(slot)
+        sp = jnp.asarray(src_pages, jnp.int32) if src_pages else None
+        dp = jnp.asarray(dst_pages, jnp.int32) if dst_pages else None
+        sr = jnp.asarray(src_rows, jnp.int32)
+        dr = jnp.asarray(dst_slots, jnp.int32)
+
+        def cp(big, small, axes):
+            if "page_table" in axes:
+                return big  # host-authoritative, synced separately
+            if "pages" in axes:
+                if sp is None:
+                    return big
+                ax = axes.index("pages")
+                idx = [slice(None)] * big.ndim
+                idx[ax] = dp
+                return big.at[tuple(idx)].set(jnp.take(small, sp, axis=ax))
+            if "batch" in axes:
+                # recurrent state rows: wholesale replacement, which also
+                # obsoletes the oracle's pre-admit state zeroing
+                ax = axes.index("batch")
+                idx = [slice(None)] * big.ndim
+                idx[ax] = dr
+                return big.at[tuple(idx)].set(jnp.take(small, sr, axis=ax))
+            return big
+
+        self.cache = jax.tree_util.tree_map(
+            cp, self.cache, ready.mini, self.cache_axes,
+            is_leaf=lambda x: hasattr(x, "shape"))
+
+    def _emit(self, slot: int, tok: int) -> bool:
+        # spec-mode (synchronous) emission path; async decode bypasses it
+        done = super()._emit(slot, tok)
+        if done:
+            self._remaining -= 1
+        return done
+
+    def _overlap_step(self):
+        """One donated decode step; tokens stay on device, the readback is
+        the detokenize thread's problem."""
+        pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
+        logits, self.cache = self._ostep(self.params, self._cur_toks,
+                                         self.cache, pos)
+        nxt = self._argmax_last(logits)
+        self._cur_toks = nxt
+        jobs = [(slot, int(self._slot_gen[slot]), self.slot_req[slot])
+                for slot in self._active_slots()]
+        self.stats["peak_detok_depth"] = max(
+            self.stats["peak_detok_depth"], self._detok_q.qsize() + 1)
+        self._detok_q.put((nxt, jobs))
+        for slot, _, req in jobs:
+            self.slot_pos[slot] += 1
+            self._slot_emitted[slot] += 1
+            # count-based done rules live here (no token value needed);
+            # EOS arrives later through the done queue
+            if (self._slot_emitted[slot] >= req.max_new_tokens
+                    or self.slot_pos[slot] >= self.max_seq):
+                self._finish_slot(slot)
+        self._close_step()
+
+    # -- lifecycle --------------------------------------------------------------
+
+    def warmup(self, max_len: Optional[int] = None):
+        """Precompile the engine's full shape set: one batched group
+        prefill per admissible length (every length up to the cap for
+        exact-length stacks, bucket multiples otherwise — resume lengths
+        are data-dependent, so the cap must cover prompt+budget), plus the
+        donated decode step, and with ``spec_k >= 2`` the drafter step and
+        every [B, k] verify shape the headroom cap can shrink a round to.
+        """
+        assert all(self.slot_free), "warmup() must run before traffic"
+        assert not self._started, "warmup() must run outside serve()"
+        cap = self.max_seq if max_len is None else min(max_len,
+                                                       self.max_seq)
+        if self._exact:
+            shapes = set(range(1, cap + 1))
+        else:
+            shapes = set(range(self.prefill_bucket, cap + 1,
+                               self.prefill_bucket))
+            shapes.add(cap)
+        for length in sorted(shapes):
+            ent = _Pending(req=Request(prompt=np.zeros(1, np.int32)),
+                           toks=np.zeros(length, np.int32),
+                           orig=np.zeros(length, np.int32))
+            self._prefill_group([ent])
+        self.stats["admit_groups"] = 0
+        self.stats["admit_grouped_rows"] = 0
+        toks = jnp.zeros((self.num_slots, 1), jnp.int32)
+        pos = jnp.zeros((self.num_slots, 1), jnp.int32)
+        if self.spec_k >= 2:
+            # synchronous spec decode reuses the inherited [B, 1]/[B, k]
+            # executables — warm the same set ContinuousServer.warmup does
+            self._decode(self.params, {"tokens": toks}, self.cache, pos)
+            self.drafter.step(self.params, {"tokens": toks}, self.cache,
+                              pos)
+            for k in range(2, self.spec_k + 1):
+                vt = jnp.zeros((self.num_slots, k), jnp.int32)
+                vp = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32),
+                                      (self.num_slots, k))
+                self._decode(self.params, {"tokens": vt}, self.cache, vp)
+        else:
+            # donated: the pristine cache buffers are consumed, so keep
+            # the returned ones (every table row is unmapped — the dummy
+            # writes all dropped)
+            logits, self.cache = self._ostep(self.params, self._cur_toks,
+                                             self.cache, pos)
+            self._argmax_last(logits)
+            self._cur_toks = jnp.zeros((self.num_slots,), jnp.int32)
+
+    def serve(self, requests: Sequence[Request],
+              arrival_steps: Optional[Sequence[int]] = None
+              ) -> List[Request]:
+        """Same contract as ContinuousServer.serve; overlapped execution."""
+        validated = [self._validate(r) for r in requests]
+        if arrival_steps is None:
+            arrival = [0] * len(requests)
+        else:
+            if len(arrival_steps) != len(requests):
+                raise ValueError("arrival_steps must match requests")
+            arrival = [int(a) for a in arrival_steps]
+        self._remaining = len(requests)
+        entries = []
+        for i, (req, toks) in enumerate(zip(requests, validated)):
+            if req.max_new_tokens <= 0:
+                req.output = []
+                self._remaining -= 1
+                continue
+            entries.append((arrival[i], i, _Pending(req=req, toks=toks,
+                                                    orig=toks)))
+        waiting = collections.deque(sorted(entries, key=lambda e: (e[0],
+                                                                   e[1])))
+        self._admitq = _AdmitQueue()
+        self._ready_q: queue_lib.Queue = queue_lib.Queue(
+            maxsize=self.queue_depth)
+        self._detok_q: queue_lib.Queue = queue_lib.Queue(
+            maxsize=self.queue_depth)
+        self._done_q: collections.deque = collections.deque()
+        self._detok_tokens = 0
+        self._thread_exc = None
+        self._started = True
+        admit_t = threading.Thread(target=self._admission_main,
+                                   name="admit", daemon=True)
+        detok_t = threading.Thread(target=self._detok_main, name="detok",
+                                   daemon=True)
+        admit_t.start()
+        detok_t.start()
+        pending: collections.deque = collections.deque()
+        clock = 0
+        last_progress = time.monotonic()
+        try:
+            while self._remaining > 0:
+                self._raise_thread_exc()
+                before = self._remaining
+                self._apply_done_events()
+                while waiting and waiting[0][0] <= clock:
+                    self._admitq.put(waiting.popleft()[2])
+                    self.stats["peak_admit_depth"] = max(
+                        self.stats["peak_admit_depth"], len(self._admitq))
+                while True:
+                    try:
+                        pending.append(self._ready_q.get_nowait())
+                    except queue_lib.Empty:
+                        break
+                self.stats["peak_ready_depth"] = max(
+                    self.stats["peak_ready_depth"], len(pending))
+                inserted = False
+                while pending:
+                    # strict FIFO over groups (oracle head-blocking): a
+                    # stalled head group is not overtaken by a later one
+                    head = pending[0]
+                    inserted |= self._insert_rows(head)
+                    if head.next_row < len(head.entries):
+                        break
+                    pending.popleft()
+                if not self._active_slots():
+                    clock += 1
+                    if self._remaining > 0 and not inserted \
+                            and before == self._remaining:
+                        if waiting:
+                            continue  # spin the clock toward arrivals
+                        # work is in flight on the admission thread
+                        try:
+                            pending.append(self._ready_q.get(timeout=0.005))
+                        except queue_lib.Empty:
+                            pass
+                        if time.monotonic() - last_progress > 300.0:
+                            raise RuntimeError(
+                                "OverlappedServer made no progress for "
+                                "300s with requests outstanding — "
+                                "admission pipeline wedged?")
+                    else:
+                        last_progress = time.monotonic()
+                    continue
+                last_progress = time.monotonic()
+                self._ensure_pages(self._admitq)
+                if (self._preempt_steps
+                        and self.stats["steps"] in self._preempt_steps
+                        and self._active_slots()):
+                    self._preempt_steps.discard(self.stats["steps"])
+                    victim = max(self._active_slots(),
+                                 key=lambda s: self.slot_seq[s])
+                    self._preempt(victim)
+                    if not self._active_slots():
+                        clock += 1
+                        continue
+                if self.spec_k >= 2:
+                    self._step_all()
+                else:
+                    self._overlap_step()
+                clock += 1
+        finally:
+            self._admitq.close()
+            while admit_t.is_alive():
+                # keep the bounded ready queue draining so an admission
+                # thread blocked mid-put can reach the close signal
+                try:
+                    self._ready_q.get_nowait()
+                except queue_lib.Empty:
+                    pass
+                admit_t.join(timeout=0.01)
+            self._detok_q.put(None)
+            detok_t.join()
+            self.stats["tokens"] += self._detok_tokens
+            self._detok_tokens = 0
+            self._started = False
+        self._raise_thread_exc()
+        return list(requests)

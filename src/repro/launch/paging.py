@@ -85,6 +85,21 @@ class PagePool:
     def owned(self, slot: int) -> List[int]:
         return [int(p) for p in np.flatnonzero(self.owner == slot)]
 
+    def mapped_pages(self, slot: int, num_tokens: int) -> List[int]:
+        """Physical pages backing positions [0, num_tokens) in LOGICAL
+        order — the copy destination for a batched prefill-insert
+        (launch/engine.py): the engine prefills into a private mini pool
+        and copies whole pages onto the slot's freshly prepared pages.
+        Unlike :meth:`owned` (physical-index order), the result is ordered
+        by logical page so source and destination line up."""
+        n = self.pages_needed(num_tokens)
+        row = self.block_tables[slot, :n]
+        if (row < 0).any():
+            raise RuntimeError(
+                f"slot {slot} has unmapped logical pages in [0, {n}) — "
+                "prepare() the slot before asking for its page mapping")
+        return [int(p) for p in row]
+
     def has_page(self, slot: int, logical: int) -> bool:
         return self.block_tables[slot, logical] >= 0
 

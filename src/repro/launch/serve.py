@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -79,6 +80,10 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the server
     output: Optional[List[int]] = None
+    # perf_counter stamp per emitted token, filled only when the server
+    # was built with record_token_times=True — consecutive deltas are the
+    # inter-token (TPOT) latencies the serve bench summarizes as p50/p99
+    token_times: Optional[List[float]] = None
 
 
 def sample_tokens(rng, logits: jnp.ndarray, greedy: bool):
@@ -426,6 +431,7 @@ class ContinuousServer:
         prefill_bucket: Optional[int] = None,
         preempt_steps: Optional[Sequence[int]] = None,
         spec_k: int = 0,
+        record_token_times: bool = False,
     ):
         from .paging import ServingState
 
@@ -449,6 +455,10 @@ class ContinuousServer:
         self.truncate_prompts = truncate_prompts
         self.greedy = greedy
         self.rng = jax.random.PRNGKey(seed)
+        # stamp Request.token_times at every emit — off by default (a
+        # perf_counter call per token is cheap but not free, and most
+        # callers only want outputs)
+        self.record_token_times = bool(record_token_times)
         # Admission prefills are right-padded to a multiple of this bucket
         # so the jitted prefill only ever sees a handful of shapes. Without
         # it, every preemption resume (prompt + generated-so-far) arrives
@@ -680,6 +690,13 @@ class ContinuousServer:
         self.rng, nxt = sample_tokens(self.rng, logits_row, self.greedy)
         return int(nxt)
 
+    def _stamp(self, req: Request):
+        """Append a token timestamp when latency recording is on."""
+        if self.record_token_times:
+            if req.token_times is None:
+                req.token_times = []
+            req.token_times.append(time.perf_counter())
+
     def _admit(self, ent: _Pending, slot: int):
         req = ent.req
         if not ent.resumed and req.max_new_tokens <= 0:
@@ -713,6 +730,7 @@ class ContinuousServer:
             req.output.append(nxt)
         else:
             req.output = [nxt]
+        self._stamp(req)
         self.stats["tokens"] += 1
         # same finish-at-admit rules as Server's admit + step: max_new
         # reached, instant EOS, or cache exhausted. The last case is
@@ -827,6 +845,7 @@ class ContinuousServer:
         req = self.slot_req[slot]
         self.slot_pos[slot] += 1
         req.output.append(tok)
+        self._stamp(req)
         self.stats["tokens"] += 1
         done = len(req.output) >= req.max_new_tokens or (
             req.eos_id is not None and tok == req.eos_id
@@ -1079,7 +1098,31 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
              "(below num_slots * max_seq / page_size) to trade preemptions "
              "for HBM — default fully provisions every slot",
     )
+    ap.add_argument(
+        "--overlapped", action="store_true",
+        help="serve through the overlapped engine (launch/engine.py, "
+             "DESIGN.md §13): background admission + detokenize threads "
+             "around the --paged scheduler, batched prefill-insert with "
+             "per-row expert capacity, donated decode state — greedy "
+             "outputs stay token-identical to the synchronous servers. "
+             "Requires --paged; incompatible with --mesh",
+    )
+    ap.add_argument(
+        "--admit-batch", type=int, default=4, metavar="G",
+        help="under --overlapped: rows packed into one batched admission "
+             "prefill (smaller groups are padded with dummy rows whose "
+             "page-table entries stay unmapped)",
+    )
+    ap.add_argument(
+        "--queue-depth", type=int, default=8, metavar="N",
+        help="under --overlapped: bound on the ready queue (prefilled "
+             "groups awaiting insertion) and the detokenize queue "
+             "(decode steps awaiting readback)",
+    )
     args = ap.parse_args()
+    if args.overlapped and not args.paged:
+        raise SystemExit("--overlapped requires --paged (the engine wraps "
+                         "the continuous-batching scheduler)")
     cfg = reduced_config(args.arch)
     if args.token_path_max_tokens is not None and cfg.moe is not None:
         cfg = dataclasses.replace(
@@ -1146,7 +1189,18 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
         if len(shape) != 2:
             raise SystemExit("--mesh must be DxM, e.g. 2x4")
         rules = make_rules(make_mesh(shape, ("data", "model")))
-    if args.paged:
+    if args.overlapped:
+        from .engine import OverlappedServer
+
+        server = OverlappedServer(
+            model, params, num_slots=4, max_seq=128,
+            page_size=args.page_size, pool_pages=args.pool_pages,
+            apply_mode=args.apply_mode, rules=rules,
+            param_axes=axes if rules is not None else None,
+            truncate_prompts=args.truncate_prompts, spec_k=args.spec_k,
+            admit_batch=args.admit_batch, queue_depth=args.queue_depth)
+        print(f"serving state: {server.state.describe()}")
+    elif args.paged:
         server = ContinuousServer(
             model, params, num_slots=4, max_seq=128,
             page_size=args.page_size, pool_pages=args.pool_pages,

@@ -67,10 +67,19 @@ class Model:
         return logits, aux
 
     def prefill(self, params, batch, cache, positions=None, last_only: bool = True,
-                apply_mode: Optional[str] = None):
+                apply_mode: Optional[str] = None,
+                capacity_per_row: bool = False):
+        """Prefill ``batch`` against ``cache``.
+
+        ``capacity_per_row`` makes a multi-row same-length prefill give
+        every MoE layer per-batch-row expert capacity (DESIGN.md §13), so
+        each row's output matches its own B=1 prefill — the batched
+        prefill-insert path of launch/engine.py.
+        """
         logits, new_cache, _ = tfm.forward(
             params, batch, self.cfg, cache=cache, positions=positions,
             last_only=last_only, apply_mode=apply_mode,
+            capacity_per_row=capacity_per_row,
         )
         return logits, new_cache
 

@@ -193,6 +193,45 @@ def make_dispatch(expert_ids: jnp.ndarray, num_experts: int, capacity: int):
     return token_idx, dest, keep, sort_idx
 
 
+def make_dispatch_per_row(expert_ids: jnp.ndarray, batch: int, seq: int,
+                          num_experts: int, capacity: int):
+    """Per-row dispatch for batched same-length prefill (DESIGN.md §13).
+
+    ``capacity`` is computed from ONE row's token count, and each batch row
+    is dispatched independently (vmapped :func:`make_dispatch`), so row
+    ``b``'s kept/dropped pairs are exactly what a B=1 dispatch of that row
+    would produce — batching prompts can no longer change which tokens a
+    capacity-limited expert drops. The row-local indices are then
+    globalized onto one ``[E, B*C, d]`` buffer (expert-major so the expert
+    compute paths see a contiguous per-expert block of B*C rows):
+
+      token_idx = row * seq + token_idx_row       (rows of x2d)
+      dest      = e * (B*C) + row * C + slot      (rows of the buffer)
+      sort_idx  = row * seq * k + sort_idx_row    (rows of gates_flat)
+
+    Returns the same (token_idx, dest, keep, sort_idx) contract as
+    :func:`make_dispatch` with an effective capacity of ``B*C``.
+    """
+    k = expert_ids.shape[1]
+    ids_r = expert_ids.reshape(batch, seq, k)
+    token_idx_r, dest_r, keep_r, sort_idx_r = jax.vmap(
+        lambda e: make_dispatch(e, num_experts, capacity))(ids_r)
+    row = jnp.arange(batch, dtype=jnp.int32)[:, None]
+    token_idx = (token_idx_r + row * seq).reshape(-1)
+    # recover (expert, slot) from the row-local dest; dropped pairs sit at
+    # the row-local sentinel E*C and map to the global sentinel E*B*C
+    e = dest_r // capacity
+    slot = dest_r % capacity
+    dest = jnp.where(
+        keep_r,
+        e * (batch * capacity) + row * capacity + slot,
+        num_experts * batch * capacity,
+    ).reshape(-1)
+    keep = keep_r.reshape(-1)
+    sort_idx = (sort_idx_r + row * (seq * k)).reshape(-1)
+    return token_idx, dest, keep, sort_idx
+
+
 def dispatch_tokens(x2d: jnp.ndarray, token_idx, dest, keep, num_experts: int,
                     capacity: int) -> jnp.ndarray:
     t, d = x2d.shape
@@ -388,12 +427,24 @@ def moe_layer(
     x: jnp.ndarray,  # [B, S, d]
     cfg: ModelConfig,
     apply_mode: Optional[str] = None,
+    capacity_per_row: bool = False,
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Run one MoE layer. ``params`` holds either a dense bank or a ResMoE
     compressed store (decided by key presence); ``apply_mode`` overrides
     cfg.resmoe.apply_mode
     ("restored" | "fused" | "fused_shared" | "fused_kernel" |
     "fused_token" | "center_only").
+
+    ``capacity_per_row`` switches the capacity-padded dispatch to
+    per-batch-row expert capacity (``expert_capacity(S, m)`` instead of
+    ``expert_capacity(B*S, m)``, each row dispatched independently via
+    :func:`make_dispatch_per_row`) so a batched same-length prefill drops
+    exactly the tokens each B=1 prefill would drop — the batched
+    prefill-insert path of the overlapped serving engine (DESIGN.md §13).
+    It declines the EP shard_map layer and the auto token-path crossover
+    (both reason about the GLOBAL token count); an explicit
+    ``apply_mode="fused_token"`` still wins — that path is capacity-free
+    per token, so per-row capacity is vacuous there.
 
     SVD stores with a restore-free mode and a decode-sized token batch
     (``token_path_applicable``) skip the capacity-padded dispatch and run
@@ -414,6 +465,7 @@ def moe_layer(
 
     compressed = "center" in params
     mode = apply_mode or cfg.resmoe.apply_mode
+    per_row = capacity_per_row and b > 1
 
     if mode == "center_only" and not compressed:
         # checked BEFORE the EP gate: a dense bank under a mesh would
@@ -428,7 +480,8 @@ def moe_layer(
     from .moe_ep import ep_applicable, ep_moe_layer
 
     rules = current_rules()
-    if ep_applicable(params, cfg, rules, num_tokens=t, apply_mode=mode):
+    if not per_row and ep_applicable(params, cfg, rules, num_tokens=t,
+                                     apply_mode=mode):
         y2d, aux = ep_moe_layer(params, x2d, cfg, rules, apply_mode=mode)
         return y2d.reshape(b, s, d).astype(x.dtype), aux
 
@@ -454,7 +507,8 @@ def moe_layer(
             y2d = y2d + ffn(params["dense"], x2d, cfg.activation)
         return y2d.reshape(b, s, d).astype(x.dtype), aux
 
-    if compressed and token_path_applicable(params, m, mode, t, rules=rules):
+    if (compressed and token_path_applicable(params, m, mode, t, rules=rules)
+            and (mode == "fused_token" or not per_row)):
         # ragged capacity-free decode path: no [E, C, d] buffer, no
         # capacity drops, per-token gather of the low-rank factors
         if is_quantized_store(params):
@@ -486,8 +540,17 @@ def moe_layer(
         # fused_kernel consumes the int8 factors directly (DESIGN.md §9)
         params = {**params, **dequantize_store(params)}
 
-    capacity = expert_capacity(t, m)
-    token_idx, dest, keep, sort_idx = make_dispatch(expert_ids, m.num_experts, capacity)
+    if per_row:
+        # per-row capacity: each batch row drops exactly what its B=1
+        # dispatch would; the buffer's capacity axis widens to B*C
+        row_cap = expert_capacity(s, m)
+        token_idx, dest, keep, sort_idx = make_dispatch_per_row(
+            expert_ids, b, s, m.num_experts, row_cap)
+        capacity = b * row_cap
+    else:
+        capacity = expert_capacity(t, m)
+        token_idx, dest, keep, sort_idx = make_dispatch(
+            expert_ids, m.num_experts, capacity)
     gates_flat = gates.reshape(-1)
 
     if not compressed:

@@ -185,6 +185,7 @@ def apply_block(
     positions: jnp.ndarray,
     cache: Optional[Dict] = None,
     apply_mode: Optional[str] = None,
+    capacity_per_row: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict], Dict[str, jnp.ndarray]]:
     aux = {"load_balance_loss": jnp.zeros((), jnp.float32),
            "router_z_loss": jnp.zeros((), jnp.float32)}
@@ -210,7 +211,8 @@ def apply_block(
     if spec.ffn == "ffn":
         y2 = ffn(params["ffn"], h2, cfg.activation)
     elif spec.ffn == "moe":
-        y2, aux = moe_layer(params["ffn"], h2, cfg, apply_mode=apply_mode)
+        y2, aux = moe_layer(params["ffn"], h2, cfg, apply_mode=apply_mode,
+                            capacity_per_row=capacity_per_row)
     elif spec.ffn == "rwkv_cm":
         y2, new_cache = rec.rwkv6_channel_mix(params["attn"], h2, cfg, state=new_cache)
     else:
@@ -400,6 +402,7 @@ def run_segments(
     cache: Optional[PyTree] = None,
     remat: bool = False,
     apply_mode: Optional[str] = None,
+    capacity_per_row: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[PyTree], Dict[str, jnp.ndarray]]:
     plan = build_plan(cfg)
     aux_tot = _zero_aux()
@@ -417,7 +420,7 @@ def run_segments(
                 c = slot_cache[slot_idx] if slot_cache is not None else None
                 x, nc, aux = apply_block(
                     slot_params[slot_idx], x, spec, cfg, positions, cache=c,
-                    apply_mode=apply_mode,
+                    apply_mode=apply_mode, capacity_per_row=capacity_per_row,
                 )
                 outs.append(nc)
                 aux_p = jax.tree_util.tree_map(jnp.add, aux_p, aux)
@@ -498,6 +501,7 @@ def forward(
     remat: bool = False,
     apply_mode: Optional[str] = None,
     last_only: bool = False,
+    capacity_per_row: bool = False,
 ):
     x = embed_inputs(params, batch, cfg)
     b, s, _ = x.shape
@@ -505,7 +509,8 @@ def forward(
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
     x = hint(x, ("batch", "seq", "embed_act"))
     x, new_cache, aux = run_segments(
-        params, x, cfg, positions, cache=cache, remat=remat, apply_mode=apply_mode
+        params, x, cfg, positions, cache=cache, remat=remat,
+        apply_mode=apply_mode, capacity_per_row=capacity_per_row,
     )
     if last_only:  # serving prefill: only the last position feeds sampling
         x = x[:, -1:, :]

@@ -1,0 +1,445 @@
+"""Overlapped serving engine: ``OverlappedServer`` == the sync oracle.
+
+launch/engine.py wraps the ContinuousServer scheduler in background
+admission + detokenize threads (DESIGN.md §13). Nothing about the
+threading may change greedy outputs, so the heavy differentials here
+(``engine`` CI tier) pin the engine token-for-token against the
+slot-synchronous ``Server`` across randomized schedules — dense, MoE,
+recurrent, hybrid — with forced preemption-restore and speculative
+rounds included. The unmarked tests run in tier-1: the per-row expert
+capacity argument behind batched admission prefill, the warmup
+no-recompile pin (jax executable-cache counters), the stats schema
+both paged servers promise docs/SERVING.md, and the engine's
+constructor refusals.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import MoEConfig
+from repro.launch.engine import OverlappedServer
+from repro.launch.serve import ContinuousServer, Request, Server
+from repro.models import build_model, compress_model_params
+from repro.models.moe import moe_layer
+from repro.sharding import split_logical
+
+
+def _random_schedule(seed, vocab, n_lo=2, n_hi=5, max_new_hi=7):
+    """Same shape as test_serve's schedules: a few prompts of length
+    {4, 6, 8}, random budgets, a permuted submission order and sorted
+    Poisson arrival steps (open-loop trace)."""
+    r = np.random.default_rng(seed)
+    n = int(r.integers(n_lo, n_hi + 1))
+    prompts = [r.integers(0, vocab, size=(int(r.choice([4, 6, 8])),))
+               .astype(np.int32) for _ in range(n)]
+    max_new = [int(r.integers(1, max_new_hi)) for _ in range(n)]
+    order = r.permutation(n)
+    arrivals = np.sort(r.poisson(1.0, size=n)).tolist()
+    return prompts, max_new, order, arrivals
+
+
+def _assert_engine_differential(model, params, seeds, apply_mode=None,
+                                num_slots=3, max_seq=48, page_size=4,
+                                pool_pages=9, preempt_steps=None, spec_k=0,
+                                admit_batch=3, eos_fn=None):
+    """Serve each seeded schedule through the sync oracle and the engine
+    (arrival-shuffled) and demand token identity, a pristine pool and
+    clean serving state after every schedule. Returns the engine stats."""
+    cfg = model.cfg
+    sync = Server(model, params, num_slots=3, max_seq=max_seq,
+                  apply_mode=apply_mode)
+    eng = OverlappedServer(model, params, num_slots=num_slots,
+                           max_seq=max_seq, page_size=page_size,
+                           pool_pages=pool_pages, apply_mode=apply_mode,
+                           preempt_steps=preempt_steps, spec_k=spec_k,
+                           admit_batch=admit_batch)
+    for seed in seeds:
+        prompts, max_new, order, arrivals = _random_schedule(
+            seed, cfg.vocab_size)
+        eos = [eos_fn(p) if eos_fn else None for p in prompts]
+        ra = [Request(prompt=p, max_new_tokens=m, eos_id=e)
+              for p, m, e in zip(prompts, max_new, eos)]
+        rb = [Request(prompt=p, max_new_tokens=m, eos_id=e)
+              for p, m, e in zip(prompts, max_new, eos)]
+        sync.serve(ra)
+        eng.serve([rb[i] for i in order], arrival_steps=arrivals)
+        for i, (a, b) in enumerate(zip(ra, rb)):
+            assert a.output == b.output, (seed, i, a.output, b.output)
+        if eng.pool is not None:
+            eng.pool.check()
+            assert eng.pool.pages_in_use == 0
+        eng.state.check()
+    return eng.stats
+
+
+def _dense_model():
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _compressed_mixtral_model():
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                        keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    return model, cp
+
+
+def _sequential_generate(model, params, prompt, max_new):
+    cache, _ = split_logical(model.init_cache(1, 128))
+    s = len(prompt)
+    pos = jnp.arange(s, dtype=jnp.int32)[None]
+    logits, cache = model.prefill(
+        params, {"tokens": jnp.asarray(prompt)[None]}, cache, positions=pos)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for t in range(max_new - 1):
+        p = jnp.full((1, 1), s + t, jnp.int32)
+        logits, cache = model.decode_step(
+            params, {"tokens": jnp.asarray([[out[-1]]], jnp.int32)}, cache, p)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tier-1: the per-row capacity argument behind batched admission prefill
+
+
+def test_moe_layer_per_row_capacity_matches_stacked_b1(rng):
+    """capacity_per_row=True batched MoE forward == stacking independent
+    B=1 forwards, bitwise, WITH capacity drops binding.
+
+    This is the correctness core of the engine's batched prefill
+    (DESIGN.md §13): shared-capacity dispatch would let grouped rows
+    compete for each other's expert slots. 64 tokens x top-2 over 8
+    experts is 128 assignments against a per-row capacity of 8, so some
+    expert overflows by pigeonhole — the drops are real, not vacuous."""
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.1))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    f = params["segments"][0]["slots"][0]["ffn"]
+    bank = {k: v[0] for k, v in f.items() if hasattr(v, "shape")}
+    b, s = 3, 64
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+
+    batched, _ = moe_layer(bank, x, cfg, capacity_per_row=True)
+    rows = [moe_layer(bank, x[i:i + 1], cfg)[0] for i in range(b)]
+    stacked = jnp.concatenate(rows, axis=0)
+    assert np.array_equal(np.asarray(batched), np.asarray(stacked))
+
+    # sanity: the shared-capacity batched forward DOES diverge — proof the
+    # scenario exercises capacity competition, so the per-row equality
+    # above is not an ample-capacity tautology
+    shared, _ = moe_layer(bank, x, cfg)
+    assert not np.array_equal(np.asarray(shared), np.asarray(stacked))
+
+
+def test_moe_layer_per_row_capacity_compressed_fused(rng):
+    """Same per-row == stacked-B=1 identity on a compressed store through
+    the dispatched fused path (what MoE admission prefill actually runs
+    for lengths past the token-path gate)."""
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.1),
+        resmoe=dataclasses.replace(cfg.resmoe, method="svd", keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    # slice layer 0 out of the stacked store (center/v are nested dicts)
+    store = jax.tree_util.tree_map(
+        lambda a: a[0], cp["segments"][0]["slots"][0]["ffn"])
+    b, s = 3, 64
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+
+    batched, _ = moe_layer(store, x, cfg, apply_mode="fused",
+                           capacity_per_row=True)
+    rows = [moe_layer(store, x[i:i + 1], cfg, apply_mode="fused")[0]
+            for i in range(b)]
+    assert np.array_equal(np.asarray(batched),
+                          np.asarray(jnp.concatenate(rows, axis=0)))
+
+
+# ---------------------------------------------------------------------------
+# tier-1: warmup precompiles the whole shape set (no in-loop compiles)
+
+
+def _compile_counts(srv):
+    out = {}
+    for name in ("_prefill_row", "_prefill_tok", "_ostep", "_argmax_last",
+                 "_decode", "_prefill"):
+        fn = getattr(srv, name, None)
+        if fn is not None and hasattr(fn, "_cache_size"):
+            out[name] = fn._cache_size()
+    if srv.drafter is not None:
+        out["drafter"] = srv.drafter._step._cache_size()
+    return out
+
+
+def test_engine_warmup_no_recompile_attention(rng):
+    """After warmup() the engine serves an open-loop trace without a
+    single new XLA executable — pinned by jax's per-jit cache counters."""
+    model, params = _dense_model()
+    eng = OverlappedServer(model, params, num_slots=3, max_seq=48,
+                           page_size=4, admit_batch=3)
+    eng.warmup(max_len=8 + 6)
+    before = _compile_counts(eng)
+    reqs = [Request(prompt=rng.integers(0, model.cfg.vocab_size,
+                                        size=(int(rng.choice([4, 6, 8])),))
+                    .astype(np.int32), max_new_tokens=6) for _ in range(6)]
+    eng.serve(reqs, arrival_steps=[0, 0, 1, 2, 3, 5])
+    assert _compile_counts(eng) == before
+
+
+@pytest.mark.engine
+def test_engine_warmup_no_recompile_moe_spec():
+    """MoE + spec_k engine warmup covers exact prefill lengths, all verify
+    widths AND the preemption-resume lengths (forced preemption here)."""
+    model, cp = _compressed_mixtral_model()
+    r = np.random.default_rng(0)
+    eng = OverlappedServer(model, cp, num_slots=2, max_seq=32, page_size=4,
+                           pool_pages=6, apply_mode="fused_kernel", spec_k=3,
+                           preempt_steps=[2], admit_batch=2)
+    eng.warmup(max_len=8 + 6)
+    before = _compile_counts(eng)
+    reqs = [Request(prompt=r.integers(0, model.cfg.vocab_size,
+                                      size=(int(r.choice([4, 6, 8])),))
+                    .astype(np.int32), max_new_tokens=6) for _ in range(5)]
+    eng.serve(reqs, arrival_steps=[0, 0, 1, 2, 3])
+    assert _compile_counts(eng) == before
+    assert eng.stats["preemptions"] >= 1
+
+
+@pytest.mark.spec
+def test_continuous_warmup_no_recompile_spec():
+    """ContinuousServer.warmup() already covers the speculative verify
+    widths (the drafter step + every [B, k] forward) — this pin keeps the
+    shape-set audit honest if warmup or the spec round ever changes."""
+    model, cp = _compressed_mixtral_model()
+    r = np.random.default_rng(0)
+    srv = ContinuousServer(model, cp, num_slots=2, max_seq=32, page_size=4,
+                           pool_pages=6, apply_mode="fused_kernel", spec_k=3,
+                           preempt_steps=[2])
+    srv.warmup(max_len=8 + 6)
+    before = _compile_counts(srv)
+    reqs = [Request(prompt=r.integers(0, model.cfg.vocab_size,
+                                      size=(int(r.choice([4, 6, 8])),))
+                    .astype(np.int32), max_new_tokens=6) for _ in range(5)]
+    srv.serve(reqs, arrival_steps=[0, 0, 1, 2, 3])
+    assert _compile_counts(srv) == before
+    assert srv.stats["preemptions"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# tier-1: the stats schema both paged servers promise docs/SERVING.md
+
+
+_SCHEDULER_STATS = {
+    "steps": int, "preemptions": int, "tokens": int,
+    "peak_pages_in_use": int, "page_util_sum": float,
+    "reclaimed_pages": int, "spec_rounds": int, "spec_drafted": int,
+    "spec_accepted": int, "spec_boundary_rejects": int,
+}
+_ENGINE_STATS = {
+    "admit_groups": int, "admit_grouped_rows": int,
+    "peak_admit_depth": int, "peak_ready_depth": int,
+    "peak_detok_depth": int,
+}
+_SPEC_STATS = {"rounds": int, "drafted": int, "accepted": int}
+
+
+def test_stats_schema_matches_serving_doc(rng):
+    """Every stats counter a server emits must (a) match the schema here —
+    exact key set, numeric type, non-negative — and (b) be glossed in
+    docs/SERVING.md. A new counter cannot ship undocumented; a documented
+    counter cannot silently disappear."""
+    import pathlib
+
+    doc = (pathlib.Path(__file__).parent.parent / "docs" /
+           "SERVING.md").read_text()
+    model, params = _dense_model()
+    reqs = lambda: [Request(prompt=rng.integers(
+        0, model.cfg.vocab_size, size=(6,)).astype(np.int32),
+        max_new_tokens=3) for _ in range(3)]
+
+    sync = Server(model, params, num_slots=2, max_seq=48)
+    sync.serve(reqs())
+    assert set(sync.spec_stats) == set(_SPEC_STATS)
+
+    cont = ContinuousServer(model, params, num_slots=2, max_seq=48,
+                            page_size=4)
+    cont.serve(reqs())
+    assert set(cont.stats) == set(_SCHEDULER_STATS)
+
+    eng = OverlappedServer(model, params, num_slots=2, max_seq=48,
+                           page_size=4, admit_batch=2)
+    eng.serve(reqs())
+    assert set(eng.stats) == set(_SCHEDULER_STATS) | set(_ENGINE_STATS)
+
+    schema = dict(_SCHEDULER_STATS, **_ENGINE_STATS)
+    for srv in (cont, eng):
+        for key, val in srv.stats.items():
+            assert isinstance(val, schema[key]), (key, type(val))
+            assert val >= 0, (key, val)
+            assert f"`{key}`" in doc, f"stats key {key} not in SERVING.md"
+    for key in _SPEC_STATS:
+        assert f"`{key}`" in doc, f"spec_stats key {key} not in SERVING.md"
+    # the trace ran: core counters moved and queue high-water marks are
+    # bounded by what the engine was configured with
+    assert eng.stats["tokens"] == 9 and eng.stats["admit_groups"] >= 1
+    assert eng.stats["admit_grouped_rows"] >= eng.stats["admit_groups"]
+    assert eng.stats["peak_ready_depth"] <= eng.queue_depth
+    assert eng.stats["peak_detok_depth"] <= eng.queue_depth
+
+
+# ---------------------------------------------------------------------------
+# tier-1: constructor refusals + the fast end-to-end paths
+
+
+def test_engine_refuses_sampling_and_rules():
+    from repro.launch.mesh import make_mesh
+    from repro.sharding import make_rules
+
+    model, params = _dense_model()
+    with pytest.raises(ValueError, match="greedy"):
+        OverlappedServer(model, params, num_slots=2, max_seq=48,
+                         page_size=4, greedy=False)
+    rules = make_rules(make_mesh((1, 1), ("data", "model")))
+    with pytest.raises(ValueError, match="rules"):
+        OverlappedServer(model, params, num_slots=2, max_seq=48,
+                         page_size=4, rules=rules)
+
+
+def test_engine_differential_dense_fast(rng):
+    """Tier-1 smoke of the full engine loop: two randomized schedules,
+    token-identical to the sync oracle (the heavy spread lives in the
+    `engine` tier)."""
+    model, params = _dense_model()
+    _assert_engine_differential(model, params, [0, 1])
+
+
+def test_engine_finish_at_insert_and_reuse(rng):
+    """max_new_tokens in {1, 0} finish at insertion (prefill already
+    produced the only token; 0 produces none) without ever holding a
+    decode slot, and one engine instance serves repeated traces."""
+    model, params = _dense_model()
+    eng = OverlappedServer(model, params, num_slots=2, max_seq=48,
+                           page_size=4, admit_batch=3)
+    for _ in range(2):
+        reqs = [Request(prompt=rng.integers(0, model.cfg.vocab_size,
+                                            size=(4,)).astype(np.int32),
+                        max_new_tokens=n) for n in (1, 1, 5, 0)]
+        eng.serve(reqs)
+        assert [len(q.output) for q in reqs] == [1, 1, 5, 0]
+        assert eng.pool.pages_in_use == 0
+
+
+def test_record_token_times_both_servers(rng):
+    """record_token_times=True stamps one monotonic wall-clock time per
+    emitted token on both paged servers (the bench's latency probe)."""
+    model, params = _dense_model()
+    for cls, kw in ((ContinuousServer, {}),
+                    (OverlappedServer, {"admit_batch": 2})):
+        srv = cls(model, params, num_slots=2, max_seq=48, page_size=4,
+                  record_token_times=True, **kw)
+        reqs = [Request(prompt=rng.integers(0, model.cfg.vocab_size,
+                                            size=(6,)).astype(np.int32),
+                        max_new_tokens=4) for _ in range(3)]
+        srv.serve(reqs)
+        for q in reqs:
+            assert len(q.token_times) == len(q.output) == 4
+            assert all(b >= a for a, b in zip(q.token_times,
+                                              q.token_times[1:]))
+
+
+# ---------------------------------------------------------------------------
+# engine tier: the heavy differential spread (scripts/ci.sh engine)
+
+
+@pytest.mark.engine
+def test_engine_differential_dense():
+    model, params = _dense_model()
+    stats = _assert_engine_differential(model, params, range(8))
+    assert stats["tokens"] > 0
+
+
+@pytest.mark.engine
+def test_engine_differential_dense_forced_preemption():
+    model, params = _dense_model()
+    stats = _assert_engine_differential(model, params, [3, 11],
+                                        num_slots=2, preempt_steps=[1])
+    assert stats["preemptions"] >= 1
+
+
+@pytest.mark.engine
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_engine_differential_compressed_moe(spec_k):
+    """Compressed Mixtral through the fused_kernel path with forced
+    preemption, at spec_k in {0, 2} — the engine runs speculative rounds
+    on the synchronous path but must keep threaded-admission semantics."""
+    model, cp = _compressed_mixtral_model()
+    stats = _assert_engine_differential(
+        model, cp, [3, 11], apply_mode="fused_kernel", num_slots=2,
+        max_seq=32, page_size=4, pool_pages=6, preempt_steps=[1],
+        spec_k=spec_k)
+    assert stats["preemptions"] >= 1
+    if spec_k:
+        assert stats["spec_rounds"] >= 1
+
+
+def _zoo_model(arch):
+    cfg = reduced_config(arch.split("+")[0])
+    if cfg.is_moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    apply_mode = None
+    if arch.endswith("+resmoe"):
+        cfg = dataclasses.replace(
+            cfg, moe=MoEConfig(num_experts=4, top_k=2, expert_d_ff=128,
+                               capacity_factor=8.0),
+            resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                       keep_ratio=0.5))
+        apply_mode = "fused"
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    if arch.endswith("+resmoe"):
+        params, _ = compress_model_params(params, cfg)
+    return model, params, apply_mode
+
+
+@pytest.mark.engine
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "recurrentgemma-9b",
+                                  "recurrentgemma-9b+resmoe",
+                                  "deepseek-v3-671b+resmoe"])
+def test_engine_differential_zoo(arch):
+    """Recurrent, hybrid and MLA+MoE stacks through the engine — state
+    rows splice through the same mini-cache copy as token pages — with a
+    forced preemption-restore each."""
+    model, params, apply_mode = _zoo_model(arch)
+    stats = _assert_engine_differential(model, params, [3, 11],
+                                        apply_mode=apply_mode, num_slots=2,
+                                        preempt_steps=[1])
+    assert stats["preemptions"] >= 1
+
+
+@pytest.mark.engine
+def test_engine_differential_eos_zombie():
+    """EOS lands on the detokenize thread one step late: the slot keeps
+    decoding as a zombie until the event drains back. Outputs must still
+    cut at EOS exactly like the oracle."""
+    model, params = _dense_model()
+
+    def eos_fn(prompt):
+        free = _sequential_generate(model, params, prompt, 12)
+        return free[min(2, len(free) - 1)]  # fires mid-decode
+
+    _assert_engine_differential(model, params, [5, 9], eos_fn=eos_fn)
