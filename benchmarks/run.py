@@ -29,7 +29,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: t1,t3,t4,f4,t10,t11,t12,serve,spec,"
-                         "roofline,xl")
+                         "roofline,frontier,xl")
     ap.add_argument("--fast", action="store_true",
                     help="skip the training-backed downstream eval")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -40,8 +40,8 @@ def main() -> int:
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    from . import (ablation_center, approx_error, flops_table, memory,
-                   rate_sweep, runtime)
+    from . import (ablation_center, approx_error, flops_table, frontier,
+                   memory, rate_sweep, runtime)
     from .roofline import analyze
 
     suites = [
@@ -54,6 +54,7 @@ def main() -> int:
         ("serve", runtime.serve_suite),
         ("spec", runtime.spec_decode_comparison),
         ("roofline", analyze.run),
+        ("frontier", frontier.run),
     ]
     if not args.fast:
         from . import cross_layer, downstream_eval

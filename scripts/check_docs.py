@@ -19,6 +19,11 @@ Two checks, both purely static (no jax import):
    in src/repro/launch/serve.py must appear (backticked) in
    docs/SERVING.md — the operator guide cannot silently fall behind
    the CLI.
+
+4. the store-family flags (persistence + per-layer compression plans:
+   --store-dir, --store-dtype, --plan, --byte-budget) must ALSO appear
+   (backticked) in docs/STORES.md — the store reference documents every
+   flag that shapes the on-disk artifact.
 """
 from __future__ import annotations
 
@@ -41,6 +46,8 @@ CODE_CHECKED = ("README.md", "benchmarks/README.md")
 
 SERVE_CLI = Path("src/repro/launch/serve.py")
 SERVING_DOC = Path("docs/SERVING.md")
+STORES_DOC = Path("docs/STORES.md")
+STORE_FLAGS = ("--store-dir", "--store-dtype", "--plan", "--byte-budget")
 ADD_ARG_RE = re.compile(r"add_argument\(\s*\"(--[\w-]+)\"")
 
 
@@ -129,17 +136,39 @@ def check_serve_flags(errors):
                           "backticked mention in the flag reference)")
 
 
+def check_store_flags(errors):
+    """Every store/plan-family serve flag is documented in the store
+    reference — and every flag the check requires still exists in the
+    CLI (a removed flag fails here, not silently)."""
+    cli = (ROOT / SERVE_CLI).read_text()
+    cli_flags = set(ADD_ARG_RE.findall(cli))
+    doc = ROOT / STORES_DOC
+    if not doc.exists():
+        errors.append(f"{STORES_DOC}: missing (the compressed-store "
+                      "reference)")
+        return
+    text = doc.read_text()
+    for flag in STORE_FLAGS:
+        if flag not in cli_flags:
+            errors.append(f"scripts/check_docs.py STORE_FLAGS lists {flag} "
+                          f"but {SERVE_CLI} no longer defines it")
+        if f"`{flag}`" not in text:
+            errors.append(f"{STORES_DOC}: store flag {flag} undocumented "
+                          "(no backticked mention)")
+
+
 def main() -> int:
     errors: list = []
     check_links(errors)
     check_code_blocks(errors)
     check_serve_flags(errors)
+    check_store_flags(errors)
     for e in errors:
         print(f"FAIL {e}")
     if errors:
         return 1
     print("docs OK: links + README code references + serve CLI flag "
-          "coverage resolve")
+          "coverage + store flag coverage resolve")
     return 0
 
 

@@ -14,11 +14,15 @@ Purely static (no jax import — runs in ~10 ms like check_docs.py):
   * the required speculative-decoding rows come from ``SPEC_PARITY_MODES``
     (``launch/spec.py``) crossed with ``STORE_DTYPES`` — every restore-free
     verifier path x store dtype needs a spec-vs-plain token-identity test;
+  * the required plan-trimming rows come from ``TRIM_TIERS``
+    (``core/plan.py``) — every trimming tier (rank / dtype / expert /
+    block) needs a differential test of the per-layer-plan store;
   * coverage is declared in test docstrings/comments with the markers
 
         # PARITY: <apply_mode>/<store_dtype>
         # PARITY: mixer/<mixer_kind>
         # PARITY: spec/<apply_mode>-<store_dtype>
+        # PARITY: plan/<trim_tier>
 
     placed on the test that asserts that combination's output parity
     (e.g. tests/test_quant.py covers the int8 column, tests/test_moe.py
@@ -65,6 +69,10 @@ def main() -> int:
                                    spec)
     required |= {("spec", f"{m}-{d}") for m in spec_modes for d in dtypes}
 
+    plan = ROOT / "src/repro/core/plan.py"
+    tiers = _tuple_of_strings(plan.read_text(), "TRIM_TIERS", plan)
+    required |= {("plan", t) for t in tiers}
+
     covered = {}
     for test in sorted((ROOT / "tests").glob("test_*.py")):
         for m, d in MARKER_RE.findall(test.read_text()):
@@ -84,6 +92,10 @@ def main() -> int:
             print(f"FAIL no speculative-decoding parity test declared for "
                   f"{d} — add a spec_k differential and mark it "
                   f"'# PARITY: spec/{d}'")
+        elif m == "plan":
+            print(f"FAIL no differential test declared for plan trimming "
+                  f"tier {d!r} (TRIM_TIERS, core/plan.py) — add one and "
+                  f"mark it '# PARITY: plan/{d}'")
         else:
             print(f"FAIL no parity test declared for apply_mode={m} "
                   f"store_dtype={d} — add one and mark it '# PARITY: {m}/{d}'")
@@ -91,7 +103,8 @@ def main() -> int:
         return 1
     print(f"parity matrix OK: {len(modes)} apply modes x {len(dtypes)} "
           f"store dtypes + {len(kinds)} mixer kinds + {len(spec_modes)} "
-          f"spec verifier modes x {len(dtypes)} dtypes all covered")
+          f"spec verifier modes x {len(dtypes)} dtypes + {len(tiers)} "
+          "plan trimming tiers all covered")
     return 0
 
 

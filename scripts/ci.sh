@@ -28,6 +28,12 @@
 #                            # sync oracle across dense/MoE/recurrent/
 #                            # hybrid stacks, forced preemption and
 #                            # spec_k in {0, 2} included
+#   scripts/ci.sh compress   # compressed-store persist/boot roundtrips:
+#                            # heterogeneous (per-layer plan) stores booted
+#                            # from disk == in-memory through both paged
+#                            # servers (preemption, spec_k in {0, 2}), plus
+#                            # CLI subprocess roundtrips for fp32 / int8 /
+#                            # --plan / --byte-budget stores
 #   scripts/ci.sh docs       # broken md links / stale README references /
 #                            # serve CLI flag coverage in docs/SERVING.md /
 #                            # apply-mode x store-dtype parity-test matrix
@@ -88,8 +94,15 @@ assert any("int8" in k for k in quant), \
 spec = [k for k in rows if k.startswith("SERVE/spec/")]
 assert any("accepted_tok_per_step" in k for k in spec), \
     f"no spec acceptance rows in bench artifact ({len(rows)} rows)"
+# the store-bytes/quality frontier (benchmarks/frontier.py) must land:
+# the uniform curve plus the budget plan that Pareto-dominates it
+front = [k for k in rows if k.startswith("FRONTIER/")]
+assert any("dominates" in k for k in front), \
+    f"no frontier dominance row in bench artifact ({len(rows)} rows)"
+assert sum("uniform" in k for k in front) >= 4, \
+    f"frontier uniform curve too sparse ({len(front)} rows)"
 print(f"bench artifact OK: {len(quant)} quantized rows, "
-      f"{len(spec)} spec rows of {len(rows)}")
+      f"{len(spec)} spec rows, {len(front)} frontier rows of {len(rows)}")
 PY
 }
 
@@ -131,6 +144,16 @@ engine() {
     python -m pytest -q -m engine tests/
 }
 
+# Compress tier: the store persistence/boot matrix (tests/
+# test_plan_serving.py) — disk-booted trimmed + mixed-rank + mixed-dtype
+# stores must serve token-identically to the in-memory tree through
+# ContinuousServer AND OverlappedServer (forced preemption, spec_k 0/2),
+# and the four CLI flows (uniform fp32, uniform int8, --plan,
+# --byte-budget) roundtrip as subprocesses with diffed outputs.
+compress() {
+    python -m pytest -q -m compress tests/
+}
+
 # Docs tier: intra-repo markdown links must resolve, README code blocks
 # must reference real modules/paths/flags, the serve CLI must be fully
 # documented in docs/SERVING.md, and every (apply_mode, store_dtype)
@@ -149,7 +172,8 @@ case "${1:-tier1}" in
     zoo)      zoo ;;
     spec)     spec ;;
     engine)   engine ;;
+    compress) compress ;;
     docs)     docs ;;
-    all)      tier1; kernels; multidev; bench; soak; zoo; spec; engine; docs ;;
-    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|zoo|spec|engine|docs|all]" >&2; exit 2 ;;
+    all)      tier1; kernels; multidev; bench; soak; zoo; spec; engine; compress; docs ;;
+    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|zoo|spec|engine|compress|docs|all]" >&2; exit 2 ;;
 esac

@@ -5,6 +5,7 @@ from .checkpointer import (
     load_compressed_store,
     reshard,
     save_compressed_store,
+    validate_store_meta,
 )
 
 __all__ = [
@@ -14,4 +15,5 @@ __all__ = [
     "load_compressed_store",
     "reshard",
     "save_compressed_store",
+    "validate_store_meta",
 ]

@@ -231,7 +231,13 @@ def reshard(tree: PyTree, shardings: PyTree) -> PyTree:
 #     <dir>/                                      atomic rename on completion
 
 _STORE_MANIFEST = "store_manifest.json"
-_STORE_FORMAT = "resmoe-store-v1"
+# v1: flat homogeneous store. v2 adds plan-aware meta: the serialized
+# per-layer CompressionPlan (meta["plan"], core/plan.py JSON schema) plus
+# num_experts / d_model for boot-time config validation. The loader
+# accepts both; the writer emits v2 (docs/STORES.md).
+_STORE_FORMAT_V1 = "resmoe-store-v1"
+_STORE_FORMAT = "resmoe-store-v2"
+_STORE_FORMATS = (_STORE_FORMAT_V1, _STORE_FORMAT)
 
 
 def has_compressed_store(directory: str) -> bool:
@@ -325,12 +331,18 @@ def load_compressed_store(directory: str) -> Tuple[PyTree, Dict]:
             "mid-write leaves only a .tmp dir)")
     with open(manifest_path) as f:
         manifest = json.load(f)
-    if manifest.get("format") != _STORE_FORMAT:
+    if manifest.get("format") not in _STORE_FORMATS:
         raise ValueError(f"unknown store format {manifest.get('format')!r} "
-                         f"at {directory!r} (expected {_STORE_FORMAT!r})")
+                         f"at {directory!r} (expected one of "
+                         f"{_STORE_FORMATS})")
     data = np.load(os.path.join(directory, "store.npz"))
     leaves = {}
     for key, spec in manifest["leaves"].items():
+        if key not in data.files:
+            raise ValueError(
+                f"store leaf {key!r} is named in {_STORE_MANIFEST} but "
+                f"missing from store.npz at {directory!r} — corrupted "
+                "store (truncated write? mixed files from two saves?)")
         arr = _decode(data[key], spec["dtype"])
         if list(arr.shape) != spec["shape"]:
             raise ValueError(
@@ -338,3 +350,24 @@ def load_compressed_store(directory: str) -> Tuple[PyTree, Dict]:
                 f"manifest {spec['shape']} — corrupted store")
         leaves[key] = arr
     return _unflatten_keys(leaves), manifest["meta"]
+
+
+def validate_store_meta(meta: Dict, cfg) -> None:
+    """Refuse a store whose recorded model shape disagrees with ``cfg``.
+
+    Checks the v2 meta fields (num_experts, d_model) when present — a v1
+    store without them passes (nothing to disagree with). Raises
+    ValueError with both sides named; serve.py turns this into a clean
+    boot failure instead of a shape error deep inside the forward pass.
+    """
+    checks = []
+    if cfg.moe is not None:
+        checks.append(("num_experts", cfg.moe.num_experts))
+    checks.append(("d_model", cfg.d_model))
+    for key, want in checks:
+        got = meta.get(key)
+        if got is not None and int(got) != int(want):
+            raise ValueError(
+                f"compressed store was built for {key}={got} but the "
+                f"booting model config {cfg.name!r} has {key}={want} — "
+                "wrong --store-dir for this --arch?")

@@ -7,7 +7,7 @@ plus a reduced preset for CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Sub-configs
@@ -99,6 +99,12 @@ class ResMoEConfig:
     # ~4x fewer factor HBM bytes, served by the dequant-fused kernels.
     # method="svd" only (dense-delta stores have no factored form).
     store_dtype: str = "fp32"
+    # Optional per-layer CompressionPlan (core/plan.py): one LayerRecipe per
+    # ORIGINAL model layer overriding rank / store_dtype / dropped experts /
+    # dropped blocks. None = the uniform settings above apply everywhere.
+    # Typed Any to keep configs import-free of core; validated lazily below
+    # and structurally (length, expert bounds) in ModelConfig.__post_init__.
+    plan: Optional[Any] = None
 
     APPLY_MODES = ("restored", "fused", "fused_shared", "fused_kernel",
                    "fused_token", "center_only")
@@ -115,6 +121,23 @@ class ResMoEConfig:
                 f"unknown resmoe store_dtype {self.store_dtype!r}; "
                 f"expected one of {self.STORE_DTYPES}"
             )
+        if not (0.0 < self.keep_ratio <= 1.0):
+            raise ValueError(
+                f"resmoe keep_ratio must be in (0, 1], got "
+                f"{self.keep_ratio!r} — 0 keeps no residual (use "
+                "apply_mode='center_only' for that) and >1 would grow "
+                "the store"
+            )
+        if self.plan is not None:
+            # lazy import: configs must stay importable without core (the
+            # core package itself imports this module)
+            from ..core.plan import CompressionPlan
+
+            if not isinstance(self.plan, CompressionPlan):
+                raise TypeError(
+                    f"resmoe plan must be a core.plan.CompressionPlan, "
+                    f"got {type(self.plan).__name__}"
+                )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,6 +198,38 @@ class ModelConfig:
     def __post_init__(self):
         if self.head_dim is None:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.resmoe.enabled and self.resmoe.method == "svd" and self.is_moe:
+            # the derived SVD rank of the residual [f, d_design] must be at
+            # least 1 — catch a too-small keep_ratio here with a clear error
+            # instead of deep inside core/residual.py
+            f = self.moe.expert_d_ff
+            dd = (3 * self.d_model + 2) if self.glu else (2 * self.d_model + 1)
+            derived = int(round(self.resmoe.keep_ratio * f * dd / (f + dd)))
+            if derived < 1:
+                raise ValueError(
+                    f"resmoe keep_ratio={self.resmoe.keep_ratio} derives SVD "
+                    f"rank {derived} (< 1) for the [{f}, {dd}] residual of "
+                    f"{self.name!r} — raise keep_ratio to at least "
+                    f"{(f + dd) / (2 * f * dd):.6f}"
+                )
+        if self.resmoe.plan is not None:
+            plan = self.resmoe.plan
+            plan.validate(
+                self.num_layers,
+                self.moe.num_experts if self.is_moe else None,
+            )
+            for i, rec in enumerate(plan.recipes):
+                is_moe_layer = (
+                    self.is_moe
+                    and i >= self.moe_first_layer
+                    and ((i - self.moe_first_layer) % self.moe_every == 0)
+                )
+                if not is_moe_layer and not (rec.is_default or rec.drop_block):
+                    raise ValueError(
+                        f"plan layer {i} of {self.name!r} sets MoE "
+                        f"compression options ({rec!r}) but layer {i} is "
+                        "not a MoE layer — only drop_block applies there"
+                    )
 
     # -- derived quantities -------------------------------------------------
 

@@ -15,6 +15,15 @@ from .compress import (
     split_design,
 )
 from .ot import exact_assignment, ot_permutation, sinkhorn
+from .plan import (
+    TRIM_TIERS,
+    CompressionPlan,
+    LayerRecipe,
+    PlanCandidate,
+    layer_candidates,
+    recipe_store_bytes,
+    solve_plan,
+)
 from .quant import (
     STORE_DTYPES,
     dequantize_int8,
@@ -31,6 +40,12 @@ from .residual import (
     prune_block,
     prune_unstructured,
     svd_rank_for_ratio,
+)
+from .trim import (
+    expert_residual_energy,
+    hidden_state_similarity,
+    select_dropped_blocks,
+    select_dropped_experts,
 )
 
 __all__ = [
@@ -50,6 +65,17 @@ __all__ = [
     "exact_assignment",
     "ot_permutation",
     "sinkhorn",
+    "TRIM_TIERS",
+    "CompressionPlan",
+    "LayerRecipe",
+    "PlanCandidate",
+    "layer_candidates",
+    "recipe_store_bytes",
+    "solve_plan",
+    "expert_residual_energy",
+    "hidden_state_similarity",
+    "select_dropped_blocks",
+    "select_dropped_experts",
     "STORE_DTYPES",
     "dequantize_int8",
     "dequantize_store",

@@ -160,8 +160,13 @@ def compress_bank(
     ot_solver: str = "exact",
     block_shape: Tuple[int, int] = (8, 128),
     seed: int = 0,
+    rank: Optional[int] = None,
 ) -> LayerCompression:
-    """Run the full ResMoE pipeline (Algorithm 1) on one expert bank."""
+    """Run the full ResMoE pipeline (Algorithm 1) on one expert bank.
+
+    ``rank`` overrides the keep_ratio-derived SVD rank — the per-layer
+    compression plans (core/plan.py) use this to allocate rank per layer.
+    """
     design = design_matrices(bank)  # [N, f, dd]
     bc: BarycenterResult = barycenter_by_name(
         center,
@@ -176,7 +181,8 @@ def compress_bank(
     for k in range(design.shape[0]):
         aligned = design[k][bc.perms[k]]
         delta = aligned - bc.center
-        residuals.append(compress_residual(delta, method, keep_ratio, block_shape))
+        residuals.append(
+            compress_residual(delta, method, keep_ratio, block_shape, rank=rank))
     return LayerCompression(
         center=bc.center.astype(np.float32),
         residuals=residuals,

@@ -1,0 +1,371 @@
+"""Per-layer compression plans: trimming tiers + rank/dtype under a budget.
+
+The paper compresses every MoE layer with one global ``keep_ratio``, but its
+own §5.4 observes that residual energy is far from uniform across layers and
+experts — some experts are nearly the barycenter already. A
+:class:`CompressionPlan` turns that observation into a deployable artifact:
+one :class:`LayerRecipe` per transformer layer, each naming
+
+  * ``rank``        — this layer's truncated-SVD residual rank (None =
+                      derive from the global ``keep_ratio``);
+  * ``store_dtype`` — this layer's serving-store dtype (fp32 / int8);
+  * ``drop_experts``— experts whose residual factors are removed entirely.
+                      Router logits are NOT retrained: the store carries an
+                      ``expert_map`` remap so a dropped expert resolves to
+                      the shared barycenter center, which is free — the
+                      center is already resident for the spec-decode
+                      drafter (models/moe.py, DESIGN.md §12);
+  * ``drop_block``  — the whole transformer block is removed (selected by
+                      hidden-state similarity, core/trim.py — the
+                      Unified-MoE-Compression "Expert Trimming" recipe).
+
+Plans ride on ``ResMoEConfig.plan``; models/transformer.py attaches each
+recipe to its LayerSpec, which automatically splits scanned segments only
+where recipes actually differ. checkpoint/checkpointer.py persists the plan
+in the v2 store manifest so ``serve.py --store-dir`` boots any point on the
+memory/quality frontier without recompression.
+
+:func:`solve_plan` is the greedy byte-budget search over per-layer
+candidate (rank, dtype) settings scored by the same approximation-error
+metric as benchmarks/approx_error.py; benchmarks/frontier.py composes it
+with the downstream-eval harness and asserts the searched plan
+Pareto-dominates the best uniform setting at equal byte budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..configs.base import ResMoEConfig
+
+# The plan dimensions scripts/check_parity_matrix.py requires a
+# `# PARITY: plan/<tier>` differential test for — adding a trimming tier
+# here fails the docs CI tier until a parity test covers it.
+TRIM_TIERS = ("rank", "dtype", "expert", "block")
+
+
+# ---------------------------------------------------------------------------
+# Recipes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerRecipe:
+    """Compression settings for ONE transformer layer.
+
+    Frozen and hashable so it can ride on models/transformer.py's
+    LayerSpec: two layers stack into one scanned segment iff their whole
+    specs — recipes included — compare equal.
+    """
+
+    rank: Optional[int] = None
+    store_dtype: str = "fp32"
+    drop_experts: Tuple[int, ...] = ()
+    drop_block: bool = False
+
+    def __post_init__(self):
+        if self.rank is not None and self.rank < 1:
+            raise ValueError(
+                f"LayerRecipe.rank must be >= 1, got {self.rank!r} — rank 0 "
+                "stores nothing; drop the experts or the block instead")
+        if self.store_dtype not in ResMoEConfig.STORE_DTYPES:
+            raise ValueError(
+                f"LayerRecipe.store_dtype {self.store_dtype!r} not in "
+                f"{ResMoEConfig.STORE_DTYPES}")
+        drops = tuple(int(e) for e in self.drop_experts)
+        if len(set(drops)) != len(drops) or any(e < 0 for e in drops):
+            raise ValueError(
+                f"LayerRecipe.drop_experts must be distinct non-negative "
+                f"expert indices, got {self.drop_experts!r}")
+        # canonical order: recipes that drop the same set compare equal
+        object.__setattr__(self, "drop_experts", tuple(sorted(drops)))
+
+    @property
+    def is_default(self) -> bool:
+        """True when this recipe changes nothing vs the global config."""
+        return (self.rank is None and self.store_dtype == "fp32"
+                and not self.drop_experts and not self.drop_block)
+
+    def to_json(self) -> Dict:
+        return {
+            "rank": self.rank,
+            "store_dtype": self.store_dtype,
+            "drop_experts": list(self.drop_experts),
+            "drop_block": bool(self.drop_block),
+        }
+
+    @classmethod
+    def from_json(cls, obj: Dict) -> "LayerRecipe":
+        return cls(
+            rank=obj.get("rank"),
+            store_dtype=obj.get("store_dtype", "fp32"),
+            drop_experts=tuple(obj.get("drop_experts", ())),
+            drop_block=bool(obj.get("drop_block", False)),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan:
+    """One LayerRecipe per ORIGINAL layer index (length = cfg.num_layers).
+
+    Dropped blocks keep their slot in ``recipes`` — the plan is indexed by
+    the dense model's layer order, and models/transformer.py omits dropped
+    layers when it builds the serving layer list.
+    """
+
+    recipes: Tuple[LayerRecipe, ...]
+
+    def __post_init__(self):
+        recipes = tuple(self.recipes)
+        if not recipes:
+            raise ValueError("CompressionPlan needs at least one recipe")
+        if not all(isinstance(r, LayerRecipe) for r in recipes):
+            raise TypeError("CompressionPlan.recipes must be LayerRecipes")
+        object.__setattr__(self, "recipes", recipes)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.recipes)
+
+    def validate(self, num_layers: int, num_experts: Optional[int] = None):
+        """Structural checks against a model's shape (clear, early errors)."""
+        if len(self.recipes) != num_layers:
+            raise ValueError(
+                f"plan has {len(self.recipes)} recipes but the model has "
+                f"{num_layers} layers — one recipe per ORIGINAL layer, "
+                "dropped blocks included")
+        if all(r.drop_block for r in self.recipes):
+            raise ValueError("plan drops every block — nothing left to serve")
+        if num_experts is not None:
+            for i, r in enumerate(self.recipes):
+                if any(e >= num_experts for e in r.drop_experts):
+                    raise ValueError(
+                        f"plan layer {i} drops expert(s) "
+                        f"{[e for e in r.drop_experts if e >= num_experts]} "
+                        f"but the model has only {num_experts} experts")
+                if len(r.drop_experts) >= num_experts:
+                    raise ValueError(
+                        f"plan layer {i} drops all {num_experts} experts — "
+                        "use drop_block (or apply_mode='center_only') for a "
+                        "center-only layer")
+
+    def to_json(self) -> Dict:
+        return {"layers": [r.to_json() for r in self.recipes]}
+
+    @classmethod
+    def from_json(cls, obj: Dict) -> "CompressionPlan":
+        return cls(tuple(LayerRecipe.from_json(r) for r in obj["layers"]))
+
+    @classmethod
+    def uniform(cls, num_layers: int, rank: Optional[int] = None,
+                store_dtype: str = "fp32") -> "CompressionPlan":
+        return cls(tuple(LayerRecipe(rank=rank, store_dtype=store_dtype)
+                         for _ in range(num_layers)))
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting + per-layer candidate scoring
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"fp32": 4, "int8": 1}
+_SCALE_BYTES = 4  # fp32 per-channel scales of the int8 store
+
+
+def recipe_store_bytes(segs: Sequence[Tuple[str, int]], f: int, e_kept: int,
+                       rank: int, store_dtype: str,
+                       num_experts: Optional[int] = None) -> int:
+    """Serving-store *factor* bytes of one layer under a candidate setting.
+
+    Counts center + u + v (+ int8 scales + the trim remap) — the bytes a
+    plan actually moves. Fixed per-layer costs (router, norms, biases) are
+    identical across candidates and budget-neutral, so they are excluded;
+    benchmarks/frontier.py reports the measured on-disk store size
+    alongside this analytic accounting.
+
+    ``segs`` is the design-matrix segment list (core/compress.py::
+    bank_design_dims) — (name, width) pairs whose widths sum to d_design.
+    """
+    ib = _DTYPE_BYTES[store_dtype]
+    dd = sum(w for _, w in segs)
+    n = f * dd * ib                      # center, all segments
+    n += e_kept * f * rank * ib          # u
+    n += e_kept * rank * dd * ib         # v, all segments
+    if store_dtype == "int8":
+        # center scales: one per output channel per segment (w1/w3 -> f,
+        # w2 -> d); u/v scales: [E, r] per factor (core/quant.py)
+        for name, width in segs:
+            n += (width if name == "w2" else f) * _SCALE_BYTES
+        n += e_kept * rank * _SCALE_BYTES            # u_scale
+        n += len(segs) * e_kept * rank * _SCALE_BYTES  # v_scale per segment
+    if num_experts is not None and e_kept < num_experts:
+        n += num_experts * 4  # int32 expert_map remap
+    return int(n)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCandidate:
+    """One (recipe, cost, score) point on a layer's frontier."""
+
+    recipe: LayerRecipe
+    bytes: int
+    error: float
+
+
+def _fake_quant(x: np.ndarray, reduce_axis: int) -> np.ndarray:
+    """dequant(quant(x)) in numpy — the int8 scoring surrogate."""
+    from .quant import quantize_int8
+
+    q, s = quantize_int8(x, reduce_axis)
+    return q.astype(np.float32) * np.expand_dims(s, reduce_axis)
+
+
+def _fake_quant_center(center: np.ndarray,
+                       segs: Sequence[Tuple[str, int]]) -> np.ndarray:
+    """Per-segment int8 round-trip of a design-layout center [f, dd].
+
+    Mirrors core/quant.py's model-layout channel choice: w1/w3 segments
+    quantize per row (the store's [d, f] output channel = the design's f
+    row), w2 per column. Width-1 bias segments stay fp32 (the store never
+    quantizes them).
+    """
+    parts = []
+    col = 0
+    for name, width in segs:
+        chunk = center[:, col:col + width]
+        col += width
+        if name in ("b1", "b3"):
+            parts.append(chunk)
+        elif name == "w2":
+            parts.append(_fake_quant(chunk, 0))
+        else:
+            parts.append(_fake_quant(chunk, 1))
+    return np.concatenate(parts, axis=1)
+
+
+def layer_candidates(
+    bank: Dict[str, np.ndarray],
+    ranks: Sequence[int],
+    dtypes: Sequence[str] = ("fp32", "int8"),
+    drop_experts: Tuple[int, ...] = (),
+    center: str = "wb",
+    barycenter_iters: int = 10,
+    ot_solver: str = "exact",
+    seed: int = 0,
+) -> List[PlanCandidate]:
+    """Score every (rank, dtype) setting for one expert bank.
+
+    The expensive barycenter runs ONCE at the largest candidate rank; each
+    smaller rank is a free truncation of the same SVD factors (the leading
+    singular directions are nested), so scoring a whole candidate grid
+    costs one compression. Errors use the same §5.2 metric as
+    LayerCompression.approximation_error; int8 candidates score a
+    fake-quantized round trip of center and factors.
+    """
+    from .compress import compress_bank, design_matrices
+
+    ranks = sorted(set(int(r) for r in ranks))
+    if not ranks or ranks[0] < 1:
+        raise ValueError(f"candidate ranks must be >= 1, got {ranks!r}")
+    for dt in dtypes:
+        if dt not in _DTYPE_BYTES:
+            raise ValueError(f"unknown candidate store_dtype {dt!r}")
+    lc = compress_bank(bank, method="svd", keep_ratio=1.0, center=center,
+                       barycenter_iters=barycenter_iters,
+                       ot_solver=ot_solver, seed=seed, rank=max(ranks))
+    design = design_matrices(bank)
+    n, f, dd = design.shape
+    kept = [k for k in range(n) if k not in set(drop_experts)]
+    aligned = np.stack([design[k][lc.perms[k]] for k in range(n)])
+    drop = tuple(sorted(int(e) for e in drop_experts))
+
+    out: List[PlanCandidate] = []
+    for dt in dtypes:
+        c = (_fake_quant_center(lc.center, lc.segs) if dt == "int8"
+             else lc.center)
+        # dropped experts are served AS the center: their error term is the
+        # full aligned residual against the (possibly quantized) center
+        base_err = sum(float(((aligned[k] - c) ** 2).sum())
+                       for k in range(n) if k not in kept)
+        for r in ranks:
+            tot = base_err
+            for k in kept:
+                u = lc.residuals[k].u[:, :r]
+                v = lc.residuals[k].v[:r, :]
+                if dt == "int8":
+                    u = _fake_quant(u, 0)   # per rank channel over f
+                    v = _fake_quant(v, 1)   # per rank channel over dd
+                diff = aligned[k] - (c + u @ v)
+                tot += float((diff * diff).sum())
+            out.append(PlanCandidate(
+                recipe=LayerRecipe(rank=r, store_dtype=dt,
+                                   drop_experts=drop),
+                bytes=recipe_store_bytes(lc.segs, f, len(kept), r, dt,
+                                         num_experts=n),
+                error=tot / n / f,
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Greedy byte-budget search
+# ---------------------------------------------------------------------------
+
+
+def solve_plan(
+    candidates: Sequence[Sequence[PlanCandidate]],
+    byte_budget: int,
+    start: Optional[Sequence[int]] = None,
+) -> List[PlanCandidate]:
+    """Allocate one candidate per layer under a total byte budget.
+
+    Greedy knapsack: start from ``start`` (candidate index per layer —
+    e.g. the best uniform setting, which makes the result dominate it by
+    construction) or from each layer's cheapest candidate, then repeatedly
+    apply the single-layer move with the best error reduction per byte
+    that still fits the budget. Moves that reduce error at equal or lower
+    bytes are taken unconditionally first (ratio = inf). Total error
+    strictly decreases every move, so the search terminates.
+
+    Returns the chosen PlanCandidate per layer (same order as
+    ``candidates``); the caller maps them back onto full-model recipes.
+    """
+    if not candidates:
+        raise ValueError("solve_plan: no layers to allocate")
+    if start is not None:
+        if len(start) != len(candidates):
+            raise ValueError("solve_plan: start must index every layer")
+        choice = [cands[i] for cands, i in zip(candidates, start)]
+    else:
+        choice = [min(cands, key=lambda c: c.bytes) for cands in candidates]
+    total = sum(c.bytes for c in choice)
+    floor = sum(min(c.bytes for c in cands) for cands in candidates)
+    if floor > byte_budget:
+        raise ValueError(
+            f"byte budget {byte_budget} is below the cheapest plan "
+            f"({floor} bytes) — raise the budget or add smaller candidates")
+    if total > byte_budget:  # an over-budget seed falls back to the floor
+        choice = [min(cands, key=lambda c: c.bytes) for cands in candidates]
+        total = sum(c.bytes for c in choice)
+
+    while True:
+        best = None  # (ratio, -derr, layer, cand)
+        for li, cands in enumerate(candidates):
+            cur = choice[li]
+            for cand in cands:
+                if cand.error >= cur.error:
+                    continue
+                dbytes = cand.bytes - cur.bytes
+                if total + dbytes > byte_budget:
+                    continue
+                derr = cur.error - cand.error
+                ratio = float("inf") if dbytes <= 0 else derr / dbytes
+                key = (ratio, derr)
+                if best is None or key > best[0]:
+                    best = (key, li, cand)
+        if best is None:
+            return choice
+        _, li, cand = best
+        total += cand.bytes - choice[li].bytes
+        choice[li] = cand

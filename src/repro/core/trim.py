@@ -1,0 +1,99 @@
+"""Trimming heuristics: what to DROP before slimming what remains.
+
+Unified-MoE-Compression's ablation (PAPERS.md) shows "Expert Trimming" —
+removing whole experts, layers, or blocks — composes with "Expert
+Slimming" like ResMoE's low-rank residuals; SEER-MoE reaches the same
+conclusion from the regularization side. This module holds the pure
+scoring/selection logic; the model-running capture lives in
+models/model.py (``block_hidden_similarities``) so core never imports
+models.
+
+Two tiers:
+
+* **block drop** — rank transformer blocks by mean token cosine between
+  block input and block output hidden states (a block that barely rotates
+  the residual stream is nearly the identity and can be removed — the
+  block-drop recipe of Unified-MoE-Compression).
+* **expert drop** — rank experts within a layer by residual energy
+  ``||aligned_k - center||_F^2`` against the Wasserstein barycenter; the
+  paper's §5.4 observation is that some experts are nearly the barycenter
+  already, so serving them AS the center (via the store's expert_map
+  remap) is almost free.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+
+def hidden_state_similarity(h_in: np.ndarray, h_out: np.ndarray) -> float:
+    """Mean token cosine similarity between a block's input and output.
+
+    ``h_in``/``h_out`` are [..., tokens, d_model]; high similarity means
+    the block barely changes the residual stream.
+    """
+    a = np.asarray(h_in, dtype=np.float64).reshape(-1, h_in.shape[-1])
+    b = np.asarray(h_out, dtype=np.float64).reshape(-1, h_out.shape[-1])
+    if a.shape != b.shape:
+        raise ValueError(
+            f"hidden-state shapes disagree: {h_in.shape} vs {h_out.shape}")
+    num = (a * b).sum(axis=-1)
+    den = np.linalg.norm(a, axis=-1) * np.linalg.norm(b, axis=-1)
+    return float(np.mean(num / np.maximum(den, 1e-12)))
+
+
+def select_dropped_blocks(
+    similarities: Sequence[float],
+    num_drop: int,
+    protect: Sequence[int] = (),
+) -> Tuple[int, ...]:
+    """Pick the ``num_drop`` most-redundant blocks (highest similarity).
+
+    ``protect`` shields layers from dropping regardless of score (e.g. the
+    first/last block, or non-MoE layers the caller wants intact).
+    """
+    if num_drop < 0:
+        raise ValueError(f"num_drop must be >= 0, got {num_drop}")
+    protected = set(int(i) for i in protect)
+    eligible = [i for i in range(len(similarities)) if i not in protected]
+    if num_drop > len(eligible):
+        raise ValueError(
+            f"cannot drop {num_drop} of {len(eligible)} unprotected blocks")
+    order = sorted(eligible, key=lambda i: -float(similarities[i]))
+    return tuple(sorted(order[:num_drop]))
+
+
+def expert_residual_energy(
+    design: np.ndarray,
+    center: np.ndarray,
+    perms: np.ndarray,
+) -> np.ndarray:
+    """Per-expert ``||design[k][perms[k]] - center||_F^2`` ([num_experts]).
+
+    ``design`` is the [N, f, d_design] design-matrix stack
+    (core/compress.py::design_matrices), ``center``/``perms`` come from the
+    barycenter result — the same alignment the store is built against.
+    """
+    n = design.shape[0]
+    out = np.empty((n,), dtype=np.float64)
+    for k in range(n):
+        diff = np.asarray(design[k])[np.asarray(perms[k])] - center
+        out[k] = float((diff * diff).sum())
+    return out
+
+
+def select_dropped_experts(
+    energies: np.ndarray,
+    num_drop: int,
+) -> Tuple[int, ...]:
+    """Pick the ``num_drop`` experts CLOSEST to the center (lowest energy)."""
+    if num_drop < 0:
+        raise ValueError(f"num_drop must be >= 0, got {num_drop}")
+    n = len(energies)
+    if num_drop >= n:
+        raise ValueError(
+            f"cannot drop {num_drop} of {n} experts — at least one must "
+            "remain (use drop_block for a center-only layer)")
+    order = np.argsort(np.asarray(energies, dtype=np.float64), kind="stable")
+    return tuple(sorted(int(i) for i in order[:num_drop]))

@@ -589,12 +589,16 @@ class ContinuousServer:
         if not self._bt_dirty or self.pool is None:
             self._bt_dirty = False
             return
-        tbl = jnp.asarray(self.pool.block_tables)
+        host_tbl = self.pool.block_tables
 
         def upd(leaf, axes):
             if "page_table" not in axes:
                 return leaf
-            return jnp.broadcast_to(tbl, leaf.shape)
+            # fresh device buffer per leaf: with unscanned (per-layer
+            # plan) segments leaf.shape == tbl.shape and a shared
+            # broadcast_to would alias one buffer into every layer's
+            # table, which the engine's donated decode step rejects
+            return jnp.broadcast_to(jnp.asarray(host_tbl), leaf.shape)
 
         self.cache = self._tree_map(upd)
         self._bt_dirty = False
@@ -1016,6 +1020,54 @@ class ContinuousServer:
         return list(requests)
 
 
+def _solve_budget_plan(cfg, params, byte_budget: int):
+    """Greedy per-layer (rank, dtype) allocation under a factor-byte budget.
+
+    Scores a small rank grid around the keep_ratio-derived rank per MoE
+    layer (core/plan.py::layer_candidates — one barycenter per layer, free
+    truncations per rank) and solves the knapsack with solve_plan. Non-MoE
+    layers get default recipes.
+    """
+    import numpy as np
+
+    from ..core.plan import (
+        CompressionPlan,
+        LayerRecipe,
+        layer_candidates,
+        solve_plan,
+    )
+    from ..core.residual import svd_rank_for_ratio
+    from ..models import transformer as tfm
+    from ..models.model import _EXPERT_KEYS, _unstack_segments
+
+    params = jax.tree_util.tree_map(np.asarray, params)
+    specs = tfm.layer_specs(cfg)
+    flat = _unstack_segments(params["segments"], tfm.build_plan(cfg))
+    moe_idx = [i for i, s in enumerate(specs) if s.ffn == "moe"]
+    if not moe_idx:
+        raise SystemExit("--byte-budget needs a MoE architecture")
+    f = cfg.moe.expert_d_ff
+    dd = (3 * cfg.d_model + 2) if cfg.glu else (2 * cfg.d_model + 1)
+    r0 = svd_rank_for_ratio(f, dd, cfg.resmoe.keep_ratio)
+    ranks = sorted({max(1, r0 // 4), max(1, r0 // 2), r0})
+    cands = []
+    for i in moe_idx:
+        ffn = flat[i]["ffn"]
+        bank = {k: ffn[k] for k in _EXPERT_KEYS if k in ffn}
+        cands.append(layer_candidates(
+            bank, ranks, center="wb",
+            barycenter_iters=cfg.resmoe.barycenter_iters,
+            ot_solver=cfg.resmoe.ot_solver, seed=i))
+    try:
+        chosen = solve_plan(cands, byte_budget)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    recipes = [LayerRecipe() for _ in specs]
+    for i, c in zip(moe_idx, chosen):
+        recipes[i] = c.recipe
+    return CompressionPlan(tuple(recipes))
+
+
 def main():  # pragma: no cover — exercised by examples/serve_compressed.py
     import argparse
     import dataclasses
@@ -1063,6 +1115,23 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
              "with fp32 per-channel scales (~4x fewer factor HBM bytes; "
              "served by the dequant-fused kernels, DESIGN.md §9). "
              "Default: the config's ResMoEConfig.store_dtype (fp32)",
+    )
+    ap.add_argument(
+        "--plan", default=None, metavar="JSON",
+        help="per-layer compression plan file (core/plan.py JSON schema, "
+             "docs/STORES.md): one recipe per ORIGINAL model layer "
+             "overriding rank / store dtype / dropped experts / dropped "
+             "blocks. Persisted in the v2 store manifest, so a later "
+             "--store-dir boot needs no flags. Requires --apply-mode; "
+             "mutually exclusive with --byte-budget and --store-dtype",
+    )
+    ap.add_argument(
+        "--byte-budget", type=int, default=None, metavar="BYTES",
+        help="search a per-layer plan (core/plan.py::solve_plan, greedy "
+             "error-per-byte) whose factor-store bytes fit BYTES, then "
+             "compress and serve under it; the solved plan is persisted "
+             "in the v2 store manifest. Requires --apply-mode; mutually "
+             "exclusive with --plan and --store-dtype",
     )
     ap.add_argument(
         "--truncate-prompts", action="store_true",
@@ -1130,51 +1199,114 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
                 cfg.moe, token_path_max_tokens=args.token_path_max_tokens))
     model = build_model(cfg)
     if args.apply_mode is None and (args.store_dir is not None
-                                    or args.store_dtype is not None):
-        raise SystemExit("--store-dir/--store-dtype require --apply-mode "
-                         "(they describe the compressed store)")
+                                    or args.store_dtype is not None
+                                    or args.plan is not None
+                                    or args.byte_budget is not None):
+        raise SystemExit("--store-dir/--store-dtype/--plan/--byte-budget "
+                         "require --apply-mode (they describe the "
+                         "compressed store)")
+    if sum(x is not None for x in
+           (args.plan, args.byte_budget, args.store_dtype)) > 1:
+        raise SystemExit("--plan, --byte-budget and --store-dtype are "
+                         "mutually exclusive (a plan names each layer's "
+                         "store dtype itself)")
     if args.apply_mode is None:
         params, axes = model.init_split(jax.random.PRNGKey(0))
     else:
+        import json
+
         from ..checkpoint import (
             has_compressed_store,
             load_compressed_store,
             save_compressed_store,
+            validate_store_meta,
         )
+        from ..core.plan import CompressionPlan
         from ..models import compress_model_params, quantize_compressed_params
         from ..models.model import abstract_compressed_params
 
+        plan = None
+        if args.plan is not None:
+            with open(args.plan) as fh:
+                plan = CompressionPlan.from_json(json.load(fh))
         store_dtype = args.store_dtype or cfg.resmoe.store_dtype
         cfg = dataclasses.replace(
             cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd",
                                             store_dtype=store_dtype))
-        model = build_model(cfg)
         if args.store_dir is not None and has_compressed_store(args.store_dir):
             # store boot: the persisted tree already holds every serving
-            # weight — no dense init, no recompression
+            # weight — no dense init, no recompression. A v2 manifest's
+            # persisted plan wins: it describes the tree on disk.
             params, meta = load_compressed_store(args.store_dir)
-            for key, want in (("arch", args.arch),
-                              ("store_dtype", store_dtype),
-                              ("method", cfg.resmoe.method),
-                              ("keep_ratio", cfg.resmoe.keep_ratio)):
+            if args.byte_budget is not None:
+                raise SystemExit(
+                    f"store at {args.store_dir} already exists — "
+                    "--byte-budget solves a plan at compress time and "
+                    "cannot re-plan a persisted store; re-compress to a "
+                    "fresh --store-dir or drop the flag")
+            meta_plan = meta.get("plan")
+            if meta_plan is not None:
+                if plan is not None and plan.to_json() != meta_plan:
+                    raise SystemExit(
+                        f"store at {args.store_dir} was compressed under a "
+                        "different --plan — re-compress to a fresh "
+                        "--store-dir or drop the flag (the persisted plan "
+                        "boots by itself)")
+                plan = CompressionPlan.from_json(meta_plan)
+            elif plan is not None:
+                raise SystemExit(
+                    f"store at {args.store_dir} has no plan but --plan was "
+                    "given — re-compress to a fresh --store-dir")
+            # uniform-store knobs are meaningful only without a plan (each
+            # recipe carries its own rank/dtype); arch always must match
+            checks = [("arch", args.arch), ("method", cfg.resmoe.method)]
+            if plan is None:
+                checks += [("store_dtype", store_dtype),
+                           ("keep_ratio", cfg.resmoe.keep_ratio)]
+            for key, want in checks:
                 if meta.get(key) != want:
                     raise SystemExit(
                         f"store at {args.store_dir} has {key}="
                         f"{meta.get(key)!r}, requested {want!r} — pick a "
                         "different --store-dir or matching flags")
+            if plan is not None:
+                cfg = dataclasses.replace(
+                    cfg, resmoe=dataclasses.replace(cfg.resmoe, plan=plan))
+            try:
+                validate_store_meta(meta, cfg)
+            except ValueError as e:
+                raise SystemExit(str(e))
+            model = build_model(cfg)
             print(f"booted from persisted store {args.store_dir} "
-                  f"(dtype={store_dtype}; no recompression)")
+                  f"({'per-layer plan' if plan is not None else f'dtype={store_dtype}'}; "
+                  "no recompression)")
         else:
+            model = build_model(cfg)
             params, _ = model.init_split(jax.random.PRNGKey(0))
+            if args.byte_budget is not None:
+                plan = _solve_budget_plan(cfg, params, args.byte_budget)
+                print(f"byte-budget plan ({args.byte_budget} bytes): "
+                      + ", ".join(
+                          f"L{i}:r{r.rank}/{r.store_dtype}"
+                          for i, r in enumerate(plan.recipes)
+                          if not r.is_default))
+            if plan is not None:
+                cfg = dataclasses.replace(
+                    cfg, resmoe=dataclasses.replace(cfg.resmoe, plan=plan))
+                model = build_model(cfg)
             params, _ = compress_model_params(params, cfg)
-            if store_dtype == "int8":
+            if plan is None and store_dtype == "int8":
+                # uniform int8; a plan quantizes per layer during compress
                 params = quantize_compressed_params(params)
             if args.store_dir is not None:
-                save_compressed_store(
-                    args.store_dir, params,
-                    meta={"arch": args.arch, "store_dtype": store_dtype,
-                          "method": cfg.resmoe.method,
-                          "keep_ratio": cfg.resmoe.keep_ratio})
+                meta = {"arch": args.arch, "store_dtype": store_dtype,
+                        "method": cfg.resmoe.method,
+                        "keep_ratio": cfg.resmoe.keep_ratio,
+                        "num_experts": cfg.moe.num_experts,
+                        "d_model": cfg.d_model}
+                if plan is not None:
+                    meta["plan"] = plan.to_json()
+                save_compressed_store(args.store_dir, params, meta=meta)
                 print(f"compressed and persisted store -> {args.store_dir}")
         _, axes = abstract_compressed_params(cfg, store_dtype=store_dtype)
     rules = None

@@ -1,6 +1,8 @@
 """Model substrate: attention/recurrent mixers, FFN/MoE, transformer assembly."""
 from .model import (
     Model,
+    abstract_compressed_params,
+    block_hidden_similarities,
     build_model,
     compress_model_params,
     iter_compressed_stores,
@@ -11,6 +13,8 @@ from .transformer import build_plan, forward, init_cache, init_params, layer_spe
 
 __all__ = [
     "Model",
+    "abstract_compressed_params",
+    "block_hidden_similarities",
     "build_model",
     "compress_model_params",
     "iter_compressed_stores",

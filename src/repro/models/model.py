@@ -160,6 +160,12 @@ def abstract_compressed_params(
     ``store_dtype="int8"`` mirrors :func:`quantize_compressed_params`
     instead: int8 center/u/v plus fp32 per-channel scale leaves
     (center scales on the output-channel axis, rank scales [E, r]).
+
+    A per-layer :class:`~repro.core.plan.CompressionPlan` on
+    ``cfg.resmoe.plan`` makes the store heterogeneous: each MoE slot's
+    rank, store dtype and kept-expert count follow its LayerSpec recipe
+    (``store_dtype`` stays the fallback for recipe-less slots), and
+    trimmed slots gain the int32 ``expert_map`` remap leaf.
     """
     import jax
 
@@ -177,19 +183,29 @@ def abstract_compressed_params(
     m = cfg.moe
     d, f = cfg.d_model, m.expert_d_ff
     dd = (3 * d) if cfg.glu else (2 * d)
-    r = svd_rank_for_ratio(f, dd, cfg.resmoe.keep_ratio)
-    quant = store_dtype == "int8"
-    f32 = jnp.int8 if quant else jnp.bfloat16  # serving store dtype
+    r_default = svd_rank_for_ratio(f, dd, cfg.resmoe.keep_ratio)
 
-    for seg_v, seg_a in zip(values["segments"], axes["segments"]):
-        for slot_v, slot_a in zip(seg_v["slots"], seg_a["slots"]):
+    # same cfg -> same segmentation as the eval_shape tree above, so the
+    # layer plan walks in lockstep with the param segments
+    plan_segs = tfm.build_plan(cfg)
+    for seg_v, seg_a, seg in zip(values["segments"], axes["segments"],
+                                 plan_segs):
+        for slot_v, slot_a, spec in zip(seg_v["slots"], seg_a["slots"],
+                                        seg.pattern):
             ffn_v = slot_v.get("ffn")
             if not (isinstance(ffn_v, dict) and "router" in ffn_v
                     and "w1" in ffn_v):
                 continue
+            rec = spec.recipe
+            r = (rec.rank if rec is not None and rec.rank is not None
+                 else r_default)
+            quant = ((rec.store_dtype if rec is not None else store_dtype)
+                     == "int8")
+            f32 = jnp.int8 if quant else jnp.bfloat16  # serving store dtype
             stacked = len(ffn_v["w1"].shape) == 4
             lead = ffn_v["w1"].shape[:1] if stacked else ()
-            e = ffn_v["w1"].shape[1 if stacked else 0]
+            e_orig = ffn_v["w1"].shape[1 if stacked else 0]
+            e = e_orig - (len(rec.drop_experts) if rec is not None else 0)
             lax = ("layers",) if stacked else ()
             center_v = {
                 "w1": jax.ShapeDtypeStruct(lead + (d, f), f32),
@@ -226,6 +242,12 @@ def abstract_compressed_params(
             slot_a["ffn"]["u"] = lax + ("experts", "expert_mlp", "rank")
             slot_v["ffn"]["v"] = v_v
             slot_a["ffn"]["v"] = v_a
+            if e < e_orig:
+                # trimmed slot: int32 remap over the ORIGINAL expert axis
+                # (routing is untouched); replicated — it is E_orig ints
+                slot_v["ffn"]["expert_map"] = jax.ShapeDtypeStruct(
+                    lead + (e_orig,), jnp.int32)
+                slot_a["ffn"]["expert_map"] = lax + (None,)
             if quant:
                 sf = jnp.float32
                 slot_v["ffn"]["center_scale"] = {
@@ -316,9 +338,16 @@ def compress_model_params(params: PyTree, cfg: ModelConfig, center: str = "wb"):
     """Replace every MoE expert bank with its ResMoE compressed store.
 
     Works on concrete (host) params; returns (new_params, report).
+    ``params`` must be the DENSE model's params — with a per-layer plan on
+    ``cfg.resmoe.plan`` that means the params of ``cfg`` with the plan
+    stripped (the plan reshapes the layer list, so the dense and planned
+    trees segment differently).
     """
     from ..core.api import CompressionReport, ResMoECompressor
     from ..core.compress import design_matrices
+
+    if cfg.resmoe.plan is not None:
+        return _compress_with_plan(params, cfg, center)
 
     rcfg = cfg.resmoe
     comp = ResMoECompressor(rcfg, center=center)
@@ -359,6 +388,169 @@ def compress_model_params(params: PyTree, cfg: ModelConfig, center: str = "wb"):
         mean_approx_error=float(np.mean(errs)) if errs else 0.0,
     )
     return params, report
+
+
+def _unstack_segments(segments, plan) -> list:
+    """Flatten segment params into per-layer dicts in execution order
+    (per segment: rep-major, then slot — matching run_segments)."""
+    flat = []
+    for seg_params, seg in zip(segments, plan):
+        for r in range(seg.repeats):
+            for slot in seg_params["slots"]:
+                if seg.repeats > 1:
+                    flat.append(jax.tree_util.tree_map(
+                        lambda x, r=r: np.asarray(x)[r], slot))
+                else:
+                    flat.append(slot)
+    return flat
+
+
+def _restack_segments(layers: list, plan) -> list:
+    """Inverse of :func:`_unstack_segments` for a (possibly different)
+    segment plan — equal-recipe runs re-stack for scan, so every stacked
+    leaf keeps a uniform shape (heterogeneous recipes were already split
+    into separate segments by LayerSpec equality in build_plan)."""
+    segments = []
+    i = 0
+    for seg in plan:
+        p = len(seg.pattern)
+        chunk = layers[i:i + seg.num_layers]
+        i += seg.num_layers
+        slots = []
+        for sl in range(p):
+            reps = [chunk[r * p + sl] for r in range(seg.repeats)]
+            if seg.repeats > 1:
+                slots.append(jax.tree_util.tree_map(
+                    lambda *xs: np.stack(xs), *reps))
+            else:
+                slots.append(reps[0])
+        segments.append({"slots": slots})
+    if i != len(layers):
+        raise ValueError(
+            f"segment plan covers {i} layers but {len(layers)} were "
+            "produced — the compression plan and model config disagree")
+    return segments
+
+
+def _compress_with_plan(params: PyTree, cfg: ModelConfig, center: str):
+    """Per-layer-plan compression: dense params -> heterogeneous store.
+
+    Unstacks the dense tree into flat per-layer blocks, compresses each
+    MoE layer under its recipe (rank override, expert trim via the
+    ``expert_map`` remap, per-layer int8 quantization), skips dropped
+    blocks, then restacks along the PLANNED segmentation.
+    """
+    from ..core.api import CompressionReport
+    from ..core.compress import compress_bank, design_matrices, fused_params
+    from ..core.quant import quantize_store
+
+    rcfg = cfg.resmoe
+    plan = rcfg.plan
+    if rcfg.method != "svd":
+        raise ValueError(
+            "per-layer compression plans require method='svd' (dense-delta "
+            "up/block stores have no factored form to trim or re-rank)")
+    if rcfg.first_layer:
+        raise ValueError(
+            "first_layer > 0 with a plan is ambiguous — express skipped "
+            "layers in the plan itself (there is no 'leave dense' recipe; "
+            "keep rank high for layers that must stay near-lossless)")
+
+    base_cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(rcfg, plan=None))
+    params = jax.tree_util.tree_map(np.asarray, params)
+    flat = _unstack_segments(params["segments"], tfm.build_plan(base_cfg))
+    base_specs = tfm.layer_specs(base_cfg)
+    if not (len(flat) == len(base_specs) == plan.num_layers):
+        raise ValueError(
+            f"plan/model mismatch: {len(flat)} dense layers, "
+            f"{len(base_specs)} specs, {plan.num_layers} recipes")
+
+    reports, errs = [], []
+    total_orig = total_comp = 0
+    kept_layers = []
+    for i, (layer, spec, rec) in enumerate(zip(flat, base_specs,
+                                               plan.recipes)):
+        if rec.drop_block:
+            continue
+        if spec.ffn != "moe":
+            kept_layers.append(layer)
+            continue
+        f = dict(layer["ffn"])
+        bank = {k: f[k] for k in _EXPERT_KEYS if k in f}
+        orig_bytes = sum(int(v.size) * 2 for v in bank.values())
+        total_orig += orig_bytes
+        lc = compress_bank(
+            bank, method="svd", keep_ratio=rcfg.keep_ratio, center=center,
+            barycenter_iters=rcfg.barycenter_iters, ot_solver=rcfg.ot_solver,
+            seed=i, rank=rec.rank,
+        )
+        err = lc.approximation_error(design_matrices(bank))
+        fp = fused_params(lc, bank)
+        store: Dict[str, Any] = {
+            "center": {k: x.astype(np.float32) for k, x in fp.center.items()},
+            "u": fp.u.astype(np.float32),
+            "v": {k: x.astype(np.float32) for k, x in fp.v.items()},
+        }
+        if rec.drop_experts:
+            e = fp.u.shape[0]
+            kept = np.asarray(
+                [k for k in range(e) if k not in set(rec.drop_experts)])
+            emap = np.full((e,), -1, np.int32)
+            emap[kept] = np.arange(len(kept), dtype=np.int32)
+            store["u"] = store["u"][kept]
+            store["v"] = {k: x[kept] for k, x in store["v"].items()}
+            store["expert_map"] = emap
+        if rec.store_dtype == "int8":
+            store = quantize_store(store)
+        for k in _EXPERT_KEYS:
+            f.pop(k, None)
+        f.update(store)
+        cb = sum(int(np.asarray(v).size) * np.asarray(v).dtype.itemsize
+                 for v in jax.tree_util.tree_leaves(store))
+        reports.append(dict(layer=i, approx_error=err,
+                            original_bytes=orig_bytes, compressed_bytes=cb))
+        errs.append(err)
+        total_comp += cb
+        new_layer = dict(layer)
+        new_layer["ffn"] = f
+        kept_layers.append(new_layer)
+
+    params = dict(params)
+    params["segments"] = _restack_segments(kept_layers, tfm.build_plan(cfg))
+    report = CompressionReport(
+        layers=reports, original_bytes=total_orig,
+        compressed_bytes=total_comp,
+        mean_approx_error=float(np.mean(errs)) if errs else 0.0,
+    )
+    return params, report
+
+
+def block_hidden_similarities(params: PyTree, cfg: ModelConfig,
+                              tokens: np.ndarray) -> list:
+    """Per-block mean token cosine between block input and output.
+
+    The capture side of the block-drop recipe (core/trim.py): runs embed +
+    every block once (no cache, full-sequence positions) on concrete
+    (split) params and scores how little each block rotates the residual
+    stream. Feed the result to ``core.trim.select_dropped_blocks``.
+    """
+    from ..core.trim import hidden_state_similarity
+
+    specs = tfm.layer_specs(cfg)
+    flat = _unstack_segments(params["segments"], tfm.build_plan(cfg))
+    tokens = jnp.asarray(tokens)
+    b, s = tokens.shape
+    x = tfm.embed_inputs(params, {"tokens": tokens}, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    sims = []
+    for layer, spec in zip(flat, specs):
+        y, _, _ = tfm.apply_block(layer, x, spec, cfg, positions, cache=None)
+        sims.append(hidden_state_similarity(
+            np.asarray(jnp.asarray(x, jnp.float32)),
+            np.asarray(jnp.asarray(y, jnp.float32))))
+        x = y
+    return sims
 
 
 def _install_store(f: Dict[str, Any], new_layers, rcfg, stacked: bool):

@@ -507,10 +507,36 @@ def moe_layer(
             y2d = y2d + ffn(params["dense"], x2d, cfg.activation)
         return y2d.reshape(b, s, d).astype(x.dtype), aux
 
+    # Trimmed store (core/plan.py): u/v (+ scales) are compacted to the
+    # kept experts and ``expert_map`` [E_orig] sends kept ids to compact
+    # indices, dropped ids to -1. Routing is untouched — a token whose
+    # expert was dropped keeps its gate mass but resolves to the shared
+    # barycenter center (free: the center is resident for the drafter,
+    # DESIGN.md §12). Dropped (token, expert) pairs get ZERO gates on the
+    # kept-expert paths (every path multiplies by the gate, so their kept
+    # contribution is exactly 0.0) and their original gates feed one
+    # center_only_ffn pass — a fully-dropped token is therefore bitwise
+    # the center_only output. ``raw_store`` is captured BEFORE the int8
+    # dequant merge below: the merged dict still carries center_scale, and
+    # center_only_ffn dequantizes for itself.
+    trimmed = compressed and "expert_map" in params
+    if trimmed:
+        raw_store = params
+        e_kept = params["u"].shape[0]
+        cids = jnp.take(params["expert_map"], expert_ids, axis=0)
+        dropped = cids < 0
+        gates_dropped = jnp.where(dropped, gates, jnp.zeros_like(gates))
+        gates = jnp.where(dropped, jnp.zeros_like(gates), gates)
+
     if (compressed and token_path_applicable(params, m, mode, t, rules=rules)
             and (mode == "fused_token" or not per_row)):
         # ragged capacity-free decode path: no [E, C, d] buffer, no
         # capacity drops, per-token gather of the low-rank factors
+        if trimmed:
+            # dropped pairs gather compact expert 0 with a zero gate — the
+            # kernel multiplies every pair by its gate, so the arbitrary
+            # gather target contributes exactly 0
+            expert_ids = jnp.where(dropped, 0, cids)
         if is_quantized_store(params):
             from ..kernels import token_lowrank_moe_q8
 
@@ -527,6 +553,9 @@ def moe_layer(
                 x2d, expert_ids, gates, params["center"], params["u"],
                 params["v"], activation=cfg.activation, out_dtype=x2d.dtype,
             )
+        if trimmed:
+            y2d = y2d + center_only_ffn(raw_store, x2d, gates_dropped,
+                                        cfg.activation).astype(y2d.dtype)
         y2d = hint(y2d, ("batch", None))
         if "shared" in params:
             y2d = y2d + ffn(params["shared"], x2d, cfg.activation)
@@ -540,49 +569,74 @@ def moe_layer(
         # fused_kernel consumes the int8 factors directly (DESIGN.md §9)
         params = {**params, **dequantize_store(params)}
 
+    # a trimmed store dispatches over one extra SENTINEL group that all
+    # dropped (token, expert) pairs land in; its output is hard zero (and
+    # its gates already are), so the sentinel never contributes
+    n_groups = (e_kept + 1) if trimmed else m.num_experts
+
     if per_row:
         # per-row capacity: each batch row drops exactly what its B=1
         # dispatch would; the buffer's capacity axis widens to B*C
         row_cap = expert_capacity(s, m)
         token_idx, dest, keep, sort_idx = make_dispatch_per_row(
-            expert_ids, b, s, m.num_experts, row_cap)
+            jnp.where(dropped, e_kept, cids) if trimmed else expert_ids,
+            b, s, n_groups, row_cap)
         capacity = b * row_cap
     else:
         capacity = expert_capacity(t, m)
         token_idx, dest, keep, sort_idx = make_dispatch(
-            expert_ids, m.num_experts, capacity)
+            jnp.where(dropped, e_kept, cids) if trimmed else expert_ids,
+            n_groups, capacity)
     gates_flat = gates.reshape(-1)
 
+    def run_groups(fn, *streams):
+        """Dispatch the streams and run the expert math on the kept groups;
+        a trimmed store's sentinel group is re-appended as exact zeros."""
+        gs = [dispatch_tokens(z, token_idx, dest, keep, n_groups, capacity)
+              for z in streams]
+        if not trimmed:
+            return fn(*gs)
+        yg_k = fn(*(g[:-1] for g in gs))
+        pad = jnp.zeros((1,) + yg_k.shape[1:], yg_k.dtype)
+        return jnp.concatenate([yg_k, pad], axis=0)
+
     if not compressed:
-        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
-        yg = _dense_expert_ffn(params, xg, cfg.activation)
+        yg = run_groups(
+            lambda xg: _dense_expert_ffn(params, xg, cfg.activation), x2d)
     elif mode == "restored" or "delta" in params:
         bank = _restored_bank(params)
-        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
-        yg = _dense_expert_ffn(bank, xg, cfg.activation)
+        yg = run_groups(
+            lambda xg: _dense_expert_ffn(bank, xg, cfg.activation), x2d)
     elif mode == "fused":
-        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
-        yg = _fused_expert_ffn(params, xg, cfg.activation)
+        yg = run_groups(
+            lambda xg: _fused_expert_ffn(params, xg, cfg.activation), x2d)
     elif mode == "fused_kernel":
-        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
-        yg = _fused_kernel_expert_ffn(params, xg, cfg.activation)
+        yg = run_groups(
+            lambda xg: _fused_kernel_expert_ffn(params, xg, cfg.activation),
+            x2d)
     elif mode == "fused_shared":
         # center products computed ONCE per token (expert-independent)
         c = params["center"]
         b1 = jnp.einsum("td,df->tf", x2d, c["w1"])
         b3 = jnp.einsum("td,df->tf", x2d, c["w3"]) if "w3" in c else None
-        xg = dispatch_tokens(x2d, token_idx, dest, keep, m.num_experts, capacity)
-        b1g = dispatch_tokens(b1, token_idx, dest, keep, m.num_experts, capacity)
-        b3g = (
-            dispatch_tokens(b3, token_idx, dest, keep, m.num_experts, capacity)
-            if b3 is not None
-            else None
-        )
-        yg = _fused_expert_ffn(params, xg, cfg.activation, base1=b1g, base3=b3g)
+        if b3 is not None:
+            yg = run_groups(
+                lambda xg, b1g, b3g: _fused_expert_ffn(
+                    params, xg, cfg.activation, base1=b1g, base3=b3g),
+                x2d, b1, b3)
+        else:
+            yg = run_groups(
+                lambda xg, b1g: _fused_expert_ffn(
+                    params, xg, cfg.activation, base1=b1g),
+                x2d, b1)
     else:
         raise ValueError(f"unknown apply mode {mode}")
 
     y2d = combine_tokens(yg, gates_flat, token_idx, dest, keep, t, sort_idx)
+
+    if trimmed:
+        y2d = y2d + center_only_ffn(raw_store, x2d, gates_dropped,
+                                    cfg.activation).astype(y2d.dtype)
 
     if "shared" in params:
         y2d = y2d + ffn(params["shared"], x2d, cfg.activation)

@@ -75,6 +75,11 @@ def ep_applicable(params: Dict, cfg: ModelConfig, rules: Optional[ShardingRules]
         mode = apply_mode or cfg.resmoe.apply_mode
         if mode not in _EP_COMPRESSED_MODES:
             return False
+        if "expert_map" in params:
+            # trimmed store (core/plan.py): the compacted expert count is
+            # not the routed expert count, so the even experts-per-shard
+            # slicing (and _param_specs) does not apply — GSPMD path
+            return False
     elif "w1" not in params:  # dense-delta (up/block) stores: GSPMD path
         return False
     mesh = rules.mesh

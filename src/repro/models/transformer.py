@@ -56,6 +56,12 @@ class LayerSpec:
     ffn: str  # "ffn" | "moe" | "rwkv_cm"
     window: int = attn.GLOBAL_WINDOW
     rope_theta: float = 10000.0
+    # Per-layer compression recipe (core/plan.py). None for all layers when
+    # no plan is active — and also for layers whose recipe is the default,
+    # so a trivial plan yields the exact segmentation (and scan stacking)
+    # of plan=None. Non-None recipes split scanned segments only where they
+    # differ, via the tuple equality build_plan already keys on.
+    recipe: Optional[Any] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +109,23 @@ def layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
         ):
             f = "moe"
         specs.append(LayerSpec(mixer=mixer, ffn=f, window=window, rope_theta=theta))
+
+    plan = cfg.resmoe.plan
+    if plan is not None:
+        # ModelConfig.__post_init__ validated length / expert bounds /
+        # moe-only recipes; here the plan reshapes the serving layer list:
+        # dropped blocks vanish from params, caches, mixer_layout and the
+        # segment plan all at once, and non-default recipes attach to their
+        # LayerSpec so build_plan splits scanned runs exactly where the
+        # store becomes heterogeneous.
+        planned = []
+        for spec, rec_ in zip(specs, plan.recipes):
+            if rec_.drop_block:
+                continue
+            if not rec_.is_default:
+                spec = dataclasses.replace(spec, recipe=rec_)
+            planned.append(spec)
+        specs = planned
     return specs
 
 

@@ -1,0 +1,44 @@
+"""Smoke tests for the benchmark suites (satellite of the plan PR).
+
+The benchmark modules are exercised end-to-end at toy scale and must
+return finite metrics — a NaN/inf approximation error or perplexity row
+means a broken compression path, not a slow machine.
+"""
+import math
+import re
+
+from benchmarks import approx_error, downstream_eval
+
+_METRIC_RE = re.compile(r"(nll|acc|ppl)=([-+0-9.eE]+)")
+
+
+def _assert_finite_value(label, value):
+    if isinstance(value, str):
+        pairs = _METRIC_RE.findall(value)
+        assert pairs, f"{label}: no metrics parsed from {value!r}"
+        for name, num in pairs:
+            assert math.isfinite(float(num)), f"{label}: {name}={num}"
+    else:
+        assert math.isfinite(float(value)), f"{label}: {value}"
+
+
+def test_approx_error_rows_finite():
+    rows = approx_error.run(keep_ratio=0.25, seed=0, verbose=False)
+    assert rows, "approx_error.run returned no rows"
+    for label, _us, value in rows:
+        _assert_finite_value(label, value)
+    # both model settings and the ResMoE rows must be present
+    labels = {label for label, _, _ in rows}
+    assert any("ResMoE(SVD)" in lb for lb in labels)
+    assert any(lb.startswith("T1/switch-like/") for lb in labels)
+    assert any(lb.startswith("T1/mixtral-like/") for lb in labels)
+
+
+def test_downstream_eval_rows_finite():
+    rows = downstream_eval.run(steps=2, keep=0.25, seed=0)
+    assert rows, "downstream_eval.run returned no rows"
+    for label, _us, value in rows:
+        _assert_finite_value(label, value)
+    labels = {label for label, _, _ in rows}
+    assert "T3/dense" in labels
+    assert any("ResMoE(SVD)" in lb for lb in labels)

@@ -1,0 +1,187 @@
+"""Compress tier: per-layer-plan stores booted from disk serve identically.
+
+Acceptance differential for the plan PR: a trimmed + mixed-rank +
+mixed-dtype store persisted with ``save_compressed_store`` and booted
+back from disk must serve token-identically (greedy) to the in-memory
+compressed tree — through the paged ``ContinuousServer`` AND the
+``OverlappedServer``, under forced preemption, at spec_k 0 and 2. The
+CLI roundtrips (uniform fp32, uniform int8, per-layer ``--plan``,
+``--byte-budget``) run ``repro.launch.serve`` as a subprocess twice per
+setting — compress+persist then boot-from-disk — and diff the decoded
+outputs.
+
+Runs in its own CI tier (``scripts/ci.sh compress``); excluded from
+tier-1 via the ``compress`` marker.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    load_compressed_store,
+    save_compressed_store,
+    validate_store_meta,
+)
+from repro.configs import reduced_config
+from repro.core.plan import CompressionPlan, LayerRecipe
+from repro.launch.engine import OverlappedServer
+from repro.launch.serve import ContinuousServer, Request, Server
+from repro.models import build_model, compress_model_params
+from repro.sharding import split_logical
+
+pytestmark = pytest.mark.compress
+
+# One recipe per reduced-mixtral layer: expert trim + rank override,
+# int8, and a plain rank override — every heterogeneity axis at once.
+MIXED_PLAN = CompressionPlan((
+    LayerRecipe(rank=6, drop_experts=(1, 5)),
+    LayerRecipe(rank=24, store_dtype="int8"),
+    LayerRecipe(rank=12),
+))
+
+
+def _planned_cfg(plan, apply_mode="fused"):
+    cfg = reduced_config("mixtral-8x7b")
+    rc = dataclasses.replace(cfg.resmoe, enabled=True, method="svd",
+                             apply_mode=apply_mode, plan=plan)
+    return dataclasses.replace(cfg, resmoe=rc)
+
+
+@pytest.fixture(scope="module")
+def planned_store(tmp_path_factory):
+    """(cfg, model, in-memory store, disk-loaded store) for MIXED_PLAN."""
+    cfg = _planned_cfg(MIXED_PLAN)
+    base = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, plan=None))
+    dense, _ = split_logical(build_model(base).init(jax.random.PRNGKey(0)))
+    comp, _ = compress_model_params(dense, cfg)
+    store_dir = str(tmp_path_factory.mktemp("planned_store"))
+    save_compressed_store(store_dir, comp, meta={
+        "arch": cfg.name, "method": "svd", "num_experts":
+        cfg.moe.num_experts, "d_model": cfg.d_model,
+        "plan": MIXED_PLAN.to_json(),
+    })
+    loaded, meta = load_compressed_store(store_dir)
+    validate_store_meta(meta, cfg)
+    assert CompressionPlan.from_json(meta["plan"]) == MIXED_PLAN
+    model = build_model(cfg)
+    comp = jax.tree_util.tree_map(jnp.asarray, comp)
+    return cfg, model, comp, loaded
+
+
+def _schedule(seed, vocab, n=4):
+    r = np.random.default_rng(seed)
+    prompts = [r.integers(0, vocab, size=(int(r.choice([4, 6, 8])),))
+               .astype(np.int32) for _ in range(n)]
+    max_new = [int(r.integers(3, 7)) for _ in range(n)]
+    order = r.permutation(n)
+    arrivals = np.sort(r.poisson(1.0, size=n)).tolist()
+    return prompts, max_new, order, arrivals
+
+
+def _disk_vs_memory(planned_store, make_server, spec_k, seeds=(0, 1, 2)):
+    """Sync oracle on the in-memory tree vs ``make_server`` on the
+    disk-loaded tree — greedy outputs must match token for token."""
+    cfg, model, comp, loaded = planned_store
+    sync = Server(model, comp, num_slots=3, max_seq=48, apply_mode="fused")
+    booted = make_server(model, loaded, spec_k)
+    for seed in seeds:
+        prompts, max_new, order, arrivals = _schedule(seed, cfg.vocab_size)
+        ra = [Request(prompt=p, max_new_tokens=m)
+              for p, m in zip(prompts, max_new)]
+        rb = [Request(prompt=p, max_new_tokens=m)
+              for p, m in zip(prompts, max_new)]
+        sync.serve(ra)
+        booted.serve([rb[i] for i in order], arrival_steps=arrivals)
+        for i, (a, b) in enumerate(zip(ra, rb)):
+            assert a.output == b.output, (seed, i, a.output, b.output)
+        if booted.pool is not None:
+            booted.pool.check()
+            assert booted.pool.pages_in_use == 0
+        booted.state.check()
+    return booted.stats
+
+
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_disk_boot_continuous_differential(planned_store, spec_k):
+    """ContinuousServer on the disk-booted heterogeneous store == sync
+    oracle on the in-memory tree, with a forced eviction."""
+    stats = _disk_vs_memory(
+        planned_store,
+        lambda model, params, k: ContinuousServer(
+            model, params, num_slots=3, max_seq=48, page_size=4,
+            pool_pages=9, apply_mode="fused", preempt_steps=[1],
+            spec_k=k),
+        spec_k)
+    assert stats["preemptions"] >= 1, "forced preemption must have fired"
+
+
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_disk_boot_overlapped_differential(planned_store, spec_k):
+    """OverlappedServer (background admission/detokenize threads) on the
+    disk-booted store == sync oracle, with a forced eviction."""
+    stats = _disk_vs_memory(
+        planned_store,
+        lambda model, params, k: OverlappedServer(
+            model, params, num_slots=3, max_seq=48, page_size=4,
+            pool_pages=9, apply_mode="fused", preempt_steps=[1],
+            spec_k=k, admit_batch=2),
+        spec_k)
+    assert stats["preemptions"] >= 1, "forced preemption must have fired"
+
+
+# ---------------------------------------------------------------------------
+# CLI roundtrips (compress+persist, then boot-from-disk; outputs diffed)
+# ---------------------------------------------------------------------------
+
+
+def _run_serve(args, cwd):
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--requests", "3",
+         "--max-new", "6", *args],
+        capture_output=True, text=True, env=env, cwd=cwd, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return [ln for ln in out.stdout.splitlines() if ln.startswith("req")]
+
+
+def _roundtrip(tmp_path, extra, boot_extra=()):
+    store = str(tmp_path / "store")
+    first = _run_serve(["--apply-mode", "fused", "--store-dir", store,
+                        *extra], str(tmp_path))
+    again = _run_serve(["--apply-mode", "fused", "--store-dir", store,
+                        *boot_extra], str(tmp_path))
+    assert first and first == again, (first, again)
+
+
+def test_cli_roundtrip_uniform_fp32(tmp_path):
+    _roundtrip(tmp_path, [])
+
+
+def test_cli_roundtrip_uniform_int8(tmp_path):
+    # uniform dtypes are config-driven, so the boot repeats the flag
+    # (only per-layer plans are persisted and therefore flag-free)
+    _roundtrip(tmp_path, ["--store-dtype", "int8"],
+               boot_extra=["--store-dtype", "int8"])
+
+
+def test_cli_roundtrip_per_layer_plan(tmp_path):
+    plan_file = tmp_path / "plan.json"
+    plan_file.write_text(json.dumps(MIXED_PLAN.to_json()))
+    # the persisted plan must make the re-boot flag-free
+    _roundtrip(tmp_path, ["--plan", str(plan_file), "--paged",
+                          "--overlapped", "--spec-k", "2"],
+               boot_extra=["--paged", "--overlapped", "--spec-k", "2"])
+
+
+def test_cli_roundtrip_byte_budget(tmp_path):
+    _roundtrip(tmp_path, ["--byte-budget", "900000"])
