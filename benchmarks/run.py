@@ -25,6 +25,25 @@ import time
 import traceback
 
 
+def row_to_json(row) -> dict:
+    """One CSV row -> the artifact's ``{value, derived}`` entry.
+
+    The value field must be the row's NUMBER: suites that historically
+    stuffed their metric into the derived column with a 0 value column
+    (memory/flops analytic tables) get it promoted here, keeping the
+    original derived string as provenance — downstream trajectory
+    tooling reads ``value`` and must never have to parse ``derived``.
+    """
+    value = row[1]
+    derived = str(row[2]) if len(row) > 2 else ""
+    if not value and derived:
+        try:
+            value = float(derived)
+        except ValueError:
+            pass
+    return {"value": value, "derived": derived}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -35,8 +54,8 @@ def main() -> int:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a {row_name: {value, derived}} JSON map of "
                          "the emitted rows (the bench-trajectory artifact; "
-                         "several suites carry their metric in the derived "
-                         "column)")
+                         "`value` is always the row's numeric metric, "
+                         "`derived` is provenance text)")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -82,12 +101,7 @@ def main() -> int:
         try:
             for row in fn():
                 print(",".join(str(x) for x in row))
-                # keep BOTH columns: memory/flops/rate/roofline rows carry
-                # their real metric in `derived` with a 0 value column
-                values[str(row[0])] = {
-                    "value": row[1],
-                    "derived": str(row[2]) if len(row) > 2 else "",
-                }
+                values[str(row[0])] = row_to_json(row)
             print(f"# suite {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:  # noqa: BLE001
             failed.append(key)

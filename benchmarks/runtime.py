@@ -530,6 +530,69 @@ def paged_vs_sync_serving(seed: int = 0):
     ]
 
 
+def router_scaling(seed: int = 0, replica_counts=(1, 2, 4)):
+    """Aggregate routed throughput vs replica count, one Poisson trace.
+
+    The SAME request trace drains through a ``Router`` over 1, 2 and 4
+    independent ``ContinuousServer`` replicas (each with its own page
+    pool and slots over shared params; launch/router.py). Replication is
+    host-level data parallelism — each replica's sub-trace runs on its
+    own thread, overlapping wherever XLA releases the GIL — so the rows
+    report *aggregate* tokens/s across the replica set. Outputs are
+    asserted identical across all counts: routing must be a pure
+    throughput knob (the token-identity contract tests/test_router.py
+    pins per-request). On a CPU runner XLA already multithreads each
+    replica's compute, so the scaling row understates what disjoint
+    per-host device sets deliver; the row exists to track the trajectory
+    of routing overhead, not to claim linear CPU speedups.
+    """
+    import time
+
+    from repro.launch.router import Router, build_replicas
+    from repro.launch.serve import Request
+
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    n_req, max_new = 24, 12
+    prompts = [rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+               for _ in range(n_req)]
+    arrivals = np.sort(rng.poisson(0.8, size=n_req)).tolist()
+
+    rows, base_out, tps_by_n = [], None, {}
+    for n in replica_counts:
+        replicas = build_replicas(model, params, n, num_slots=6,
+                                  max_seq=64, page_size=8)
+        for rep in replicas:
+            rep.warmup(max_len=8 + max_new)
+        router = Router(replicas)
+        reqs = [Request(prompt=p, max_new_tokens=max_new) for p in prompts]
+        t0 = time.perf_counter()
+        router.serve(reqs, arrival_steps=arrivals)
+        dt = time.perf_counter() - t0
+        tok = sum(len(r.output) for r in reqs)
+        out = [r.output for r in reqs]
+        if base_out is None:
+            base_out = out
+        else:
+            assert out == base_out, (
+                f"routing over {n} replicas changed greedy outputs — "
+                "assignment must be a pure throughput knob")
+        tps_by_n[n] = tok / dt
+        agg = router.aggregate_stats()
+        rows.append((f"SERVE/router/replicas_{n}_tok_per_s",
+                     round(tok / dt, 1),
+                     f"{n} replica(s) x 6 slots, aggregate over {tok} "
+                     f"tokens, {agg['preemptions']} preemptions"))
+    lo, hi = min(replica_counts), max(replica_counts)
+    rows.append((f"SERVE/router/scaling_x_{hi}v{lo}",
+                 round(tps_by_n[hi] / tps_by_n[lo], 2),
+                 f"aggregate tok/s at {hi} replicas over {lo} (CPU "
+                 "runner: replicas contend for the same cores)"))
+    return rows
+
+
 def spec_decode_comparison(seed: int = 0, ks=(2, 4, 8)):
     """Barycenter-draft speculative decoding vs plain decode (DESIGN.md §12).
 
@@ -652,8 +715,10 @@ def zoo_decode_serving(seed: int = 0):
 
 
 def serve_suite(seed: int = 0):
-    """All serving rows: the paged-vs-sync headline plus the zoo matrix."""
-    return paged_vs_sync_serving(seed) + zoo_decode_serving(seed)
+    """All serving rows: the paged-vs-sync headline, the zoo matrix, and
+    routed throughput vs replica count."""
+    return (paged_vs_sync_serving(seed) + zoo_decode_serving(seed)
+            + router_scaling(seed))
 
 
 def grouped_roofline_mixtral(e=8, c=128, d=4096, f=14336, keep=0.25,

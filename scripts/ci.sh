@@ -34,6 +34,12 @@
 #                            # servers (preemption, spec_k in {0, 2}), plus
 #                            # CLI subprocess roundtrips for fp32 / int8 /
 #                            # --plan / --byte-budget stores
+#   scripts/ci.sh multiproc  # multi-host routed serving, CPU-simulated:
+#                            # two repro.launch.router worker processes
+#                            # under one jax.distributed coordinator, the
+#                            # routed union diffed token-for-token against
+#                            # an in-process oracle (forced preemption
+#                            # included)
 #   scripts/ci.sh docs       # broken md links / stale README references /
 #                            # serve CLI flag coverage in docs/SERVING.md /
 #                            # apply-mode x store-dtype parity-test matrix
@@ -101,8 +107,21 @@ assert any("dominates" in k for k in front), \
     f"no frontier dominance row in bench artifact ({len(rows)} rows)"
 assert sum("uniform" in k for k in front) >= 4, \
     f"frontier uniform curve too sparse ({len(front)} rows)"
+# routed-serving scaling (aggregate tokens/s vs replica count) must land
+router = [k for k in rows if k.startswith("SERVE/router/")]
+assert sum(k.endswith("_tok_per_s") for k in router) >= 2, \
+    f"no router replica-scaling rows in bench artifact ({len(rows)} rows)"
+assert any("scaling_x" in k for k in router), \
+    f"no router scaling summary row in bench artifact ({len(rows)} rows)"
+# every row must carry its metric as a NUMBER in `value` (provenance
+# strings belong in `derived`) — the trajectory tooling plots `value`
+bad = [k for k, v in rows.items()
+       if not isinstance(v.get("value"), (int, float))
+       or isinstance(v.get("value"), bool)]
+assert not bad, f"rows without numeric value: {bad[:5]} (+{len(bad)} total)"
 print(f"bench artifact OK: {len(quant)} quantized rows, "
-      f"{len(spec)} spec rows, {len(front)} frontier rows of {len(rows)}")
+      f"{len(spec)} spec rows, {len(front)} frontier rows, "
+      f"{len(router)} router rows of {len(rows)}")
 PY
 }
 
@@ -154,6 +173,17 @@ compress() {
     python -m pytest -q -m compress tests/
 }
 
+# Multiproc tier: the multi-host topology without multiple hosts — each
+# @pytest.mark.multiproc test launches two `repro.launch.router` worker
+# subprocesses that join one jax.distributed coordinator (CPU-simulated
+# host devices), serve their deterministic share of a seeded trace, and
+# write their outputs to JSON; the parent diffs the union against the
+# sync oracle. Pins the bring-up path (init_distributed, process-indexed
+# assignment) that no in-process test can reach.
+multiproc() {
+    python -m pytest -q -m multiproc tests/test_multiproc.py
+}
+
 # Docs tier: intra-repo markdown links must resolve, README code blocks
 # must reference real modules/paths/flags, the serve CLI must be fully
 # documented in docs/SERVING.md, and every (apply_mode, store_dtype)
@@ -173,7 +203,8 @@ case "${1:-tier1}" in
     spec)     spec ;;
     engine)   engine ;;
     compress) compress ;;
+    multiproc) multiproc ;;
     docs)     docs ;;
-    all)      tier1; kernels; multidev; bench; soak; zoo; spec; engine; compress; docs ;;
-    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|zoo|spec|engine|compress|docs|all]" >&2; exit 2 ;;
+    all)      tier1; kernels; multidev; bench; soak; zoo; spec; engine; compress; multiproc; docs ;;
+    *) echo "usage: $0 [tier1|kernels|multidev|bench|soak|zoo|spec|engine|compress|multiproc|docs|all]" >&2; exit 2 ;;
 esac

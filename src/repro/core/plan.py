@@ -342,9 +342,13 @@ def solve_plan(
     total = sum(c.bytes for c in choice)
     floor = sum(min(c.bytes for c in cands) for cands in candidates)
     if floor > byte_budget:
+        # raised BEFORE any greedy move: returning the floor choice would
+        # hand the caller an over-budget plan that silently violates the
+        # contract (serve.py --byte-budget turns this into a clean exit)
         raise ValueError(
-            f"byte budget {byte_budget} is below the cheapest plan "
-            f"({floor} bytes) — raise the budget or add smaller candidates")
+            f"budget infeasible, minimum is {floor} bytes: byte budget "
+            f"{byte_budget} is below the cheapest per-layer start — "
+            f"raise the budget or add smaller candidates")
     if total > byte_budget:  # an over-budget seed falls back to the floor
         choice = [min(cands, key=lambda c: c.bytes) for cands in candidates]
         total = sum(c.bytes for c in choice)

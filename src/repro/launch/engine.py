@@ -93,6 +93,13 @@ class _AdmitQueue:
             self._closed = True
             self._cv.notify_all()
 
+    def drain(self) -> List[_Pending]:
+        """Remove and return every queued entry (stall teardown)."""
+        with self._cv:
+            out = list(self._d)
+            self._d.clear()
+            return out
+
     def take_group(self, max_rows: int, exact: bool) -> List[_Pending]:
         """Block for the head entry, then gather up to ``max_rows`` rows.
 
@@ -150,6 +157,11 @@ class OverlappedServer(ContinuousServer):
         the detokenize queue (decode steps awaiting readback) — bounded so
         a stalled consumer applies backpressure instead of hoarding
         device memory.
+    ``stall_timeout_s``
+        progress watchdog (default 300s): with requests outstanding but no
+        token/insertion/arrival movement for this long, ``serve()`` shuts
+        the background threads down, drains every queue, and raises a
+        descriptive error instead of hanging the caller.
 
     Restrictions: ``greedy=True`` only, ``rules=None`` only (see module
     docstring). With ``spec_k >= 2`` decode runs the inherited synchronous
@@ -158,7 +170,7 @@ class OverlappedServer(ContinuousServer):
     """
 
     def __init__(self, *args, admit_batch: int = 4, queue_depth: int = 8,
-                 **kwargs):
+                 stall_timeout_s: float = 300.0, **kwargs):
         super().__init__(*args, **kwargs)
         if not self.greedy:
             raise ValueError(
@@ -173,6 +185,15 @@ class OverlappedServer(ContinuousServer):
                 "ContinuousServer for mesh serving")
         self.admit_batch = max(1, int(admit_batch))
         self.queue_depth = max(1, int(queue_depth))
+        # progress watchdog: serve() raises after this long with requests
+        # outstanding but no token, insertion, or arrival movement — a
+        # wedged admission pipeline otherwise hangs the caller forever
+        self.stall_timeout_s = float(stall_timeout_s)
+        self._stalled = False
+        # test seam: called by the admission thread with each group just
+        # before its batched prefill (tests inject a blocking hook here to
+        # exercise the stall watchdog + bounded teardown deterministically)
+        self._admit_hook = None
         cfg = self.model.cfg
         # exact-length grouping for stacks whose prefill is not
         # padding-neutral — the same predicate that defaults
@@ -214,7 +235,7 @@ class OverlappedServer(ContinuousServer):
         self.stats.update({
             "admit_groups": 0, "admit_grouped_rows": 0,
             "peak_admit_depth": 0, "peak_ready_depth": 0,
-            "peak_detok_depth": 0,
+            "peak_detok_depth": 0, "stalls": 0,
         })
         self._started = False
         self._thread_exc: Optional[BaseException] = None
@@ -308,6 +329,8 @@ class OverlappedServer(ContinuousServer):
                                                 self._exact)
                 if not group:
                     return  # closed and drained
+                if self._admit_hook is not None:
+                    self._admit_hook(group)
                 self._ready_q.put(self._prefill_group(group))
         except BaseException as exc:  # noqa: BLE001 — surfaced on serve()
             self._thread_exc = exc
@@ -615,6 +638,7 @@ class OverlappedServer(ContinuousServer):
         self._done_q: collections.deque = collections.deque()
         self._detok_tokens = 0
         self._thread_exc = None
+        self._stalled = False
         self._started = True
         admit_t = threading.Thread(target=self._admission_main,
                                    name="admit", daemon=True)
@@ -661,11 +685,23 @@ class OverlappedServer(ContinuousServer):
                             pending.append(self._ready_q.get(timeout=0.005))
                         except queue_lib.Empty:
                             pass
-                        if time.monotonic() - last_progress > 300.0:
+                        elapsed = time.monotonic() - last_progress
+                        if elapsed > self.stall_timeout_s:
+                            self._stalled = True
+                            self.stats["stalls"] += 1
                             raise RuntimeError(
-                                "OverlappedServer made no progress for "
-                                "300s with requests outstanding — "
-                                "admission pipeline wedged?")
+                                f"OverlappedServer stalled: no progress "
+                                f"for {elapsed:.1f}s (stall_timeout_s="
+                                f"{self.stall_timeout_s:g}) with "
+                                f"{self._remaining} request(s) "
+                                f"outstanding — admission thread "
+                                f"{'alive' if admit_t.is_alive() else 'dead'}, "
+                                f"{len(self._admitq)} pending admission(s), "
+                                f"{len(pending) + self._ready_q.qsize()} "
+                                f"prefilled group(s) awaiting insertion, "
+                                f"{self._detok_q.qsize()} detokenize "
+                                f"step(s) queued; background threads were "
+                                f"shut down and queues drained")
                     else:
                         last_progress = time.monotonic()
                     continue
@@ -688,16 +724,52 @@ class OverlappedServer(ContinuousServer):
                 clock += 1
         finally:
             self._admitq.close()
-            while admit_t.is_alive():
-                # keep the bounded ready queue draining so an admission
-                # thread blocked mid-put can reach the close signal
+            # BOUNDED teardown. On the normal path the admission thread is
+            # parked in take_group and exits on close() within one loop
+            # turn; after a detected stall it may be wedged INSIDE a
+            # prefill, and an unbounded join here would trap the caller in
+            # this finally forever — the exact hang the watchdog exists to
+            # convert into an error. So: keep the bounded ready queue
+            # draining (a thread blocked mid-put must reach the close
+            # signal), but give up after a grace period and abandon the
+            # wedged thread — both threads are daemonic and the next
+            # serve() builds fresh queues.
+            grace = 1.0 if self._stalled else 60.0
+            deadline = time.monotonic() + grace
+            while admit_t.is_alive() and time.monotonic() < deadline:
                 try:
                     self._ready_q.get_nowait()
                 except queue_lib.Empty:
                     pass
                 admit_t.join(timeout=0.01)
-            self._detok_q.put(None)
-            detok_t.join()
+            # drain leftovers: queued groups pin mini-cache device buffers
+            # and undelivered admissions would leak into a later serve()
+            while True:
+                try:
+                    self._ready_q.get_nowait()
+                except queue_lib.Empty:
+                    break
+            self._admitq.drain()
+            self._done_q.clear()
+            # the sentinel put must not block on a full queue whose
+            # consumer is wedged mid-readback; a live detokenizer drains
+            # the queue and takes it within a turn or two
+            sent = False
+            stop = time.monotonic() + grace
+            while not sent and time.monotonic() < stop:
+                try:
+                    self._detok_q.put(None, timeout=0.05)
+                    sent = True
+                except queue_lib.Full:
+                    if not detok_t.is_alive():
+                        break
+            detok_t.join(timeout=grace)
+            if detok_t.is_alive():
+                while True:  # abandoned: drop its queued steps too
+                    try:
+                        self._detok_q.get_nowait()
+                    except queue_lib.Empty:
+                        break
             self.stats["tokens"] += self._detok_tokens
             self._detok_tokens = 0
             self._started = False

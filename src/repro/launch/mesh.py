@@ -38,3 +38,71 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     need = int(np.prod(shape))
     dev = np.asarray(jax.devices()[:need]).reshape(shape)
     return Mesh(dev, axes)
+
+
+def init_distributed(*, coordinator_address: str, num_processes: int,
+                     process_id: int,
+                     simulate_devices: Optional[int] = None):
+    """Join a ``jax.distributed`` coordination service; returns (pid, n).
+
+    Must run before anything initializes jax's backends. When
+    ``simulate_devices`` is set, XLA_FLAGS gains
+    ``--xla_force_host_platform_device_count=N`` first, so CI can fake N
+    accelerators per host on plain CPU — two of these processes under
+    one coordinator then look exactly like a 2-host deployment to every
+    caller of ``jax.devices()`` / ``jax.process_index()``.
+    """
+    import os
+
+    if simulate_devices is not None:
+        flag = f"--xla_force_host_platform_device_count={simulate_devices}"
+        prev = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in prev:
+            os.environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+    import jax
+
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return jax.process_index(), jax.process_count()
+
+
+def local_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Mesh over THIS process's local devices only.
+
+    The per-host replica of a multi-host deployment shards its experts
+    across the devices it owns; cross-host traffic is whole requests
+    (router assignment), never collectives, so each host's mesh must not
+    reference remote devices.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    need = int(np.prod(shape))
+    local = jax.local_devices()
+    if len(local) < need:
+        raise RuntimeError(
+            f"local mesh {shape} needs {need} devices, this host has "
+            f"{len(local)}")
+    dev = np.asarray(local[:need]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def replica_meshes(num_replicas: int, shape: Tuple[int, ...],
+                   axes: Tuple[str, ...]):
+    """One disjoint mesh per replica, carved from the global device list.
+
+    Single-process multi-replica serving (serve.py ``--replicas``) gives
+    each replica its own device group so their expert-parallel
+    collectives never contend; the split itself lives in
+    sharding.py::split_devices.
+    """
+    from jax.sharding import Mesh
+
+    import jax
+
+    from ..sharding import split_devices
+
+    need = int(np.prod(shape))
+    groups = split_devices(jax.devices(), num_replicas, group_size=need)
+    return [Mesh(np.asarray(g).reshape(shape), axes) for g in groups]

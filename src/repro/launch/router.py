@@ -1,0 +1,469 @@
+"""Multi-host disaggregated serving: router + replica set + paged-KV handoff.
+
+Three layers on top of the single-process servers (DESIGN.md §14):
+
+  * :class:`Router` — the front door. It assigns each incoming request to
+    one of N replica servers (each a full ``ContinuousServer`` /
+    ``OverlappedServer`` with its OWN page pool, block tables and slot
+    state — per-replica KV, never shared) and runs every replica's
+    serving loop on its own thread. Because each replica is individually
+    token-identical to the sync oracle for any schedule it is handed,
+    the routed union is per-request token-identical to ONE server
+    serving the whole trace — routing is a pure throughput knob, pinned
+    by tests/test_router.py.
+
+  * :class:`PrefillWorker` + :class:`DisaggregatedServer` — opt-in
+    prefill/decode disaggregation. The worker runs every admission
+    prefill against its own single-slot paged mini cache (pages
+    ``0..ceil(s/page_size)-1`` via a private block-table row) and hands
+    the finished request to the decode server as a **block-table row
+    plus page copy**: the decode side allocates pool pages through the
+    usual ``ServingState.prepare`` and splices the worker's pages onto
+    them in one ``tree_map`` — the same bounded, checkable operation the
+    overlapped engine uses for its batched admission
+    (engine.py::_copy_rows). Numerics are untouched: the worker runs the
+    SAME jitted prefill at the SAME padded length the decode server
+    would, and page placement is invisible through block-table
+    indirection, so greedy outputs stay token-identical to the oracle.
+
+  * multi-process bring-up — ``python -m repro.launch.router`` is the
+    per-host worker entry point: it joins a ``jax.distributed``
+    coordination service (launch/mesh.py::init_distributed; CPU CI
+    simulates hosts by forcing host-platform devices), derives its host
+    index from ``jax.process_index()``, computes the SAME deterministic
+    assignment every other host computes, and serves its share of the
+    trace. Host-level data parallelism needs no cross-host collectives —
+    each replica is self-contained — so the differential test
+    (tests/test_multiproc.py, ci.sh multiproc tier) can diff the routed
+    union against an in-process oracle token-for-token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+PyTree = Any
+
+ROUTER_POLICIES = ("least_loaded", "round_robin")
+
+
+def assign_requests(requests, num_replicas: int,
+                    policy: str = "least_loaded") -> List[int]:
+    """Deterministic replica index per request (same order as given).
+
+    ``least_loaded`` balances estimated work — prompt tokens plus the
+    new-token budget, the request's lifetime cache demand — ties going
+    to the lowest replica index; ``round_robin`` ignores cost. Both are
+    pure functions of the request list, so every host of a multi-process
+    deployment derives the identical assignment with no coordination
+    traffic — and assignment can never change a request's tokens, only
+    which replica computes them.
+    """
+    if num_replicas < 1:
+        raise ValueError("assign_requests: need at least one replica")
+    if policy not in ROUTER_POLICIES:
+        raise ValueError(f"unknown routing policy {policy!r}; "
+                         f"choose from {ROUTER_POLICIES}")
+    if policy == "round_robin":
+        return [i % num_replicas for i in range(len(requests))]
+    load = [0] * num_replicas
+    out = []
+    for req in requests:
+        cost = int(np.asarray(req.prompt).size) + max(
+            int(req.max_new_tokens), 0)
+        r = min(range(num_replicas), key=lambda j: (load[j], j))
+        load[r] += cost
+        out.append(r)
+    return out
+
+
+class Router:
+    """Front-door load balancer over a replica set.
+
+    Each replica is a fully independent server (own slots, own page
+    pool, own block tables) over shared — read-only — model params.
+    ``serve`` partitions the trace by :func:`assign_requests`, replays
+    each replica's sub-trace on its own thread (XLA executions release
+    the GIL, so replicas genuinely overlap on multicore hosts), and
+    re-raises the first replica failure. Outputs are written into the
+    caller's ``Request`` objects exactly as a single server would.
+    """
+
+    def __init__(self, replicas: Sequence[Any],
+                 policy: str = "least_loaded"):
+        if not replicas:
+            raise ValueError("Router needs at least one replica server")
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"unknown routing policy {policy!r}; "
+                             f"choose from {ROUTER_POLICIES}")
+        self.replicas = list(replicas)
+        self.policy = policy
+        self.stats = {"routed_requests": 0, "routed_batches": 0}
+
+    def assign(self, requests) -> List[int]:
+        return assign_requests(requests, len(self.replicas), self.policy)
+
+    def serve(self, requests, arrival_steps: Optional[Sequence[int]] = None):
+        """Same contract as ``ContinuousServer.serve``; routed execution.
+
+        ``arrival_steps`` are replica-local: each replica replays its
+        assigned requests under their original arrival ticks, which
+        preserves the per-replica schedule shape without a shared clock.
+        """
+        if arrival_steps is not None and len(arrival_steps) != len(requests):
+            raise ValueError("arrival_steps must match requests")
+        assignment = self.assign(requests)
+        n = len(self.replicas)
+        buckets: List[list] = [[] for _ in range(n)]
+        arrivals: List[list] = [[] for _ in range(n)]
+        for i, (req, r) in enumerate(zip(requests, assignment)):
+            buckets[r].append(req)
+            arrivals[r].append(0 if arrival_steps is None
+                               else int(arrival_steps[i]))
+        failures: List[Optional[BaseException]] = [None] * n
+
+        def run(j: int):
+            try:
+                if buckets[j]:
+                    self.replicas[j].serve(buckets[j],
+                                           arrival_steps=arrivals[j])
+            except BaseException as exc:  # noqa: BLE001 — re-raised below
+                failures[j] = exc
+
+        threads = [threading.Thread(target=run, args=(j,),
+                                    name=f"replica{j}", daemon=True)
+                   for j in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for j, exc in enumerate(failures):
+            if exc is not None:
+                raise RuntimeError(
+                    f"replica {j} failed serving "
+                    f"{len(buckets[j])} routed requests") from exc
+        self.stats["routed_requests"] += len(requests)
+        self.stats["routed_batches"] += 1
+        return list(requests)
+
+    def aggregate_stats(self) -> dict:
+        """Router stats plus summed and per-replica scheduler counters."""
+        agg = dict(self.stats)
+        agg["replicas"] = len(self.replicas)
+        per = []
+        for rep in self.replicas:
+            st = dict(getattr(rep, "stats", {}))
+            per.append(st)
+        for key in ("tokens", "steps", "preemptions", "handoffs",
+                    "handoff_pages"):
+            if any(key in st for st in per):
+                agg[key] = sum(int(st.get(key, 0)) for st in per)
+        agg["per_replica"] = per
+        return agg
+
+
+@dataclasses.dataclass
+class Handoff:
+    """One finished prefill, ready for decode-side insertion.
+
+    ``view`` is the worker's mini cache AFTER the prefill (pages
+    ``0..n_pages-1`` hold the prompt's KV; recurrent state rows hold the
+    post-prompt state), ``logits_last`` the host logits at the true last
+    prompt position — the decode server samples from them so the rng
+    stream is consumed in the same order as the oracle's admission.
+    """
+    view: PyTree
+    n_pages: int
+    logits_last: np.ndarray
+
+
+class PrefillWorker:
+    """Dedicated prefill worker for one :class:`DisaggregatedServer`.
+
+    Owns a single-slot paged cache sized for one ``max_seq`` sequence
+    (``ceil(max_seq/page_size)`` private pages) and reuses the decode
+    server's jitted prefill — same padded lengths, same apply mode, same
+    sharding rules — so the handed-off pages are exactly what an
+    in-place admission prefill would have written to the pool.
+    """
+
+    def __init__(self, server):
+        import jax
+        import jax.numpy as jnp  # noqa: F401 — bound below per call
+
+        from ..sharding import split_logical
+
+        self._srv = server
+        self.page_size = server.page_size
+        self.max_seq = server.max_seq
+        self.pages_cap = -(-server.max_seq // server.page_size)
+        # pristine template: prefill is functional (no donation), so one
+        # fresh-init tree serves every admission — page pos rows start at
+        # the staleness sentinel exactly like a freed pool page
+        self._template, self._axes = split_logical(
+            server.model.init_paged_cache(1, server.max_seq,
+                                          server.page_size, self.pages_cap))
+        self._treemap = jax.tree_util.tree_map
+        self.stats = {"prefills": 0}
+
+    def prefill(self, toks: np.ndarray) -> Handoff:
+        import jax.numpy as jnp
+
+        srv = self._srv
+        s = len(toks)
+        n = -(-s // self.page_size)
+        tbl = np.full((1, self.pages_cap), -1, np.int32)
+        tbl[0, :n] = np.arange(n, dtype=np.int32)
+        tbl_j = jnp.asarray(tbl)
+
+        def upd(leaf, axes):
+            if "page_table" not in axes:
+                return leaf
+            return jnp.broadcast_to(tbl_j, leaf.shape)
+
+        mini = self._treemap(upd, self._template, self._axes,
+                             is_leaf=lambda x: hasattr(x, "shape"))
+        # identical padding math to ContinuousServer._admit: the jitted
+        # prefill sees the same shape set, and the padded tail's writes
+        # past page n-1 drop against the unmapped table entries
+        s_pad = min(-(-s // srv.prefill_bucket) * srv.prefill_bucket,
+                    self.max_seq)
+        padded = np.zeros(s_pad, np.int32)
+        padded[:s] = toks
+        pos = jnp.arange(s_pad, dtype=jnp.int32)[None, :]
+        logits, view = srv._prefill(
+            srv.params, {"tokens": jnp.asarray(padded)[None, :]}, mini, pos)
+        self.stats["prefills"] += 1
+        return Handoff(view=view, n_pages=n,
+                       logits_last=np.asarray(logits[0, s - 1]))
+
+
+def _continuous_server_cls():
+    from .serve import ContinuousServer
+
+    return ContinuousServer
+
+
+class DisaggregatedServer(_continuous_server_cls()):
+    """Decode-side server of a prefill/decode disaggregated pair.
+
+    Admission never runs a prefill against the pool: the dedicated
+    :class:`PrefillWorker` computes the prompt's KV into its own mini
+    cache, and ``_admit`` turns the result into pool state as a
+    block-table row (``ServingState.prepare`` + table sync, bounded by
+    the pool's invariants) plus one page/state-row copy
+    (``_insert_handoff``). Preemption resumes take the same path — the
+    worker recomputes prompt + generated-so-far, so recompute-restore
+    stays token-identical. Stats gain ``handoffs`` / ``handoff_pages``.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.prefiller = PrefillWorker(self)
+        self.stats.update({"handoffs": 0, "handoff_pages": 0})
+
+    def warmup(self, max_len=None):
+        """Precompile the worker's prefill shapes + the decode step (the
+        inherited warmup would compile pool-shaped prefills this server
+        never issues)."""
+        import jax.numpy as jnp
+
+        assert all(self.slot_free), "warmup() must run before traffic"
+        cap = self.max_seq if max_len is None else min(max_len, self.max_seq)
+        shapes = set(range(self.prefill_bucket, cap + 1,
+                           self.prefill_bucket))
+        shapes.add(cap)
+        for s in sorted(shapes):
+            self.prefiller.prefill(np.zeros(s, np.int32))
+        self.prefiller.stats["prefills"] = 0
+        toks = jnp.zeros((self.num_slots, 1), jnp.int32)
+        pos = jnp.zeros((self.num_slots, 1), jnp.int32)
+        self._decode(self.params, {"tokens": toks}, self.cache, pos)
+
+    def _admit(self, ent, slot: int):
+        req = ent.req
+        if not ent.resumed and req.max_new_tokens <= 0:
+            req.output = []
+            return
+        toks = ent.toks
+        s = len(toks)
+        handoff = self.prefiller.prefill(toks)
+        # decode-side state: fresh recurrent rows, pool pages for the
+        # prompt, table row synced — the same sequence the in-place
+        # admission runs, just with the KV arriving by copy
+        self._reset_state(slot)
+        if self.state.prepare(slot, s):
+            self._bt_dirty = True
+        self._sync_block_tables()
+        self._insert_handoff(slot, s, handoff)
+        self._finish_admit(ent, slot, s,
+                           self._sample(handoff.logits_last))
+
+    def _insert_handoff(self, slot: int, s: int, handoff: Handoff):
+        """Splice the worker's pages onto this slot's pool pages and its
+        state rows onto the slot's rows, in one tree_map."""
+        import jax
+        import jax.numpy as jnp
+
+        dst: List[int] = []
+        if self.pool is not None:
+            dst = self.pool.mapped_pages(slot, s)
+            # the handoff is bounded and checkable: the pool mapped
+            # exactly the pages the worker filled, or the copy is wrong
+            if len(dst) != handoff.n_pages:
+                raise RuntimeError(
+                    f"handoff page mismatch: worker filled "
+                    f"{handoff.n_pages} pages, pool mapped {len(dst)} "
+                    f"for slot {slot} at {s} tokens")
+        sp = jnp.arange(len(dst), dtype=jnp.int32) if dst else None
+        dp = jnp.asarray(dst, jnp.int32) if dst else None
+
+        def cp(big, small, axes):
+            if "page_table" in axes:
+                return big  # host-authoritative, synced separately
+            if "pages" in axes:
+                if sp is None:
+                    return big
+                ax = axes.index("pages")
+                idx = [slice(None)] * big.ndim
+                idx[ax] = dp
+                return big.at[tuple(idx)].set(jnp.take(small, sp, axis=ax))
+            if "batch" in axes:
+                ax = axes.index("batch")
+                idx = [slice(None)] * big.ndim
+                idx[ax] = slice(slot, slot + 1)
+                return big.at[tuple(idx)].set(small)
+            return big
+
+        self.cache = jax.tree_util.tree_map(
+            cp, self.cache, handoff.view, self.cache_axes,
+            is_leaf=lambda x: hasattr(x, "shape"))
+        self.stats["handoffs"] += 1
+        self.stats["handoff_pages"] += len(dst)
+
+
+def build_replicas(model, params, num_replicas: int, *,
+                   disaggregate: bool = False, overlapped: bool = False,
+                   rules_list: Optional[Sequence[Any]] = None,
+                   param_axes: Optional[PyTree] = None,
+                   **server_kwargs) -> List[Any]:
+    """Construct ``num_replicas`` independent servers over shared params.
+
+    ``rules_list`` (optional) gives each replica its own sharding rules
+    — e.g. one disjoint expert-parallel mesh per replica from
+    ``launch/mesh.py::replica_meshes`` — in which case ``param_axes``
+    places a copy of the params on that replica's devices.
+    """
+    if num_replicas < 1:
+        raise ValueError("build_replicas: need at least one replica")
+    if disaggregate and overlapped:
+        raise ValueError(
+            "--disaggregate is incompatible with --overlapped: the "
+            "engine already owns admission on a background thread; "
+            "disaggregation replaces the sync server's in-place prefill")
+    if rules_list is not None and len(rules_list) != num_replicas:
+        raise ValueError("rules_list must have one entry per replica")
+    if disaggregate:
+        cls = DisaggregatedServer
+    elif overlapped:
+        from .engine import OverlappedServer
+
+        cls = OverlappedServer
+    else:
+        cls = _continuous_server_cls()
+    replicas = []
+    for i in range(num_replicas):
+        kw = dict(server_kwargs)
+        if rules_list is not None:
+            kw["rules"] = rules_list[i]
+            kw["param_axes"] = param_axes
+        replicas.append(cls(model, params, **kw))
+    return replicas
+
+
+def main():  # pragma: no cover — exercised by tests/test_multiproc.py
+    """Per-host worker of the multi-host replica set.
+
+    Every host runs this entry point with the same trace parameters; the
+    deterministic assignment gives each host its disjoint share. CPU CI
+    simulates hosts: two of these processes under one coordinator, each
+    with forced host-platform devices (scripts/ci.sh multiproc).
+    """
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--coordinator", required=True, metavar="HOST:PORT",
+                    help="jax.distributed coordination service address "
+                         "(host 0 binds it)")
+    ap.add_argument("--num-hosts", type=int, required=True)
+    ap.add_argument("--host", type=int, required=True,
+                    help="this process's index in [0, num-hosts)")
+    ap.add_argument("--simulate-devices", type=int, default=None,
+                    metavar="N",
+                    help="force N host-platform devices before jax "
+                         "initializes (CPU-simulated hosts for CI)")
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="least_loaded",
+                    choices=ROUTER_POLICIES)
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="serve this host's share through the "
+                         "prefill/decode disaggregated pair")
+    ap.add_argument("--preempt-step", type=int, default=None,
+                    help="force a preemption at this decode step "
+                         "(differential-test hook)")
+    ap.add_argument("--out", required=True, metavar="JSON",
+                    help="write {request index: output tokens} here")
+    args = ap.parse_args()
+
+    from .mesh import init_distributed
+
+    pid, nprocs = init_distributed(
+        coordinator_address=args.coordinator,
+        num_processes=args.num_hosts, process_id=args.host,
+        simulate_devices=args.simulate_devices)
+    assert nprocs == args.num_hosts
+
+    import jax
+
+    from ..configs import reduced_config
+    from ..models import build_model
+    from .serve import Request
+
+    cfg = reduced_config(args.arch)
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed)
+    # the SAME synthetic trace on every host (seeded): assignment then
+    # selects this host's disjoint share
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,))
+                    .astype(np.int32), max_new_tokens=args.max_new)
+            for _ in range(args.requests)]
+    assignment = assign_requests(reqs, nprocs, args.policy)
+    mine = [i for i, a in enumerate(assignment) if a == pid]
+    cls = DisaggregatedServer if args.disaggregate \
+        else _continuous_server_cls()
+    server = cls(model, params, num_slots=2, max_seq=48, page_size=4,
+                 preempt_steps=(None if args.preempt_step is None
+                                else [args.preempt_step]))
+    server.serve([reqs[i] for i in mine])
+    with open(args.out, "w") as fh:
+        json.dump({"host": pid, "hosts": nprocs,
+                   "local_devices": len(jax.local_devices()),
+                   "global_devices": len(jax.devices()),
+                   "assignment": assignment,
+                   "preemptions": int(server.stats["preemptions"]),
+                   "outputs": {str(i): reqs[i].output for i in mine}},
+                  fh)
+    print(f"host {pid}/{nprocs}: served {len(mine)} of "
+          f"{len(reqs)} requests -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

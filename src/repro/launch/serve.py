@@ -729,7 +729,13 @@ class ContinuousServer:
             self._slot_view(slot), pos
         )
         self._merge_prefill(slot, new_view)
-        nxt = self._sample(logits[0, s - 1])
+        self._finish_admit(ent, slot, s, self._sample(logits[0, s - 1]))
+
+    def _finish_admit(self, ent: _Pending, slot: int, s: int, nxt: int):
+        """Post-prefill admission bookkeeping, shared with the
+        disaggregated decode server (launch/router.py) whose prefill ran
+        on a dedicated worker instead of through ``self._prefill``."""
+        req = ent.req
         if ent.resumed:
             req.output.append(nxt)
         else:
@@ -1188,10 +1194,49 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
              "groups awaiting insertion) and the detokenize queue "
              "(decode steps awaiting readback)",
     )
+    from .router import ROUTER_POLICIES
+
+    ap.add_argument(
+        "--replicas", type=int, default=1, metavar="N",
+        help="serve through a front-door Router over N independent "
+             "replica servers (launch/router.py, docs/SERVING.md "
+             "multi-host section): each replica owns its page pool, "
+             "block tables and slots; the trace is partitioned by "
+             "--router-policy and outputs are per-request "
+             "token-identical to one server. Requires --paged; with "
+             "--mesh each replica gets its own disjoint device mesh",
+    )
+    ap.add_argument(
+        "--router-policy", default="least_loaded", choices=ROUTER_POLICIES,
+        help="request->replica assignment under --replicas: "
+             "'least_loaded' balances prompt+max-new token cost, "
+             "'round_robin' ignores cost; both are deterministic, so "
+             "every host of a multi-process deployment derives the same "
+             "assignment",
+    )
+    ap.add_argument(
+        "--disaggregate", action="store_true",
+        help="prefill/decode disaggregation (launch/router.py): a "
+             "dedicated PrefillWorker runs every admission prefill "
+             "against its own mini cache and hands the finished request "
+             "to the decode server as a block-table row plus page copy "
+             "— greedy outputs stay token-identical. Requires --paged; "
+             "incompatible with --overlapped",
+    )
     args = ap.parse_args()
     if args.overlapped and not args.paged:
         raise SystemExit("--overlapped requires --paged (the engine wraps "
                          "the continuous-batching scheduler)")
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if (args.replicas > 1 or args.disaggregate) and not args.paged:
+        raise SystemExit("--replicas > 1 / --disaggregate require --paged "
+                         "(replicas and the prefill/decode split are "
+                         "built on per-replica page pools)")
+    if args.disaggregate and args.overlapped:
+        raise SystemExit("--disaggregate is incompatible with "
+                         "--overlapped (the engine already owns "
+                         "admission on a background thread)")
     cfg = reduced_config(args.arch)
     if args.token_path_max_tokens is not None and cfg.moe is not None:
         cfg = dataclasses.replace(
@@ -1321,7 +1366,44 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
         if len(shape) != 2:
             raise SystemExit("--mesh must be DxM, e.g. 2x4")
         rules = make_rules(make_mesh(shape, ("data", "model")))
-    if args.overlapped:
+    routed = args.replicas > 1 or args.disaggregate
+    if routed:
+        from ..sharding import make_rules as _make_rules
+        from .router import Router, build_replicas
+
+        rules_list = None
+        if rules is not None:
+            if args.replicas > 1:
+                # disjoint device groups: replica collectives never
+                # share links (sharding.py::split_devices)
+                from .mesh import replica_meshes
+
+                rules_list = [_make_rules(m) for m in replica_meshes(
+                    args.replicas, shape, ("data", "model"))]
+            else:
+                rules_list = [rules]
+        kw = dict(num_slots=4, max_seq=128, page_size=args.page_size,
+                  pool_pages=args.pool_pages, apply_mode=args.apply_mode,
+                  truncate_prompts=args.truncate_prompts,
+                  spec_k=args.spec_k)
+        if args.overlapped:
+            kw.update(admit_batch=args.admit_batch,
+                      queue_depth=args.queue_depth)
+        try:
+            replicas = build_replicas(
+                model, params, args.replicas,
+                disaggregate=args.disaggregate,
+                overlapped=args.overlapped, rules_list=rules_list,
+                param_axes=axes if rules_list is not None else None,
+                **kw)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        server = Router(replicas, policy=args.router_policy)
+        print(f"router: {args.replicas} replica(s), "
+              f"policy={args.router_policy}, "
+              f"disaggregate={args.disaggregate}")
+        print(f"serving state: {replicas[0].state.describe()}")
+    elif args.overlapped:
         from .engine import OverlappedServer
 
         server = OverlappedServer(
@@ -1357,7 +1439,9 @@ def main():  # pragma: no cover — exercised by examples/serve_compressed.py
     server.serve(reqs)
     for i, r in enumerate(reqs):
         print(f"req{i}: {r.output}")
-    if args.paged:
+    if routed:
+        print(f"router stats: {server.aggregate_stats()}")
+    elif args.paged:
         print(f"paged stats: {server.stats}")
     elif args.spec_k >= 2:
         print(f"spec stats: {server.spec_stats}")

@@ -16,7 +16,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -169,6 +169,32 @@ def shard_map_unchecked(f, mesh: Mesh, in_specs, out_specs):
 
     return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_rep=False)
+
+
+def split_devices(devices: Sequence[Any], num_groups: int, *,
+                  group_size: Optional[int] = None) -> List[List[Any]]:
+    """Partition a device list into ``num_groups`` disjoint groups.
+
+    Each serving replica gets one group as its private mesh domain
+    (launch/mesh.py::replica_meshes), so replica collectives never share
+    links. Groups are contiguous — on real hardware adjacent device ids
+    share interconnect, so contiguity keeps each replica's collectives
+    local. ``group_size`` defaults to an even split and must not
+    oversubscribe the device list.
+    """
+    if num_groups < 1:
+        raise ValueError("split_devices: need at least one group")
+    size = group_size if group_size is not None else len(devices) // num_groups
+    if size < 1:
+        raise ValueError(
+            f"split_devices: {len(devices)} devices cannot form "
+            f"{num_groups} non-empty groups")
+    if num_groups * size > len(devices):
+        raise ValueError(
+            f"split_devices: {num_groups} groups of {size} need "
+            f"{num_groups * size} devices, have {len(devices)}")
+    return [list(devices[i * size:(i + 1) * size])
+            for i in range(num_groups)]
 
 
 def make_rules(mesh: Mesh, overrides: Optional[Dict[str, Optional[str]]] = None) -> ShardingRules:

@@ -42,3 +42,47 @@ def test_downstream_eval_rows_finite():
     labels = {label for label, _, _ in rows}
     assert "T3/dense" in labels
     assert any("ResMoE(SVD)" in lb for lb in labels)
+
+
+def test_rate_sweep_rows_numeric_values():
+    """The F4 rows carry the paper-fidelity metric in the VALUE column.
+
+    Regression: the sweep used to emit ``(name, 0, metric)`` — every
+    BENCH_*.json row of the family had ``value: 0`` and the number
+    buried in the derived string, unusable by trajectory tooling.
+    """
+    from benchmarks import rate_sweep
+
+    rows = rate_sweep.run(seed=0)
+    assert rows, "rate_sweep.run returned no rows"
+    for label, value, derived in rows:
+        assert label.startswith("F4/rate=")
+        v = float(value)
+        assert math.isfinite(v) and v > 0, f"{label}: value={value!r}"
+        assert isinstance(derived, str) and derived, \
+            f"{label}: derived must be provenance text"
+    labels = {label for label, _, _ in rows}
+    for fam in ("ResMoE(UP)", "UP", "ResMoE(SVD)"):
+        assert any(lb.endswith(fam) for lb in labels)
+
+
+def test_bench_json_rows_numeric_values():
+    """run.py's artifact rows always carry the metric in ``value``.
+
+    Suites that still emit ``(name, 0, number)`` (memory/flops analytic
+    tables) get the number promoted into ``value`` with the original
+    string kept as provenance; textual deriveds stay untouched.
+    """
+    from benchmarks.run import row_to_json
+
+    promoted = row_to_json(("T10/x/UP", 0, 12.5))
+    assert promoted["value"] == 12.5
+    assert promoted["derived"] == "12.5"
+    sci = row_to_json(("T12/x/dense", 0, "1.234e+09"))
+    assert sci["value"] == 1.234e9
+    textual = row_to_json(("XL/dense", 0, "nll=1.5"))
+    assert textual["value"] == 0 and textual["derived"] == "nll=1.5"
+    timed = row_to_json(("T11/forward/dense", 42.5, "note"))
+    assert timed["value"] == 42.5 and timed["derived"] == "note"
+    bare = row_to_json(("SERVE/x", 3.0))
+    assert bare["value"] == 3.0 and bare["derived"] == ""

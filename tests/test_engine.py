@@ -252,9 +252,11 @@ _SCHEDULER_STATS = {
 _ENGINE_STATS = {
     "admit_groups": int, "admit_grouped_rows": int,
     "peak_admit_depth": int, "peak_ready_depth": int,
-    "peak_detok_depth": int,
+    "peak_detok_depth": int, "stalls": int,
 }
 _SPEC_STATS = {"rounds": int, "drafted": int, "accepted": int}
+_HANDOFF_STATS = {"handoffs": int, "handoff_pages": int}
+_ROUTER_STATS = {"routed_requests": int, "routed_batches": int}
 
 
 def test_stats_schema_matches_serving_doc(rng):
@@ -285,8 +287,18 @@ def test_stats_schema_matches_serving_doc(rng):
     eng.serve(reqs())
     assert set(eng.stats) == set(_SCHEDULER_STATS) | set(_ENGINE_STATS)
 
-    schema = dict(_SCHEDULER_STATS, **_ENGINE_STATS)
-    for srv in (cont, eng):
+    from repro.launch.router import DisaggregatedServer, Router
+
+    dis = DisaggregatedServer(model, params, num_slots=2, max_seq=48,
+                              page_size=4)
+    router = Router([dis])
+    router.serve(reqs())
+    assert set(dis.stats) == set(_SCHEDULER_STATS) | set(_HANDOFF_STATS)
+    assert set(router.stats) == set(_ROUTER_STATS)
+
+    schema = dict(_SCHEDULER_STATS, **_ENGINE_STATS, **_HANDOFF_STATS,
+                  **_ROUTER_STATS)
+    for srv in (cont, eng, dis, router):
         for key, val in srv.stats.items():
             assert isinstance(val, schema[key]), (key, type(val))
             assert val >= 0, (key, val)
@@ -317,6 +329,56 @@ def test_engine_refuses_sampling_and_rules():
     with pytest.raises(ValueError, match="rules"):
         OverlappedServer(model, params, num_slots=2, max_seq=48,
                          page_size=4, rules=rules)
+
+
+def test_engine_stall_watchdog_shuts_down_and_raises(rng):
+    """A wedged admission pipeline trips the watchdog: serve() raises a
+    descriptive error in bounded time, shuts the background threads
+    down, and drains every queue — the old teardown joined the wedged
+    thread forever, so detecting the stall still hung the caller."""
+    import threading
+    import time
+
+    model, params = _dense_model()
+    eng = OverlappedServer(model, params, num_slots=2, max_seq=48,
+                           page_size=4, admit_batch=2, stall_timeout_s=0.3)
+    wedged = threading.Event()
+    release = threading.Event()
+
+    def hook(group):
+        wedged.set()
+        release.wait(timeout=60.0)
+
+    eng._admit_hook = hook
+    mk = lambda: [Request(prompt=rng.integers(
+        0, model.cfg.vocab_size, size=(4,)).astype(np.int32),
+        max_new_tokens=3) for _ in range(3)]
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="stalled: no progress"):
+        eng.serve(mk())
+    assert time.monotonic() - t0 < 30.0, "teardown must be bounded"
+    assert wedged.is_set()
+    assert eng.stats["stalls"] == 1
+    assert not eng._started
+    # queues drained: no prefilled group pins device buffers, no pending
+    # admission leaks into a later trace
+    assert eng._ready_q.qsize() == 0
+    assert eng._detok_q.qsize() == 0
+    assert len(eng._admitq) == 0
+    assert len(eng._done_q) == 0
+    # unwedge, let the abandoned thread exit, and confirm the engine
+    # serves a fresh trace correctly afterwards
+    release.set()
+    for t in threading.enumerate():
+        if t.name == "admit":
+            t.join(timeout=30.0)
+    eng._admit_hook = None
+    ra, rb = mk(), mk()
+    for a, b in zip(ra, rb):
+        b.prompt = a.prompt.copy()
+    Server(model, params, num_slots=2, max_seq=48).serve(ra)
+    eng.serve(rb)
+    assert [r.output for r in rb] == [r.output for r in ra]
 
 
 def test_engine_differential_dense_fast(rng):

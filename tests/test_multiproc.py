@@ -1,0 +1,117 @@
+"""Multi-host routed serving, CPU-simulated: two worker processes == oracle.
+
+The in-process router differentials (tests/test_router.py) cannot reach
+the bring-up path — ``jax.distributed.initialize``, process-indexed
+assignment, per-host device simulation — because a test process can join
+a coordination service exactly once. So this suite (the ``multiproc``
+CI tier) launches two real ``python -m repro.launch.router`` worker
+subprocesses under one coordinator, each simulating a 2-device host,
+lets each serve its deterministic share of the same seeded trace, and
+diffs the routed union token-for-token against the sync ``Server``
+oracle computed in-process — forced preemption and the disaggregated
+pair included.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.launch.serve import Request, Server
+from repro.models import build_model
+
+pytestmark = pytest.mark.multiproc
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_N_REQS = 6
+_MAX_NEW = 5
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _run_hosts(tmp_path, extra_args=()):
+    """Launch 2 worker processes under one coordinator; return their
+    parsed JSON outputs (host order)."""
+    port = _free_port()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    # let init_distributed own the device-count flag deterministically
+    env.pop("XLA_FLAGS", None)
+    outs = [str(tmp_path / f"host{i}.json") for i in range(2)]
+    cmd = [sys.executable, "-m", "repro.launch.router",
+           "--coordinator", f"127.0.0.1:{port}", "--num-hosts", "2",
+           "--simulate-devices", "2", "--requests", str(_N_REQS),
+           "--max-new", str(_MAX_NEW), *extra_args]
+    procs = [subprocess.Popen(cmd + ["--host", str(i), "--out", outs[i]],
+                              cwd=_ROOT, env=env, stdout=subprocess.PIPE,
+                              stderr=subprocess.STDOUT, text=True)
+             for i in range(2)]
+    logs = []
+    for p in procs:
+        try:
+            out, _ = p.communicate(timeout=420)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            pytest.fail("multiproc worker timed out")
+        logs.append(out)
+        assert p.returncode == 0, f"worker failed:\n{out}"
+    return [json.load(open(o)) for o in outs], logs
+
+
+def _oracle_outputs():
+    """The same seeded trace repro.launch.router::main builds, served
+    through the sync oracle in this process."""
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,))
+                    .astype(np.int32), max_new_tokens=_MAX_NEW)
+            for _ in range(_N_REQS)]
+    Server(model, params, num_slots=3, max_seq=48).serve(reqs)
+    return {str(i): r.output for i, r in enumerate(reqs)}
+
+
+def _assert_union_matches(results, oracle):
+    # both hosts derived the identical assignment with no coordination
+    assert results[0]["assignment"] == results[1]["assignment"]
+    # the shares are disjoint and cover the trace
+    mine = [set(r["outputs"]) for r in results]
+    assert not (mine[0] & mine[1])
+    assert mine[0] | mine[1] == set(oracle)
+    union = {**results[0]["outputs"], **results[1]["outputs"]}
+    for i, want in oracle.items():
+        assert union[i] == want, (i, union[i], want)
+
+
+def test_two_hosts_routed_union_matches_oracle(tmp_path):
+    results, _ = _run_hosts(tmp_path)
+    for r in results:
+        # jax.distributed really federated the simulated hosts: each
+        # process sees its 2 local devices AND the other host's 2
+        assert r["hosts"] == 2
+        assert r["local_devices"] == 2
+        assert r["global_devices"] == 4
+    _assert_union_matches(results, _oracle_outputs())
+
+
+def test_two_hosts_disaggregated_with_preemption(tmp_path):
+    """The hard mode: each host serves through the prefill/decode
+    disaggregated pair with a forced mid-request eviction — resumes
+    re-enter through the prefill worker on whichever host owns them,
+    and the union must still match the oracle bit-for-bit."""
+    results, _ = _run_hosts(
+        tmp_path, extra_args=["--disaggregate", "--preempt-step", "2"])
+    assert sum(r["preemptions"] for r in results) >= 1
+    _assert_union_matches(results, _oracle_outputs())

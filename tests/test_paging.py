@@ -227,6 +227,103 @@ def _run_random_ops(pool: PagePool, choose, n_ops: int):
         pool.check()
 
 
+def _run_window_spec_ops(tp: TokenPages, choose, n_ops: int):
+    """Spec rollback interleaved with window-expired reclamation — the
+    serving loop's exact page life cycle on a sliding-window stack.
+
+    Reclaim punches holes BELOW a slot's frontier; truncate frees pages
+    PAST it. Neither may touch the other's range, double-free a page, or
+    disturb the other slot, and the logical->mapped picture must match a
+    shadow set after every op.
+    """
+    pool = tp.pool
+    ps = pool.page_size
+    max_seq = pool.max_pages_per_slot * ps
+    pos = [0] * pool.num_slots          # committed frontier per slot
+    mapped = [set() for _ in range(pool.num_slots)]  # logical pages
+
+    def dead(logical, next_pos):
+        return (logical + 1) * ps - 1 <= next_pos - tp.window
+
+    for _ in range(n_ops):
+        slot = choose("slot", list(range(pool.num_slots)))
+        op = choose("op", ["advance", "advance", "reclaim", "lookahead",
+                           "truncate", "release"])
+        if op == "advance":
+            # one decode step: map the frontier page if needed. The
+            # frontier page can never be a window-dead hole (its last
+            # position >= pos, and window >= 1), so alloc is legal.
+            if pos[slot] >= max_seq:
+                continue
+            logical = pos[slot] // ps
+            assert not dead(logical, pos[slot])
+            if logical not in mapped[slot]:
+                if pool.num_free == 0:
+                    continue  # the real loop would preempt; skip here
+                pool.alloc(slot, logical)
+                mapped[slot].add(logical)
+            pos[slot] += 1
+        elif op == "lookahead":
+            # spec-round best-effort mapping past the frontier
+            k = choose("k", [1, 2, 3])
+            for p in range(pos[slot], min(pos[slot] + k, max_seq)):
+                logical = p // ps
+                if logical in mapped[slot] or pool.num_free == 0:
+                    continue
+                pool.alloc(slot, logical)
+                mapped[slot].add(logical)
+        elif op == "reclaim":
+            freed = tp.reclaim(slot, pos[slot])
+            expect = {l for l in mapped[slot] if dead(l, pos[slot])}
+            assert len(freed) == len(set(freed)) == len(expect)
+            mapped[slot] -= expect
+            # the frontier's own page never dies (its last position is
+            # >= pos, and window >= 1); earlier pages may — with a
+            # width-1 window even the last committed position is
+            # invisible to the next query
+            assert (pos[slot] // ps) not in expect
+            assert tp.reclaim(slot, pos[slot]) == []  # idempotent
+        elif op == "truncate":
+            # end of a spec round: accept j tokens, roll the rest back
+            j = choose("accepted", [0, 1, 2, 3])
+            new_pos = min(pos[slot] + j, max_seq)
+            freed = tp.truncate(slot, new_pos)
+            keep = pool.pages_needed(new_pos)
+            expect = {l for l in mapped[slot] if l >= keep}
+            assert len(freed) == len(set(freed)) == len(expect)
+            mapped[slot] -= expect
+            pos[slot] = new_pos
+            assert tp.truncate(slot, new_pos) == []  # idempotent
+        else:  # release: finish or preemption
+            freed = tp.release(slot)
+            assert len(freed) == len(mapped[slot])
+            mapped[slot] = set()
+            pos[slot] = 0
+        # shadow equivalence + conservation after EVERY op
+        for s in range(pool.num_slots):
+            for l in range(pool.max_pages_per_slot):
+                assert pool.has_page(s, l) == (l in mapped[s]), (s, l)
+        assert pool.num_free + pool.pages_in_use == pool.num_pages
+        pool.check()
+    for s in range(pool.num_slots):
+        tp.release(s)
+    assert pool.num_free == pool.num_pages
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_window_truncate_reclaim_seeded_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    page_size = int(rng.integers(1, 7))
+    max_pages = int(rng.integers(2, 7))
+    max_seq = page_size * max_pages
+    tp = TokenPages(num_pages=2 * max_pages + 2, page_size=page_size,
+                    num_slots=2, max_seq=max_seq,
+                    window=int(rng.integers(1, max_seq)))
+    assert tp.reclaimable
+    _run_window_spec_ops(
+        tp, lambda kind, opts: opts[int(rng.integers(len(opts)))], 60)
+
+
 @pytest.mark.parametrize("seed", range(8))
 def test_pool_invariants_seeded_fuzz(seed):
     rng = np.random.default_rng(seed)
@@ -254,6 +351,24 @@ if HAVE_HYPOTHESIS:
         n_ops = data.draw(st.integers(0, 60), label="n_ops")
         _run_random_ops(
             pool,
+            lambda kind, opts: data.draw(st.sampled_from(opts), label=kind),
+            n_ops)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_window_truncate_reclaim_under_random_ops(data):
+        """Hypothesis twin of the seeded window fuzz: truncate_slot
+        (spec rollback) interleaved with window-expired reclamation."""
+        page_size = data.draw(st.integers(1, 6), label="page_size")
+        max_pages = data.draw(st.integers(2, 6), label="max_pages")
+        max_seq = page_size * max_pages
+        window = data.draw(st.integers(1, max_seq - 1), label="window") \
+            if max_seq > 1 else 1
+        tp = TokenPages(num_pages=2 * max_pages + 2, page_size=page_size,
+                        num_slots=2, max_seq=max_seq, window=window)
+        n_ops = data.draw(st.integers(0, 40), label="n_ops")
+        _run_window_spec_ops(
+            tp,
             lambda kind, opts: data.draw(st.sampled_from(opts), label=kind),
             n_ops)
 

@@ -236,9 +236,32 @@ def _grid(errs_bytes):
 
 
 def test_solve_plan_budget_too_small():
-    cands = [_grid([(1.0, 100), (0.5, 200)])]
-    with pytest.raises(ValueError, match="below the cheapest"):
-        solve_plan(cands, 50)
+    """An infeasible budget raises with the minimum named — returning the
+    cheapest (over-budget) plan silently would violate the byte
+    contract the caller is sizing hardware against."""
+    cands = [_grid([(1.0, 100), (0.5, 200)]),
+             _grid([(2.0, 50), (1.0, 80)])]
+    with pytest.raises(ValueError,
+                       match="budget infeasible, minimum is 150 bytes"):
+        solve_plan(cands, 149)
+    # the start seed doesn't change feasibility: the floor is what counts
+    with pytest.raises(ValueError, match="budget infeasible"):
+        solve_plan(cands, 149, start=[1, 1])
+    # exactly at the floor is feasible
+    chosen = solve_plan(cands, 150)
+    assert sum(c.bytes for c in chosen) == 150
+
+
+def test_budget_infeasible_surfaces_through_serve_cli():
+    """serve.py --byte-budget turns the infeasibility ValueError into a
+    clean SystemExit carrying the minimum-bytes message, instead of a
+    traceback (or worse, serving an over-budget store)."""
+    from repro.launch.serve import _solve_budget_plan
+
+    cfg = reduced_config("mixtral-8x7b")
+    params, _ = build_model(cfg).init_split(jax.random.PRNGKey(0))
+    with pytest.raises(SystemExit, match="budget infeasible, minimum is"):
+        _solve_budget_plan(cfg, params, 1)
 
 
 def test_solve_plan_spends_budget_where_it_helps():

@@ -1,0 +1,224 @@
+"""Routed serving: ``Router`` over N replicas == one server, token-for-token.
+
+launch/router.py is the multi-host front door (DESIGN.md §14): a
+deterministic assignment policy partitions the trace across independent
+replica servers, and an opt-in prefill/decode disaggregated pair hands
+finished prefills to the decode server as a block-table row plus page
+copy. None of it may change greedy outputs, so the differentials here
+pin the routed union — and the disaggregated server, with forced
+mid-request preemption — against the slot-synchronous ``Server`` oracle
+across randomized schedules. The pure-python pieces (assignment
+determinism, constructor refusals, device splitting) are unit-tested
+alongside.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.launch.router import (
+    DisaggregatedServer,
+    Router,
+    assign_requests,
+    build_replicas,
+)
+from repro.launch.serve import ContinuousServer, Request, Server
+from repro.models import build_model, compress_model_params
+from repro.sharding import split_devices
+
+
+def _random_schedule(seed, vocab, n_lo=3, n_hi=6, max_new_hi=7):
+    """Same trace family as test_serve/test_engine: a few prompts of
+    length {4, 6, 8}, random budgets, permuted order, Poisson arrivals."""
+    r = np.random.default_rng(seed)
+    n = int(r.integers(n_lo, n_hi + 1))
+    prompts = [r.integers(0, vocab, size=(int(r.choice([4, 6, 8])),))
+               .astype(np.int32) for _ in range(n)]
+    max_new = [int(r.integers(1, max_new_hi)) for _ in range(n)]
+    order = r.permutation(n)
+    arrivals = np.sort(r.poisson(1.0, size=n)).tolist()
+    return prompts, max_new, order, arrivals
+
+
+def _dense_model():
+    cfg = reduced_config("granite-8b")
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _compressed_mixtral_model():
+    cfg = reduced_config("mixtral-8x7b")
+    cfg = dataclasses.replace(
+        cfg, resmoe=dataclasses.replace(cfg.resmoe, method="svd",
+                                        keep_ratio=0.5))
+    model = build_model(cfg)
+    params, _ = model.init_split(jax.random.PRNGKey(0))
+    cp, _ = compress_model_params(params, cfg)
+    return model, cp
+
+
+def _assert_routed_differential(model, params, seeds, *, num_replicas=2,
+                                apply_mode=None, disaggregate=False,
+                                preempt_steps=None, policy="least_loaded"):
+    """Serve each seeded schedule through the sync oracle and through a
+    Router over ``num_replicas`` independent replicas (arrival-shuffled)
+    and demand per-request token identity plus pristine pools/state on
+    every replica. Returns the router for stats assertions."""
+    cfg = model.cfg
+    sync = Server(model, params, num_slots=3, max_seq=48,
+                  apply_mode=apply_mode)
+    replicas = build_replicas(
+        model, params, num_replicas, disaggregate=disaggregate,
+        num_slots=2, max_seq=48, page_size=4, pool_pages=9,
+        apply_mode=apply_mode, preempt_steps=preempt_steps)
+    router = Router(replicas, policy=policy)
+    for seed in seeds:
+        prompts, max_new, order, arrivals = _random_schedule(
+            seed, cfg.vocab_size)
+        ra = [Request(prompt=p, max_new_tokens=m)
+              for p, m in zip(prompts, max_new)]
+        rb = [Request(prompt=p, max_new_tokens=m)
+              for p, m in zip(prompts, max_new)]
+        sync.serve(ra)
+        router.serve([rb[i] for i in order], arrival_steps=arrivals)
+        for i, (a, b) in enumerate(zip(ra, rb)):
+            assert a.output == b.output, (seed, i, a.output, b.output)
+        for rep in router.replicas:
+            if rep.pool is not None:
+                rep.pool.check()
+                assert rep.pool.pages_in_use == 0
+            rep.state.check()
+    return router
+
+
+# ---------------------------------------------------------------------------
+# assignment policies: pure, deterministic, balanced
+
+
+def test_assign_requests_round_robin_and_determinism():
+    reqs = [Request(prompt=np.zeros(4, np.int32), max_new_tokens=3)
+            for _ in range(7)]
+    assert assign_requests(reqs, 3, "round_robin") == [0, 1, 2, 0, 1, 2, 0]
+    a = assign_requests(reqs, 3, "least_loaded")
+    assert a == assign_requests(reqs, 3, "least_loaded")
+    # every replica gets work when requests outnumber replicas
+    assert set(a) == {0, 1, 2}
+
+
+def test_assign_requests_least_loaded_balances_cost():
+    # one heavy request then many light ones: the heavy replica should
+    # be skipped until the others catch up on estimated tokens
+    heavy = Request(prompt=np.zeros(8, np.int32), max_new_tokens=100)
+    light = [Request(prompt=np.zeros(4, np.int32), max_new_tokens=1)
+             for _ in range(4)]
+    a = assign_requests([heavy] + light, 2, "least_loaded")
+    assert a[0] == 0  # ties break to the lowest index
+    assert a[1:] == [1, 1, 1, 1]
+
+
+def test_assign_requests_validation():
+    reqs = [Request(prompt=np.zeros(4, np.int32), max_new_tokens=1)]
+    with pytest.raises(ValueError, match="at least one replica"):
+        assign_requests(reqs, 0)
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        assign_requests(reqs, 2, "fastest_finger")
+
+
+def test_router_constructor_and_serve_validation():
+    with pytest.raises(ValueError, match="at least one replica"):
+        Router([])
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        Router([object()], policy="nope")
+
+    class _Boom:
+        def serve(self, requests, arrival_steps=None):
+            raise RuntimeError("kaboom")
+
+    router = Router([_Boom()])
+    reqs = [Request(prompt=np.zeros(4, np.int32), max_new_tokens=1)]
+    with pytest.raises(ValueError, match="arrival_steps must match"):
+        router.serve(reqs, arrival_steps=[0, 1])
+    with pytest.raises(RuntimeError, match="replica 0 failed serving 1"):
+        router.serve(reqs)
+
+
+def test_build_replicas_validation():
+    with pytest.raises(ValueError, match="at least one replica"):
+        build_replicas(None, None, 0)
+    with pytest.raises(ValueError, match="incompatible"):
+        build_replicas(None, None, 2, disaggregate=True, overlapped=True)
+    with pytest.raises(ValueError, match="one entry per replica"):
+        build_replicas(None, None, 2, rules_list=[None])
+
+
+def test_split_devices_edges():
+    devs = list(range(8))
+    assert split_devices(devs, 2) == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    assert split_devices(devs, 3, group_size=2) == [[0, 1], [2, 3], [4, 5]]
+    with pytest.raises(ValueError):
+        split_devices(devs, 0)
+    with pytest.raises(ValueError):
+        split_devices(devs, 16)  # groups would be empty
+    with pytest.raises(ValueError):
+        split_devices(devs, 3, group_size=3)  # needs 9 devices
+
+
+# ---------------------------------------------------------------------------
+# routed differentials: token identity across replicas
+
+
+def test_router_differential_dense():
+    """6 randomized schedules over 2 replicas: the routed union is
+    per-request token-identical to one sync server, and every replica's
+    pool comes back pristine. Both policies covered."""
+    model, params = _dense_model()
+    r = _assert_routed_differential(model, params, range(3))
+    assert r.stats["routed_batches"] == 3
+    assert r.stats["routed_requests"] >= 9
+    agg = r.aggregate_stats()
+    assert agg["replicas"] == 2
+    assert agg["tokens"] > 0 and len(agg["per_replica"]) == 2
+    _assert_routed_differential(model, params, range(3, 6),
+                                policy="round_robin")
+
+
+def test_router_differential_forced_preemption():
+    """Routed replicas under forced mid-request eviction: the
+    preempt/recompute-restore path must stay invisible to outputs even
+    when it fires inside a routed sub-trace."""
+    model, params = _dense_model()
+    r = _assert_routed_differential(model, params, range(2),
+                                    preempt_steps=[2, 5])
+    total = sum(rep.stats["preemptions"] for rep in r.replicas)
+    assert total >= 1, "forced preemption never fired — schedule too small"
+
+
+def test_disaggregated_server_differential():
+    """Prefill/decode disaggregation alone (1 replica): every admission
+    arrives as a worker handoff, outputs stay token-identical, and the
+    handoff page accounting matches the prompts served."""
+    model, params = _dense_model()
+    r = _assert_routed_differential(model, params, range(2),
+                                    num_replicas=1, disaggregate=True)
+    rep = r.replicas[0]
+    assert isinstance(rep, DisaggregatedServer)
+    assert rep.stats["handoffs"] > 0
+    assert rep.stats["handoff_pages"] >= rep.stats["handoffs"]
+    # the worker ran one prefill per handoff (warmup counts are reset)
+    assert rep.prefiller.stats["prefills"] == rep.stats["handoffs"]
+
+
+def test_disaggregated_router_preemption_mixtral():
+    """The full topology on a compressed MoE: 2 disaggregated replicas
+    with forced preemption — resumes re-enter through the prefill worker
+    and must remain token-identical to the oracle."""
+    model, params = _compressed_mixtral_model()
+    r = _assert_routed_differential(model, params, range(2),
+                                    disaggregate=True,
+                                    apply_mode="restored",
+                                    preempt_steps=[2])
+    assert sum(rep.stats["preemptions"] for rep in r.replicas) >= 1
+    assert sum(rep.stats["handoffs"] for rep in r.replicas) > 0
